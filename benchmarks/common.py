@@ -1,0 +1,34 @@
+"""Benchmark harness utilities.
+
+CPU wall-clock numbers are meaningful only RELATIVELY (algorithm A vs B on
+the same host simulator); every figure also emits `derived` columns from
+the alpha-beta cost model for the paper's 100 Gb/s cluster and the TPU v5e
+target, which is what EXPERIMENTS.md quotes.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def timeit(fn, *args, warmup=2, iters=10):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def header():
+    print("name,us_per_call,derived")

@@ -1,0 +1,253 @@
+"""One benchmark per paper table/figure (see DESIGN.md section 6)."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import row, timeit
+from repro.core import CollectiveEngine, Communicator, Selector
+from repro.core.hw_spec import ACCL_CLUSTER, TPU_V5E
+from repro.core.topology import make_mesh
+from repro.core import algorithms as A
+
+
+def _mesh8():
+    return make_mesh((8,), ("x",))
+
+
+def _engine(backend="microcode"):
+    return CollectiveEngine(_mesh8(), backend=backend)
+
+
+def _sharded(fn, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+
+# -- Fig 7: send/recv throughput ---------------------------------------------
+
+def fig07_sendrecv():
+    mesh = _mesh8()
+    eng = CollectiveEngine(mesh)
+    comm = Communicator(axis="x", size=8)
+    for log2 in (10, 14, 18, 22, 26):
+        nbytes = 1 << log2
+        x = jnp.zeros((nbytes // 4,), jnp.float32)
+        g = _sharded(lambda v: eng.send_recv(v, "x"), mesh, P(None), P(None))
+        us = timeit(g, x)
+        # derived: modeled time on the paper cluster and on TPU ICI
+        t_accl = nbytes / ACCL_CLUSTER.ici_link_bw + ACCL_CLUSTER.ici_hop_latency
+        t_tpu = nbytes / TPU_V5E.ici_link_bw + TPU_V5E.ici_hop_latency
+        gbps_accl = nbytes * 8 / t_accl / 1e9
+        row(f"fig07/sendrecv/{nbytes>>10}KB", us,
+            f"accl_model={gbps_accl:.1f}Gbps tpu_model={nbytes/t_tpu/1e9:.1f}GBps")
+
+
+# -- Fig 8: invocation latency ------------------------------------------------
+
+def fig08_invocation():
+    mesh = _mesh8()
+    eng = CollectiveEngine(mesh)
+    nop = _sharded(lambda v: v + eng.nop(), mesh, P(None), P(None))
+    x = jnp.zeros((8,), jnp.int32)
+    us_host = timeit(nop, x)            # host dispatch of a cached program
+    row("fig08/invocation/host_cached", us_host,
+        "coyote-driver analogue: cached jit dispatch")
+
+    # F2F analogue: N nops inside one graph — per-op cost
+    def many(v):
+        for _ in range(100):
+            v = v + eng.nop()
+        return v
+    g = _sharded(many, mesh, P(None), P(None))
+    us_g = timeit(g, x) / 100
+    row("fig08/invocation/in_graph", us_g,
+        "F2F analogue: kernel-to-engine, no host roundtrip")
+
+    # XRT analogue: dispatch including retrace (uncached path)
+    import time as _t
+    def retrace():
+        f = jax.jit(lambda v: v + 1)
+        t0 = _t.perf_counter()
+        f(x).block_until_ready()
+        return (_t.perf_counter() - t0) * 1e6
+    row("fig08/invocation/host_retrace", retrace(),
+        "XRT analogue: heavyweight dispatch path")
+
+
+# -- Figs 10/11: collective latency ------------------------------------------
+
+def fig10_collectives(h2h: bool = False):
+    mesh = _mesh8()
+    tag = "fig11/h2h" if h2h else "fig10/f2f"
+    comm = Communicator(axis="x", size=8)
+    sel = Selector()
+    for coll in ("bcast", "reduce", "gather", "alltoall", "allreduce"):
+        for log2 in (12, 17, 22):
+            nbytes = 1 << log2
+            elems = nbytes // 4
+            per = elems // 8 * 8
+            for backend in ("microcode", "native"):
+                eng = CollectiveEngine(mesh, backend=backend)
+                def fn(v, e=eng, c=coll):
+                    y = getattr(e, c)(v, "x") if c != "alltoall" \
+                        else e.alltoall(v.reshape(8, -1)).reshape(-1)
+                    return y.reshape(-1)[:1]
+                if coll == "alltoall":
+                    def fn(v, e=eng):  # noqa: F811
+                        return e.alltoall(v.reshape(8, -1), "x").reshape(-1)[:1]
+                g = _sharded(fn, mesh, P(None), P(None))
+                host_np = np.zeros((per,), np.float32)
+                if h2h:  # include host->device staging, like the paper's H2H
+                    def call(arr=host_np, g=g):
+                        return g(jnp.asarray(arr))
+                    us = timeit(call)
+                else:
+                    x = jnp.zeros((per,), jnp.float32)
+                    us = timeit(g, x)
+                choice = sel.choose(coll if coll != "allreduce"
+                                    else "allreduce", nbytes, comm)
+                row(f"{tag}/{coll}/{nbytes>>10}KB/{backend}", us,
+                    f"selected={choice.algorithm}/{choice.protocol} "
+                    f"tpu_model={choice.predicted_s*1e6:.1f}us")
+
+
+# -- Fig 12: algorithm selection & scalability --------------------------------
+
+def fig12_scaling():
+    sel = Selector()
+    for nbytes, label in ((8 << 10, "8KB"), (128 << 10, "128KB")):
+        for n in (2, 4, 8, 16):
+            comm = Communicator(axis="x", size=n)
+            c = sel.choose("reduce", nbytes, comm)
+            preds = {}
+            for algo in ("ring", "all_to_one", "binomial_tree"):
+                try:
+                    from repro.core.engine import _gen_schedule
+                    sched = _gen_schedule("reduce", algo, comm)
+                    preds[algo] = sched.predict_time(
+                        nbytes, comm.hop_latency, comm.link_bw) * 1e6
+                except ValueError:
+                    pass
+            row(f"fig12/reduce/{label}/{n}ranks", preds[c.algorithm],
+                f"selected={c.algorithm} " +
+                " ".join(f"{k}={v:.1f}us" for k, v in preds.items()))
+
+
+# -- Fig 13: engine vs baseline (ACCL+ vs ACCL vs MPI analogue) ---------------
+
+def fig13_backend_compare():
+    mesh = _mesh8()
+    for log2 in (12, 17, 22):
+        per = (1 << log2) // 4 // 8 * 8
+        x = jnp.zeros((per,), jnp.float32)
+        results = {}
+        for name, eng, algo in (
+                ("cclo_microcode", CollectiveEngine(mesh), "ring"),
+                ("uc_serialized", CollectiveEngine(mesh), "one_to_all_like"),
+                ("sw_mpi_native", CollectiveEngine(mesh, backend="native"),
+                 "auto")):
+            if algo == "one_to_all_like":
+                # ACCL-analogue: control-plane-serialized reduce (relay ring,
+                # unchunked, n-1 full-buffer hops)
+                g = _sharded(lambda v, e=eng: e.reduce(
+                    v, "x", algorithm="ring").reshape(-1)[:1],
+                    mesh, P(None), P(None))
+            else:
+                g = _sharded(lambda v, e=eng, a=algo: e.allreduce(
+                    v, "x", algorithm=a).reshape(-1)[:1],
+                    mesh, P(None), P(None))
+            results[name] = timeit(g, x)
+        base = results["sw_mpi_native"]
+        row(f"fig13/allreduce/{1<<(log2-10)}KB",
+            results["cclo_microcode"],
+            f"vs_native={base:.1f}us vs_uc_serial={results['uc_serialized']:.1f}us")
+
+
+# -- Fig 16: distributed vector-matrix multiply -------------------------------
+
+def fig16_vecmat():
+    mesh = _mesh8()
+    eng = CollectiveEngine(mesh)
+    rng = np.random.default_rng(0)
+    for size in (1024, 4096):
+        w = jnp.asarray(rng.normal(size=(size, size)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(size,)), jnp.float32)
+        single = jax.jit(lambda a, b: a @ b)
+        us_single = timeit(single, x, w)
+
+        def dist(xs, ws):
+            part = xs @ ws                      # (size,) partial
+            return eng.reduce(part, "x", algorithm="binomial_tree")
+        g = _sharded(dist, mesh, (P("x"), P("x", None)), P(None))
+        us_dist = timeit(g, x, w)
+        # derived: the paper-cluster model — compute splits 8x, reduction
+        # costs one binomial tree of a (size,) fp32 vector. (Virtual CPU
+        # devices share one core, so the measured column cannot show real
+        # speedup; the model column is what EXPERIMENTS.md quotes.)
+        cpu_flops = 50e9
+        t_single = 2 * size * size / cpu_flops
+        sched = A.binomial_tree_reduce(Communicator(axis="x", size=8))
+        t_red = sched.predict_time(size * 4, ACCL_CLUSTER.ici_hop_latency,
+                                   ACCL_CLUSTER.ici_link_bw)
+        model_speedup = t_single / (t_single / 8 + t_red)
+        row(f"fig16/vecmat/{size}", us_dist,
+            f"single={us_single:.1f}us measured={us_single/us_dist:.2f}x "
+            f"model_8rank={model_speedup:.2f}x")
+
+
+# -- Fig 17: DLRM latency / throughput ----------------------------------------
+
+def fig17_dlrm():
+    from repro.configs.dlrm import reduced
+    from repro.configs.base import ParallelConfig
+    from repro.models import dlrm as dlrm_mod
+    from repro.models.common import Builder
+    from repro.parallel.ops import ParCtx
+    cfg = reduced()
+    mesh = make_mesh((1, 1, 8), ("pod", "data", "model"))
+    eng = CollectiveEngine(mesh)
+    ctx = ParCtx(engine=eng, pcfg=ParallelConfig(), mesh=mesh)
+    b = Builder("init", key=jax.random.PRNGKey(0), dtype=jnp.float32)
+    params = dlrm_mod.dlrm_params(b, cfg, 8)
+    specs = dlrm_mod.dlrm_specs(cfg, 8)
+    rng = np.random.default_rng(0)
+    for batch in (1, 64):
+        idx = jnp.asarray(rng.integers(0, cfg.rows_per_table,
+                                       (batch, cfg.n_tables)), jnp.int32)
+        g = _sharded(lambda p, i: dlrm_mod.dlrm_forward(p, i, ctx),
+                     mesh, (specs, P(None, None)), P(None, None))
+        us = timeit(g, params, idx)
+        ref = jax.jit(lambda p, i: dlrm_mod.dlrm_reference(p, i))
+        us_ref = timeit(ref, params, idx)
+        row(f"fig17/dlrm/b{batch}", us,
+            f"single_node={us_ref:.1f}us tput={batch/us*1e6:.0f}qps")
+
+
+# -- Table 3: resource utilization analogue -----------------------------------
+
+def table3_resources():
+    from repro.configs import get_config
+    from repro.kernels import matmul as mm
+    from repro.kernels import fused_reduce as fr
+    hw = TPU_V5E
+    # engine component budgets (VMEM working sets of the data plane)
+    mm_ws = (mm.DEFAULT_BM * mm.DEFAULT_BK * 2
+             + mm.DEFAULT_BK * mm.DEFAULT_BN * 2
+             + mm.DEFAULT_BM * mm.DEFAULT_BN * 4)
+    fr_ws = 2 * fr.DEFAULT_BLOCK_ROWS * fr.LANES * 4
+    row("table3/kernel_vmem/matmul_tile", 0,
+        f"{mm_ws/2**20:.1f}MiB of {hw.vmem_bytes/2**20:.0f}MiB VMEM "
+        f"({100*mm_ws/hw.vmem_bytes:.1f}%)")
+    row("table3/kernel_vmem/fused_reduce", 0,
+        f"{fr_ws/2**20:.2f}MiB ({100*fr_ws/hw.vmem_bytes:.2f}%)")
+    for arch in ("qwen3-14b", "mixtral-8x7b", "internvl2-26b"):
+        cfg = get_config(arch)
+        n = cfg.n_params()
+        per_dev = n * 2 / 256       # bf16 over 256 chips
+        opt = n * 12 / 256          # fp32 master+m+v
+        row(f"table3/hbm/{arch}", 0,
+            f"params={per_dev/2**30:.2f}GiB opt={opt/2**30:.2f}GiB "
+            f"of {hw.hbm_bytes/2**30:.0f}GiB "
+            f"({100*(per_dev+opt)/hw.hbm_bytes:.0f}%)")

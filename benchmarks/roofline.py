@@ -1,0 +1,57 @@
+"""Aggregate results/dryrun JSONs into the EXPERIMENTS.md roofline table."""
+import glob
+import json
+import os
+
+
+def load_results(results_dir="results/dryrun", variant="base", mesh="single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(
+            results_dir, f"*_{mesh}_{variant}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows, md=True):
+    out = []
+    hdr = ("arch", "shape", "status", "fits", "t_comp(ms)", "t_memfloor(ms)",
+           "t_coll(ms)", "dominant", "MFU", "model/HLO")
+    out.append(" | ".join(hdr) if md else ",".join(hdr))
+    if md:
+        out.append(" | ".join(["---"] * len(hdr)))
+    for r in rows:
+        if r.get("status") != "OK":
+            out.append(" | ".join([r.get("arch", "?"), r.get("shape", "?"),
+                                   r.get("status", "?")[:40]] + [""] * 7))
+            continue
+        t = r["roofline"]
+        floor = t.get("t_memory_floor_s", t["t_memory_s"])
+        terms = {"compute": t["t_compute_s"], "memory": floor,
+                 "collective": t["t_collective_s"]}
+        dominant = max(terms, key=terms.get)
+        step = max(terms.values())
+        peak = 197e12
+        mfu = (r["model_flops"] / (r["chips"] * peak * step)) if step else 0
+        vals = [
+            r["arch"], r["shape"], "OK", str(r["fits_hbm"]),
+            f"{t['t_compute_s']*1e3:.2f}", f"{floor*1e3:.2f}",
+            f"{t['t_collective_s']*1e3:.2f}", dominant,
+            f"{mfu:.3f}",
+            f"{r.get('model_flops_ratio') or 0:.2f}",
+        ]
+        out.append(" | ".join(vals) if md else ",".join(vals))
+    return "\n".join(out)
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load_results(mesh=mesh)
+        if not rows:
+            continue
+        print(f"\n== roofline table ({mesh}-pod) ==")
+        print(fmt_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Wall-clock columns are host-CPU
+relative numbers; `derived` carries the alpha-beta model for the paper's
+cluster and the TPU target (quoted in EXPERIMENTS.md).
+"""
+from benchmarks.common import header
+
+
+def main() -> None:
+    from benchmarks import figures
+    header()
+    figures.fig07_sendrecv()
+    figures.fig08_invocation()
+    figures.fig10_collectives(h2h=False)
+    figures.fig10_collectives(h2h=True)
+    figures.fig12_scaling()
+    figures.fig13_backend_compare()
+    figures.fig16_vecmat()
+    figures.fig17_dlrm()
+    figures.table3_resources()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Splice generated tables into EXPERIMENTS.md at the placeholder markers."""
+import json
+import glob
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+from benchmarks.roofline import load_results, fmt_table  # noqa: E402
+
+PEAK = 197e12
+
+
+def perf_row(path):
+    with open(path) as f:
+        r = json.load(f)
+    if r.get("status") != "OK":
+        return None
+    t = r["roofline"]
+    floor = t["t_memory_floor_s"]
+    step = max(t["t_compute_s"], floor, t["t_collective_s"])
+    mfu = r["model_flops"] / (r["chips"] * PEAK * step) if step else 0
+    return {
+        "variant": r.get("variant", "?"),
+        "comp": t["t_compute_s"] * 1e3,
+        "mem": floor * 1e3,
+        "coll": t["t_collective_s"] * 1e3,
+        "mfu": mfu,
+        "fits": r["fits_hbm"],
+        "peak": r["memory"]["peak_bytes_est"] / 1e9,
+    }
+
+
+def variant_table(arch, shape, variants, mesh="single"):
+    out = ["variant | t_comp(ms) | t_mem(ms) | t_coll(ms) | MFU | fits | peak(GB)",
+           "--- | --- | --- | --- | --- | --- | ---"]
+    for v in variants:
+        p = f"results/dryrun/{arch}_{shape}_{mesh}_{v}.json"
+        if not os.path.exists(p):
+            continue
+        r = perf_row(p)
+        if r is None:
+            out.append(f"{v} | FAILED | | | | |")
+            continue
+        out.append(f"{v} | {r['comp']:.0f} | {r['mem']:.1f} | "
+                   f"{r['coll']:.0f} | **{r['mfu']:.3f}** | "
+                   f"{'yes' if r['fits'] else 'no'} | {r['peak']:.1f}")
+    return "\n".join(out)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+
+    # dry-run + roofline tables
+    single = fmt_table(load_results(mesh="single"))
+    multi = fmt_table(load_results(mesh="multi"))
+    n_ok = {m: sum(1 for r in load_results(mesh=m)
+                   if r.get("status") == "OK") for m in ("single", "multi")}
+    n_skip = {m: sum(1 for r in load_results(mesh=m)
+                     if str(r.get("status", "")).startswith("SKIP"))
+              for m in ("single", "multi")}
+    dry = (f"Single-pod 16x16: **{n_ok['single']} OK + {n_skip['single']} "
+           f"SKIP(full-attn) of 40 cells**; multi-pod 2x16x16: "
+           f"**{n_ok['multi']} OK + {n_skip['multi']} SKIP of 40** — zero "
+           "failures.\n\n### Single-pod (16x16 = 256 chips)\n\n" + single
+           + "\n\n### Multi-pod (2x16x16 = 512 chips)\n\n" + multi)
+    doc = doc.replace("<!-- DRYRUN-TABLES -->", dry)
+    doc = doc.replace("<!-- ROOFLINE-TABLES -->",
+                      "(tables above; per-cell JSONs in results/dryrun/)")
+
+    perf = []
+    perf.append("#### Cell 1: qwen3-0.6b x train_4k (worst roofline fraction)\n")
+    perf.append(variant_table("qwen3-0.6b", "train_4k",
+                              ["base", "native", "sp_dots", "spf",
+                               "spf_tp2", "tp1", "spf_tp2_mb2",
+                               "spf_tp2_mb2_names"]))
+    perf.append("\n#### Cell 2: qwen3-moe-30b-a3b x train_4k (most collective-bound)\n")
+    perf.append(variant_table("qwen3-moe-30b-a3b", "train_4k",
+                              ["base", "native", "sp", "sp_cap1", "spf",
+                               "spf_tp8", "spf_tp8_mb8",
+                               "spf_tp8_mb8_names"]))
+    perf.append("\n#### Cell 3: internvl2-26b x train_4k (most paper-representative)\n")
+    perf.append(variant_table("internvl2-26b", "train_4k",
+                              ["base", "native", "sp", "sp_cm", "spf",
+                               "spf_tp8", "spf_tp4", "spf_tp8_names",
+                               "spf_tp8_mb8", "spf_tp8_mb8_names"]))
+    perf.append("\n#### Transfer: the recipe on every other train cell\n")
+    for arch, vs in (("mamba2-1.3b", ["spf_tp2"]),
+                     ("hymba-1.5b", ["spf_tp4"]),
+                     ("smollm-360m", ["spf_tp4"]),
+                     ("whisper-medium", ["spf_tp4"]),
+                     ("qwen3-14b", ["spf_tp8", "spf_tp8_mb8_names"]),
+                     ("stablelm-12b", ["spf_tp8", "spf_tp8_mb8_names"]),
+                     ("mixtral-8x7b", ["spf_tp8", "spf_tp8_names",
+                                       "spf_tp8_mb8_names"])):
+        perf.append(f"**{arch} train_4k**\n")
+        perf.append(variant_table(arch, "train_4k", ["base"] + vs))
+        perf.append("")
+    perf.append("\n#### Transfer: TP-retile on collective-bound prefill cells (tp=8, data=32=batch)\n")
+    for arch in ("smollm-360m", "qwen3-0.6b", "mamba2-1.3b", "hymba-1.5b",
+                 "whisper-medium"):
+        perf.append(f"**{arch} prefill_32k**\n")
+        perf.append(variant_table(arch, "prefill_32k", ["base", "tp8"]))
+        perf.append("")
+    perf.append("\n#### Paper Table 2 DLRM at full scale (100 tables x 4M rows x 32 = 51 GB)\n")
+    perf.append(variant_table("dlrm", "serve_b1024", ["base"]))
+    perf.append("")
+    perf.append(variant_table("dlrm", "serve_b1024", ["base"], mesh="multi"))
+    perf.append("(embedding tables shard to 3.2 GB/chip over the model axis — "
+                "the paper's single-FPGA-HBM-capacity argument, realized on "
+                "the production mesh; the serve step is memory/gather-bound "
+                "as the paper observes for embedding-dominated inference.)")
+    perf.append("\n#### Decode memory (int8 KV cache, beyond-paper)\n")
+    for arch in ("internvl2-26b", "qwen3-14b", "mixtral-8x7b"):
+        perf.append(f"**{arch} decode_32k**\n")
+        perf.append(variant_table(arch, "decode_32k", ["base", "kv8"]))
+        perf.append("")
+    perf.append("**hymba-1.5b long_500k**\n")
+    perf.append(variant_table("hymba-1.5b", "long_500k", ["base", "kv8"]))
+    perf.append("\n#### Multi-pod gradient compression (DCN bytes)\n")
+    perf.append(variant_table("internvl2-26b", "train_4k",
+                              ["base", "sp", "sp_int8"], mesh="multi"))
+    perf.append("")
+    perf.append(variant_table("qwen3-moe-30b-a3b", "train_4k",
+                              ["base", "sp", "sp_int8"], mesh="multi"))
+    doc = doc.replace("<!-- PERF-TABLES -->", "\n".join(perf))
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("rendered EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

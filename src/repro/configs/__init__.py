@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ArchConfig, ParallelConfig, ShapeConfig, SHAPES, ARCH_IDS,
+    ASSIGNED_ARCHS, get_config, reduced_config,
+)
+
+__all__ = [
+    "ArchConfig", "ParallelConfig", "ShapeConfig", "SHAPES", "ARCH_IDS",
+    "ASSIGNED_ARCHS", "get_config", "reduced_config",
+]

@@ -1,0 +1,20 @@
+"""repro.core — the ACCL+ collective engine, TPU/JAX-native.
+
+Public API:
+    CollectiveEngine   the CCLO: MPI-like + streaming collectives
+    Selector           runtime-tunable algorithm/protocol selection
+    Communicator       rank group over a mesh axis
+    Schedule/Step/Sel  microcode IR
+"""
+from repro.core.engine import CollectiveEngine, interpret_schedule
+from repro.core.selector import Selector, Choice
+from repro.core.topology import Communicator, axis_comm, make_mesh
+from repro.core.schedule import Schedule, Step, Sel
+from repro.core.hw_spec import HwSpec, TPU_V5E, ACCL_CLUSTER
+from repro.core import algorithms, plugins, simulator
+
+__all__ = [
+    "CollectiveEngine", "interpret_schedule", "Selector", "Choice",
+    "Communicator", "axis_comm", "make_mesh", "Schedule", "Step", "Sel",
+    "HwSpec", "TPU_V5E", "ACCL_CLUSTER", "algorithms", "plugins", "simulator",
+]

@@ -1,0 +1,685 @@
+"""CollectiveEngine — the CCLO: executes microcode schedules on a TPU mesh.
+
+Mirrors the ACCL+ hardware split (§4.4):
+
+  control plane  = Python at trace time: the selector picks an algorithm,
+                   the generator emits a Schedule (microcode), this module
+                   interprets it — the uC + DMP.
+  data plane     = the lowered XLA program: `collective-permute` ops (Tx/Rx
+                   systems), dynamic slices (RxBuf manager placement),
+                   combine ops / codecs (streaming plugins).
+
+All MPI-like methods are called *inside* a `shard_map` region (the engine's
+H2H role inside train/serve steps) or via `run()` which wraps one for
+standalone use (the F2F role). `backend='native'` lowers to XLA's built-in
+collectives instead — the "software MPI" baseline of the paper's figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import plugins
+from repro.core.algorithms import GENERATORS
+from repro.core.schedule import (
+    SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
+)
+from repro.core.selector import Selector
+from repro.core.topology import Communicator, axis_comm
+from repro.core.hw_spec import HwSpec, TPU_V5E
+
+
+# --------------------------------------------------------------------------
+# Schedule interpreter (the DMP)
+# --------------------------------------------------------------------------
+
+def _select(buf, chunks: int, sel: Sel, rank, s_idx: int):
+    csize = buf.shape[0] // chunks
+    if sel.kind == SEL_ALL:
+        return buf
+    if sel.kind == SEL_CHUNK:
+        idx = sel.fn(rank, s_idx)
+        return lax.dynamic_slice_in_dim(buf, idx * csize, csize, 0)
+    if sel.kind == SEL_RANGE:
+        off, length = sel.fn(rank, s_idx)
+        return lax.dynamic_slice_in_dim(buf, off * csize, int(length) * csize, 0)
+    if sel.kind == SEL_MASK:
+        idxs = sel.fn(rank, s_idx)
+        return jnp.concatenate(
+            [buf[j * csize:(j + 1) * csize] for j in idxs], axis=0)
+    raise ValueError(sel.kind)
+
+
+def _place(buf, chunks: int, sel: Sel, rank, s_idx: int, incoming, op: str,
+           is_dst, use_pallas: bool):
+    csize = buf.shape[0] // chunks
+    comb = functools.partial(plugins.combine, op, use_pallas=use_pallas)
+    if sel.kind == SEL_ALL:
+        new = comb(buf, incoming.astype(buf.dtype))
+        return jnp.where(is_dst, new, buf) if is_dst is not None else new
+    if sel.kind in (SEL_CHUNK, SEL_RANGE):
+        if sel.kind == SEL_CHUNK:
+            off, length = sel.fn(rank, s_idx), 1
+        else:
+            off, length = sel.fn(rank, s_idx)
+        view = lax.dynamic_slice_in_dim(buf, off * csize, int(length) * csize, 0)
+        new = comb(view, incoming.astype(buf.dtype))
+        if is_dst is not None:
+            new = jnp.where(is_dst, new, view)
+        return lax.dynamic_update_slice_in_dim(buf, new, off * csize, 0)
+    if sel.kind == SEL_MASK:
+        idxs = sel.fn(rank, s_idx)
+        for k, j in enumerate(idxs):
+            view = buf[j * csize:(j + 1) * csize]
+            new = comb(view, incoming[k * csize:(k + 1) * csize].astype(buf.dtype))
+            if is_dst is not None:
+                new = jnp.where(is_dst, new, view)
+            buf = buf.at[j * csize:(j + 1) * csize].set(new)
+        return buf
+    raise ValueError(sel.kind)
+
+
+def interpret_schedule(schedule: Schedule, buf, axis: str, *,
+                       compression: Optional[str] = None,
+                       use_pallas: bool = False):
+    """Execute `schedule` on the local shard `buf` inside shard_map.
+
+    `buf` leading dim must be divisible by schedule.chunks. Returns the
+    final buffer (meaning depends on schedule.result).
+    """
+    n = schedule.nranks
+    rank = lax.axis_index(axis)
+    codec = plugins.get_codec(compression) if compression else None
+    csize = buf.shape[0] // schedule.chunks
+
+    if schedule.pre_rotate == "bruck":
+        grp = buf.reshape((schedule.chunks, csize) + buf.shape[1:])
+        grp = jnp.roll(grp, -rank, axis=0)
+        buf = grp.reshape(buf.shape)
+
+    x0 = buf
+    last_recv = buf  # relay='received': step 0 forwards the original input
+
+    for s_idx, step in enumerate(schedule.steps):
+        src_store = {"buffer": buf, "original": x0,
+                     "received": last_recv}[schedule.relay]
+        payload = _select(src_store, schedule.chunks, step.send_sel, rank, s_idx)
+
+        if codec is not None:
+            wire = codec.compress(payload, use_pallas=use_pallas)
+            wire = jax.tree.map(
+                lambda leaf: lax.ppermute(leaf, axis, step.perm), wire)
+            incoming = codec.decompress(wire, payload.shape, payload.dtype,
+                                        use_pallas=use_pallas)
+        else:
+            incoming = lax.ppermute(payload, axis, step.perm)
+
+        is_dst = None
+        if step.mask_recv:
+            dsts = jnp.asarray([d for (_, d) in step.perm])
+            is_dst = jnp.any(rank == dsts)
+        buf = _place(buf, schedule.chunks, step.recv_sel, rank, s_idx,
+                     incoming, step.op, is_dst, use_pallas)
+        if schedule.relay == "received":
+            last_recv = incoming
+
+    if schedule.post_rotate == "bruck":
+        grp = buf.reshape((schedule.chunks, csize) + buf.shape[1:])
+        grp = jnp.roll(grp[::-1], rank + 1, axis=0)
+        buf = grp.reshape(buf.shape)
+    return buf
+
+
+# --------------------------------------------------------------------------
+# Looped ring lowerings (the memory-safe hot path)
+#
+# Unrolling a 16-rank ring produces 15 full-buffer dynamic-update-slice
+# chains per collective; XLA's buffer assignment cannot always alias them
+# and the arena explodes. Rolled lax.scan bodies keep ONE live buffer
+# (loop-carried, updated in place) and are reverse-differentiable — the VJP
+# of a scanned ring is another scanned ring.
+# --------------------------------------------------------------------------
+
+def _maybe_codec(compression):
+    return plugins.get_codec(compression) if compression else None
+
+
+def _ring_send(payload, axis, comm, codec, use_pallas, shape_dtype):
+    if codec is None:
+        return lax.ppermute(payload, axis, comm.ring_perm(1))
+    wire = codec.compress(payload, use_pallas=use_pallas)
+    wire = jax.tree.map(lambda l: lax.ppermute(l, axis, comm.ring_perm(1)),
+                        wire)
+    return codec.decompress(wire, payload.shape, shape_dtype,
+                            use_pallas=use_pallas)
+
+
+def ring_reduce_scatter_loop(x2d, axis, comm: Communicator, op="add",
+                             compression=None, use_pallas=False):
+    """x2d: (n, csize); returns rank's fully-reduced row (csize,).
+
+    Canonical chunk ownership (rank r ends with row r), one scan."""
+    n = comm.size
+    rank = lax.axis_index(axis)
+    codec = _maybe_codec(compression)
+
+    def body(buf, s):
+        send_idx = (rank - s - 1) % n
+        recv_idx = (rank - s - 2) % n
+        payload = buf[send_idx]
+        incoming = _ring_send(payload, axis, comm, codec, use_pallas,
+                              buf.dtype)
+        new_val = plugins.combine(op, buf[recv_idx],
+                                  incoming.astype(buf.dtype),
+                                  use_pallas=use_pallas)
+        buf = lax.dynamic_update_index_in_dim(buf, new_val, recv_idx, 0)
+        return buf, None
+
+    buf, _ = lax.scan(body, x2d, jnp.arange(n - 1))
+    return buf[rank]
+
+
+def ring_allgather_loop(shard, axis, comm: Communicator):
+    """shard: (csize, ...); returns (n, csize, ...) rows in rank order."""
+    n = comm.size
+    rank = lax.axis_index(axis)
+    buf = jnp.zeros((n,) + shard.shape, shard.dtype)
+    buf = lax.dynamic_update_index_in_dim(buf, shard, rank, 0)
+
+    def body(buf, s):
+        send_idx = (rank - s) % n
+        recv_idx = (rank - s - 1) % n
+        incoming = lax.ppermute(buf[send_idx], axis, comm.ring_perm(1))
+        buf = lax.dynamic_update_index_in_dim(buf, incoming, recv_idx, 0)
+        return buf, None
+
+    buf, _ = lax.scan(body, buf, jnp.arange(n - 1))
+    return buf
+
+
+def ring_allreduce_loop(x2d, axis, comm: Communicator, op="add",
+                        compression=None, use_pallas=False):
+    """x2d: (n, csize) -> (n, csize) fully reduced (RS loop + AG loop)."""
+    shard = ring_reduce_scatter_loop(x2d, axis, comm, op, compression,
+                                     use_pallas)
+    return ring_allgather_loop(shard, axis, comm)
+
+
+def bidi_ring_allreduce_loop(x2d, axis, comm: Communicator, op="add",
+                             compression=None, use_pallas=False):
+    """x2d: (2n, csize): rows [0,n) ride the +1 ring, [n,2n) the -1 ring.
+
+    Both directions advance in the same scan iteration — two independent
+    ppermutes per step use both ICI directions concurrently."""
+    n = comm.size
+    rank = lax.axis_index(axis)
+    codec = _maybe_codec(compression)
+
+    def rs_body(buf, s):
+        cw_send, cw_recv = (rank - s - 1) % n, (rank - s - 2) % n
+        ccw_send, ccw_recv = n + (rank + s + 1) % n, n + (rank + s + 2) % n
+        pc = buf[cw_send]
+        pw = buf[ccw_send]
+        if codec is None:
+            inc_c = lax.ppermute(pc, axis, comm.ring_perm(1))
+            inc_w = lax.ppermute(pw, axis, comm.ring_perm(-1))
+        else:
+            wc = codec.compress(pc, use_pallas=use_pallas)
+            ww = codec.compress(pw, use_pallas=use_pallas)
+            wc = jax.tree.map(
+                lambda l: lax.ppermute(l, axis, comm.ring_perm(1)), wc)
+            ww = jax.tree.map(
+                lambda l: lax.ppermute(l, axis, comm.ring_perm(-1)), ww)
+            inc_c = codec.decompress(wc, pc.shape, buf.dtype,
+                                     use_pallas=use_pallas)
+            inc_w = codec.decompress(ww, pw.shape, buf.dtype,
+                                     use_pallas=use_pallas)
+        buf = lax.dynamic_update_index_in_dim(
+            buf, plugins.combine(op, buf[cw_recv], inc_c.astype(buf.dtype)),
+            cw_recv, 0)
+        buf = lax.dynamic_update_index_in_dim(
+            buf, plugins.combine(op, buf[ccw_recv], inc_w.astype(buf.dtype)),
+            ccw_recv, 0)
+        return buf, None
+
+    def ag_body(buf, s):
+        cw_send, cw_recv = (rank - s) % n, (rank - s - 1) % n
+        ccw_send, ccw_recv = n + (rank + s) % n, n + (rank + s + 1) % n
+        inc_c = lax.ppermute(buf[cw_send], axis, comm.ring_perm(1))
+        inc_w = lax.ppermute(buf[ccw_send], axis, comm.ring_perm(-1))
+        buf = lax.dynamic_update_index_in_dim(buf, inc_c, cw_recv, 0)
+        buf = lax.dynamic_update_index_in_dim(buf, inc_w, ccw_recv, 0)
+        return buf, None
+
+    buf, _ = lax.scan(rs_body, x2d, jnp.arange(n - 1))
+    buf, _ = lax.scan(ag_body, buf, jnp.arange(n - 1))
+    return buf
+
+
+def linear_alltoall_collect(x2d, axis, comm: Communicator):
+    """x2d: (n, csize): row j -> rank j. No update-slice chains: receives
+    stack into (n-1, csize) and one gather reorders them."""
+    n = comm.size
+    rank = lax.axis_index(axis)
+    received = []
+    for s in range(1, n):
+        payload = x2d[(rank + s) % n]
+        received.append(lax.ppermute(payload, axis, comm.ring_perm(s)))
+    stacked = jnp.stack([x2d[rank]] + received)   # slot s = from rank r-s
+    src_slot = (rank - jnp.arange(n)) % n         # out[j] = from rank j
+    return jnp.take(stacked, src_slot, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Engine
+# --------------------------------------------------------------------------
+
+def _flatten_pad(x, mult: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % mult
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, x.shape, x.size
+
+
+def _gen_schedule(collective: str, algorithm: str, comm: Communicator,
+                  root: int = 0, op: str = "add") -> Schedule:
+    gen = GENERATORS[(collective, algorithm)]
+    params = inspect.signature(gen).parameters
+    kw = {}
+    if "root" in params:
+        kw["root"] = root
+    if "op" in params:
+        kw["op"] = op
+    return gen(comm, **kw)
+
+
+@dataclasses.dataclass
+class CollectiveEngine:
+    """ACCL+ CCLO analogue over a jax mesh.
+
+    backend: 'microcode' (our schedules — the CCLO) or 'native' (XLA
+    built-ins — the software-MPI baseline role).
+    """
+
+    mesh: jax.sharding.Mesh
+    backend: str = "microcode"
+    hw: HwSpec = TPU_V5E
+    selector: Selector = dataclasses.field(default_factory=Selector)
+    use_pallas: bool = False
+    # trace-time log of issued collectives (for tests / EXPERIMENTS tables)
+    trace_log: list = dataclasses.field(default_factory=list)
+
+    # -- infrastructure ------------------------------------------------------
+    def comm(self, axis: str) -> Communicator:
+        return axis_comm(self.mesh, axis, self.hw)
+
+    def _resolve(self, collective: str, x, axis: str, algorithm: str,
+                 root: int = 0, op: str = "add") -> Schedule:
+        comm = self.comm(axis)
+        if algorithm in (None, "auto"):
+            choice = self.selector.choose(
+                collective, x.size * x.dtype.itemsize, comm)
+            sched = choice.schedule
+            # regenerate with root/op if the auto pick ignored them
+            sched = _gen_schedule(collective, choice.algorithm, comm, root, op)
+            algorithm = choice.algorithm
+        else:
+            sched = _gen_schedule(collective, algorithm, comm, root, op)
+        self.trace_log.append((collective, algorithm, axis,
+                               int(x.size * x.dtype.itemsize)))
+        return sched
+
+    def run(self, fn, in_specs, out_specs):
+        """shard_map wrapper for standalone (F2F-style) engine programs."""
+        return jax.jit(shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False))
+
+    # -- MPI-like API (paper Listing 1) --------------------------------------
+    def allreduce(self, x, axis: str, op: str = "add",
+                  algorithm: str = "auto",
+                  compression: Optional[str] = None):
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x
+        if self.backend == "native" and algorithm in (None, "auto"):
+            if op == "add":
+                return lax.psum(x, axis)
+            if op == "max":
+                return lax.pmax(x, axis)
+            if op == "min":
+                return lax.pmin(x, axis)
+        sched = self._resolve("allreduce", x, axis, algorithm, op=op)
+        comm = self.comm(axis)
+        if sched.name in ("ring", "bidi_ring"):
+            # memory-safe rolled-loop lowering
+            chunks = n if sched.name == "ring" else 2 * n
+            flat, shape, size = _flatten_pad(x, chunks)
+            x2d = flat.reshape(chunks, -1)
+            fn = ring_allreduce_loop if sched.name == "ring" \
+                else bidi_ring_allreduce_loop
+            out = fn(x2d, axis, comm, op=op, compression=compression,
+                     use_pallas=self.use_pallas)
+            return out.reshape(-1)[:size].reshape(shape)
+        flat, shape, size = _flatten_pad(x, sched.chunks)
+        out = interpret_schedule(sched, flat, axis, compression=compression,
+                                 use_pallas=self.use_pallas)
+        return out[:size].reshape(shape)
+
+    def reduce_scatter(self, x, axis: str, op: str = "add",
+                       algorithm: str = "auto",
+                       compression: Optional[str] = None):
+        """Tiled semantics on the flattened array: rank r gets slice r of
+        the reduction. Input size must be divisible by the rank count."""
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x
+        if x.size % n:
+            raise ValueError(f"reduce_scatter size {x.size} % {n} != 0")
+        if self.backend == "native" and algorithm in (None, "auto"):
+            return lax.psum_scatter(x.reshape(n, -1), axis,
+                                    scatter_dimension=0,
+                                    tiled=False).reshape(-1)
+        sched = self._resolve("reduce_scatter", x, axis, algorithm, op=op)
+        if sched.name == "ring":
+            return ring_reduce_scatter_loop(
+                x.reshape(n, -1), axis, self.comm(axis), op=op,
+                compression=compression,
+                use_pallas=self.use_pallas).reshape(-1)
+        flat = x.reshape(-1)
+        out = interpret_schedule(sched, flat, axis, compression=compression,
+                                 use_pallas=self.use_pallas)
+        rank = lax.axis_index(axis)
+        csize = flat.shape[0] // n
+        own = sched.owned_chunk(rank)
+        return lax.dynamic_slice_in_dim(out, own * csize, csize, 0)
+
+    def allgather(self, x, axis: str, algorithm: str = "auto"):
+        """Tiled: returns concat of every rank's flat x (own shard at
+        position rank)."""
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x.reshape(-1)
+        if self.backend == "native" and algorithm in (None, "auto"):
+            return lax.all_gather(x.reshape(-1), axis, axis=0,
+                                  tiled=True)
+        sched = self._resolve("allgather", x, axis, algorithm)
+        if sched.name == "ring":
+            return ring_allgather_loop(x.reshape(-1), axis,
+                                       self.comm(axis)).reshape(-1)
+        flat = x.reshape(-1)
+        rank = lax.axis_index(axis)
+        buf = jnp.zeros((n * flat.shape[0],), flat.dtype)
+        buf = lax.dynamic_update_slice_in_dim(
+            buf, flat, rank * flat.shape[0], 0)
+        out = interpret_schedule(sched, buf, axis,
+                                 use_pallas=self.use_pallas)
+        return out
+
+    def bcast(self, x, axis: str, root: int = 0, algorithm: str = "auto"):
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x
+        if self.backend == "native" and algorithm in (None, "auto"):
+            full = lax.all_gather(x, axis)
+            return full[root]
+        sched = self._resolve("bcast", x, axis, algorithm, root=root)
+        flat, shape, size = _flatten_pad(x, sched.chunks)
+        out = interpret_schedule(sched, flat, axis,
+                                 use_pallas=self.use_pallas)
+        return out[:size].reshape(shape)
+
+    def reduce(self, x, axis: str, root: int = 0, op: str = "add",
+               algorithm: str = "auto"):
+        """MPI semantics: result meaningful at `root` only (other ranks may
+        hold partial reductions, depending on the algorithm)."""
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x
+        if self.backend == "native" and algorithm in (None, "auto"):
+            return lax.psum(x, axis)
+        sched = self._resolve("reduce", x, axis, algorithm, root=root, op=op)
+        flat, shape, size = _flatten_pad(x, sched.chunks)
+        out = interpret_schedule(sched, flat, axis,
+                                 use_pallas=self.use_pallas)
+        return out[:size].reshape(shape)
+
+    def gather(self, x, axis: str, root: int = 0, algorithm: str = "auto"):
+        """Root ends with concat of all ranks' flat x (others undefined)."""
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x.reshape(-1)
+        if self.backend == "native" and algorithm in (None, "auto"):
+            return lax.all_gather(x.reshape(-1), axis, axis=0, tiled=True)
+        sched = self._resolve("gather", x, axis, algorithm, root=root)
+        flat = x.reshape(-1)
+        rank = lax.axis_index(axis)
+        buf = jnp.zeros((n * flat.shape[0],), flat.dtype)
+        own_slot = rank if sched.chunk_coords == "absolute" else (rank - root) % n
+        buf = lax.dynamic_update_slice_in_dim(
+            buf, flat, own_slot * flat.shape[0], 0)
+        out = interpret_schedule(sched, buf, axis,
+                                 use_pallas=self.use_pallas)
+        if sched.chunk_coords == "relative":
+            grp = out.reshape((n, flat.shape[0]))
+            out = jnp.roll(grp, root, axis=0).reshape(-1)
+        return out
+
+    def alltoall(self, x, axis: str, algorithm: str = "auto"):
+        """Tiled on leading dim: block j of the output came from rank j."""
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x
+        if x.shape[0] % n:
+            raise ValueError(f"alltoall dim0 {x.shape[0]} % {n} != 0")
+        if self.backend == "native" and algorithm in (None, "auto"):
+            return lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                  tiled=True)
+        sched = self._resolve("alltoall", x, axis, algorithm)
+        if sched.name == "linear":
+            x2d = x.reshape(n, -1)
+            out = linear_alltoall_collect(x2d, axis, self.comm(axis))
+            return out.reshape(x.shape)
+        out = interpret_schedule(sched, x, axis, use_pallas=self.use_pallas)
+        return out
+
+    def send_recv(self, x, axis: str, shift: int = 1):
+        """Neighbour exchange along a ring (the paper's send/recv pair)."""
+        comm = self.comm(axis)
+        return lax.ppermute(x, axis, comm.ring_perm(shift))
+
+    def barrier(self, axis: str):
+        """1-element allreduce, like the paper's barrier collective."""
+        return self.allreduce(jnp.zeros((1,), jnp.float32), axis,
+                              algorithm="auto")
+
+    def nop(self):
+        """Engine invocation NOP (fig8 latency benchmark)."""
+        return jnp.zeros((), jnp.int32)
+
+    # -- hierarchical multi-axis collectives (multi-pod path) ----------------
+    def allreduce_multi(self, x, axes: Sequence[str], op: str = "add",
+                        algorithm: str = "auto",
+                        compression: Optional[str] = None):
+        """Hierarchical allreduce over several axes, fastest axis first.
+
+        RS over axes[0] -> recurse over the rest on 1/n of the bytes -> AG
+        back over axes[0]. Across pods this sends only 1/|data| of the
+        gradient bytes over DCN — the multi-pod collective optimization.
+        """
+        axes = [a for a in axes if self.mesh.shape[a] > 1]
+        if not axes:
+            return x
+        if len(axes) == 1:
+            return self.allreduce(x, axes[0], op=op, algorithm=algorithm,
+                                  compression=compression)
+        n0 = self.mesh.shape[axes[0]]
+        flat, shape, size = _flatten_pad(x, n0)
+        shard = self.reduce_scatter(flat, axes[0], op=op,
+                                    algorithm=algorithm,
+                                    compression=compression)
+        shard = self.allreduce_multi(shard, axes[1:], op=op,
+                                     algorithm=algorithm,
+                                     compression=compression)
+        full = self.allgather(shard, axes[0], algorithm=algorithm)
+        return full[:size].reshape(shape)
+
+    # -- streaming API (paper Listing 2): compute fused with communication ---
+    def _matmul(self, a, b, out_dtype=None):
+        out_dtype = out_dtype or a.dtype
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            return kops.matmul(a, b).astype(out_dtype)
+        return jnp.dot(a, b,
+                       preferred_element_type=jnp.float32).astype(out_dtype)
+
+    def allgather_matmul(self, x, w, axis: str):
+        """y = allgather(x, rows) @ w without staging the gathered buffer.
+
+        Each ring step multiplies the resident shard while the next shard is
+        on the wire — the streaming collective of Listing 2, fused with the
+        MXU consumer. x: (m, k) local rows; w: (k, p); out: (n*m, p).
+        """
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return self._matmul(x, w)
+        comm = self.comm(axis)
+        rank = lax.axis_index(axis)
+        m = x.shape[0]
+        out = jnp.zeros((n * m, w.shape[-1]), x.dtype)
+        cur = x
+        for s in range(n):
+            seg = self._matmul(cur, w)
+            out = lax.dynamic_update_slice_in_dim(
+                out, seg, ((rank - s) % n) * m, 0)
+            if s < n - 1:
+                cur = lax.ppermute(cur, axis, comm.ring_perm(1))
+        self.trace_log.append(("allgather_matmul", "ring", axis,
+                               int(x.size * x.dtype.itemsize)))
+        return out
+
+    def matmul_reduce_scatter(self, x, w, axis: str):
+        """Row-sharded output of (x @ w) with the partial-sum reduction
+        streamed around the ring. x: (m, k_local); w: (k_local, p);
+        out: (m/n, p) — rank r holds row-chunk r, fully summed."""
+        n = self.mesh.shape[axis]
+        partial = self._matmul(x, w)
+        if n == 1:
+            return partial
+        comm = self.comm(axis)
+        rank = lax.axis_index(axis)
+        m = partial.shape[0]
+        if m % n:
+            raise ValueError(f"matmul_reduce_scatter rows {m} % {n} != 0")
+        c = m // n
+        acc = lax.dynamic_slice_in_dim(partial, ((rank - 1) % n) * c, c, 0)
+        for s in range(1, n):
+            acc = lax.ppermute(acc, axis, comm.ring_perm(1))
+            acc = acc + lax.dynamic_slice_in_dim(
+                partial, ((rank - 1 - s) % n) * c, c, 0)
+        self.trace_log.append(("matmul_reduce_scatter", "ring", axis,
+                               int(partial.size * partial.dtype.itemsize)))
+        return acc
+
+    def ring_attention(self, q, k, v, axis: str, *, causal: bool = True,
+                       scale: Optional[float] = None):
+        """Context-parallel attention: the streaming API generalized.
+
+        q, k, v: (B, S_local, H, hd) — the SEQUENCE is sharded over `axis`
+        (heads replicated across it). KV blocks rotate around the ring
+        while each rank flash-accumulates attention for its local queries:
+        data streams through compute without ever materializing the
+        gathered sequence (paper Listing 2, applied to attention).
+
+        Inference/prefill form (no custom VJP). Returns (B, S_local, H, hd).
+        """
+        n = self.mesh.shape[axis]
+        b, sl, h, hd = q.shape
+        if scale is None:
+            scale = 1.0 / (hd ** 0.5)
+        if n == 1:
+            kv = k.shape[2]
+            qr = q.reshape(b, sl, kv, h // kv, hd)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qr, k,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = jnp.tril(jnp.ones((sl, sl), bool))
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v.dtype), v)
+            return out.transpose(0, 3, 1, 2, 4).reshape(b, sl, h, hd)
+
+        comm = self.comm(axis)
+        rank = lax.axis_index(axis)
+        kv = k.shape[2]
+        g = h // kv
+        qr = q.reshape(b, sl, kv, g, hd)
+        q_pos = rank * sl + jnp.arange(sl)
+
+        m0 = jnp.full((b, kv, g, sl), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, sl), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, sl, hd), jnp.float32)
+
+        def accumulate(carry, kv_blk, owner):
+            m, l, acc = carry
+            kb, vb = kv_blk
+            k_pos = owner * sl + jnp.arange(sl)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qr, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = k_pos[None, :] <= q_pos[:, None]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            return m_new, l, acc * corr[..., None] + pv
+
+        carry = accumulate((m0, l0, a0), (k, v), rank)
+        cur_k, cur_v = k, v
+        for step in range(1, n):
+            # next block is on the wire while the current one computes
+            cur_k = lax.ppermute(cur_k, axis, comm.ring_perm(1))
+            cur_v = lax.ppermute(cur_v, axis, comm.ring_perm(1))
+            owner = (rank - step) % n
+            carry = accumulate(carry, (cur_k, cur_v), owner)
+        m, l, acc = carry
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        self.trace_log.append(("ring_attention", "ring", axis,
+                               int(k.size * k.dtype.itemsize)))
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sl, h, hd)
+
+    # -- gradient-bucket collectives (offload-engine H2H role) ---------------
+    def tree_allreduce(self, tree, axes: Sequence[str], op: str = "add",
+                       compression: Optional[str] = None,
+                       algorithm: str = "auto"):
+        """Bucketed pytree allreduce: one fused collective for all leaves.
+
+        Flattening every gradient into a single buffer amortizes the alpha
+        term across the whole pytree (gradient bucketing).
+        """
+        leaves, treedef = jax.tree.flatten(tree)
+        if not leaves:
+            return tree
+        sizes = [l.size for l in leaves]
+        shapes = [l.shape for l in leaves]
+        dtypes = [l.dtype for l in leaves]
+        buf = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                               for l in leaves])
+        buf = self.allreduce_multi(buf, axes, op=op, algorithm=algorithm,
+                                   compression=compression)
+        outs, off = [], 0
+        for size, shape, dtype in zip(sizes, shapes, dtypes):
+            outs.append(buf[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, outs)

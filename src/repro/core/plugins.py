@@ -1,0 +1,132 @@
+"""Streaming plugins — ACCL+'s in-flight unary/binary operators (§4.4.2).
+
+"Binary operations are typically utilized to implement reductions — sum,
+max, etc. Unary operators may implement compression or encryption."
+
+Binary plugins combine the arriving chunk with the local one; unary plugins
+transform chunks on the wire. Our unary plugins are *compressors* used for
+compressed gradient collectives (a distributed-optimization trick the
+paper's plugin architecture anticipates): payloads shrink on the wire and
+are decompressed at the consumer.
+
+Every plugin has a pure-jnp implementation (the oracle) and, where it is a
+compute hot-spot, a Pallas kernel (repro.kernels) selected by `use_pallas`.
+A compressor returns a pytree of wire arrays so the engine can ppermute
+each leaf.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Binary plugins (combine ops)
+# --------------------------------------------------------------------------
+
+def _add(a, b):
+    return a + b
+
+
+BINARY_PLUGINS: dict[str, Callable] = {
+    "copy": lambda old, new: new,
+    "add": _add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "mul": jnp.multiply,
+}
+
+
+def combine(op: str, old, new, use_pallas: bool = False):
+    """Apply a binary plugin. The Pallas path fuses combine+cast in VMEM."""
+    if use_pallas and op == "add" and old.dtype == new.dtype and old.ndim >= 1:
+        from repro.kernels import ops as kops
+        return kops.fused_add(old, new)
+    return BINARY_PLUGINS[op](old, new)
+
+
+# --------------------------------------------------------------------------
+# Unary plugins (compressors)
+# --------------------------------------------------------------------------
+
+class Compressed(NamedTuple):
+    """Wire format: payload + per-block scales (empty for cast codecs)."""
+
+    payload: jax.Array
+    scale: jax.Array
+
+
+QUANT_BLOCK = 256  # elements per int8 scale block
+
+
+def _pad_to(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x, n
+
+
+def bf16_compress(x: jax.Array) -> Compressed:
+    return Compressed(x.astype(jnp.bfloat16), jnp.zeros((0,), jnp.float32))
+
+
+def bf16_decompress(c: Compressed, dtype) -> jax.Array:
+    return c.payload.astype(dtype)
+
+
+def int8_compress(x: jax.Array, use_pallas: bool = False) -> Compressed:
+    """Per-block symmetric int8 quantization of a flat array."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+        q, s = kops.quantize_int8(x.reshape(-1))
+        return Compressed(q, s)
+    flat = x.reshape(-1)
+    flat, _ = _pad_to(flat, QUANT_BLOCK)
+    blocks = flat.reshape(-1, QUANT_BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return Compressed(q.reshape(-1), scale.astype(jnp.float32))
+
+
+def int8_decompress(c: Compressed, shape, dtype,
+                    use_pallas: bool = False) -> jax.Array:
+    if use_pallas:
+        from repro.kernels import ops as kops
+        flat = kops.dequantize_int8(c.payload, c.scale)
+    else:
+        blocks = c.payload.reshape(-1, QUANT_BLOCK).astype(jnp.float32)
+        flat = (blocks * c.scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+class Codec(NamedTuple):
+    compress: Callable
+    decompress: Callable  # (Compressed, shape, dtype) -> array
+    wire_bytes_per_elem: float
+
+
+CODECS: dict[str, Codec] = {
+    "bf16": Codec(
+        lambda x, use_pallas=False: bf16_compress(x),
+        lambda c, shape, dtype, use_pallas=False: bf16_decompress(c, dtype).reshape(shape),
+        2.0,
+    ),
+    "int8": Codec(
+        int8_compress,
+        lambda c, shape, dtype, use_pallas=False: int8_decompress(
+            c, shape, dtype, use_pallas),
+        1.0 + 4.0 / QUANT_BLOCK,
+    ),
+}
+
+
+def get_codec(name: str) -> Codec:
+    if name not in CODECS:
+        raise ValueError(f"unknown codec {name!r}; have {sorted(CODECS)}")
+    return CODECS[name]

@@ -1,0 +1,140 @@
+"""Algorithm & protocol selector — the runtime-tunable part of the firmware.
+
+ACCL+ (§4.4.4): "The tuning of the algorithms for specific collective can be
+done at runtime by setting configuration parameters to the CCLO engine and
+we set these parameters according to our empirical experiment results."
+
+We reproduce that: `Selector.choose()` prices every registered (algorithm,
+protocol) pair for a (collective, message size, communicator) with the
+alpha-beta model and picks the cheapest. A user tuning table overrides the
+model (the paper's "configuration parameters"), so deployments can pin
+choices measured on their fabric — without touching any model code.
+
+Protocol model (paper §4.4.3, adapted per DESIGN.md §5):
+  eager       no handshake; receiver staging copy costs msg/eager_copy_bw.
+              Only available while the message fits the Rx-buffer pool.
+  rendezvous  +1 handshake RTT; zero-copy delivery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import algorithms as algos
+from repro.core.schedule import Schedule
+from repro.core.topology import Communicator
+
+# Which algorithms may run under which protocol (paper Table 1 + [+] ours).
+ALGO_PROTOCOLS = {
+    ("bcast", "one_to_all"): ("eager", "rendezvous"),
+    ("bcast", "binomial_tree"): ("rendezvous",),
+    ("reduce", "ring"): ("eager",),
+    ("reduce", "all_to_one"): ("rendezvous", "eager"),
+    ("reduce", "binomial_tree"): ("rendezvous",),
+    ("gather", "ring"): ("eager",),
+    ("gather", "all_to_one"): ("rendezvous", "eager"),
+    ("gather", "binomial_tree"): ("rendezvous",),
+    ("alltoall", "linear"): ("eager", "rendezvous"),
+    ("alltoall", "bruck"): ("eager",),
+    ("allreduce", "recursive_doubling"): ("eager", "rendezvous"),
+    ("allreduce", "ring"): ("rendezvous",),
+    ("allreduce", "bidi_ring"): ("rendezvous",),
+    ("allreduce", "halving_doubling"): ("rendezvous",),
+    ("reduce_scatter", "ring"): ("rendezvous",),
+    ("reduce_scatter", "recursive_halving"): ("rendezvous",),
+    ("allgather", "ring"): ("eager", "rendezvous"),
+    ("allgather", "recursive_doubling"): ("rendezvous",),
+}
+
+# (collective, algorithm) pairs whose generators require 2^k ranks.
+_POW2_ONLY = {
+    ("allreduce", "recursive_doubling"),
+    ("allreduce", "halving_doubling"),
+    ("reduce_scatter", "recursive_halving"),
+    ("allgather", "recursive_doubling"),
+    ("alltoall", "bruck"),
+    ("gather", "binomial_tree"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    collective: str
+    algorithm: str
+    protocol: str
+    predicted_s: float
+    schedule: Schedule
+
+
+class Selector:
+    """Prices schedules; honours a user tuning table first."""
+
+    def __init__(self, eager_max_bytes: int = 64 * 1024):
+        self.eager_max_bytes = eager_max_bytes
+        # (collective, lo_bytes, hi_bytes, nranks_or_None) -> algorithm
+        self._tuning: list[tuple] = []
+
+    # -- the paper's runtime configuration parameters ----------------------
+    def set_tuning(self, collective: str, algorithm: str,
+                   lo_bytes: int = 0, hi_bytes: int = 1 << 62,
+                   nranks: Optional[int] = None) -> None:
+        self._tuning.append((collective, lo_bytes, hi_bytes, nranks, algorithm))
+
+    def _tuned(self, collective: str, msg_bytes: int, n: int) -> Optional[str]:
+        for (c, lo, hi, nr, algo) in reversed(self._tuning):
+            if c == collective and lo <= msg_bytes < hi and (nr is None or nr == n):
+                return algo
+        return None
+
+    # -- pricing ------------------------------------------------------------
+    def _protocol_overhead(self, protocol: str, msg_bytes: float,
+                           comm: Communicator) -> Optional[float]:
+        if protocol == "eager":
+            if msg_bytes > self.eager_max_bytes:
+                return None  # Rx-buffer pool exceeded
+            return msg_bytes / comm.hw.eager_copy_bw
+        return comm.hw.rendezvous_rtt
+
+    def price(self, schedule: Schedule, protocol: str, msg_bytes: float,
+              comm: Communicator) -> Optional[float]:
+        ov = self._protocol_overhead(protocol, msg_bytes, comm)
+        if ov is None:
+            return None
+        return schedule.predict_time(msg_bytes, comm.hop_latency,
+                                     comm.link_bw) + ov
+
+    def candidates(self, collective: str, comm: Communicator):
+        for (coll, algo), gen in algos.GENERATORS.items():
+            if coll != collective:
+                continue
+            if (coll, algo) in _POW2_ONLY and not comm.is_pow2:
+                continue
+            if comm.size < 2:
+                continue
+            yield algo, gen
+
+    def choose(self, collective: str, msg_bytes: int,
+               comm: Communicator) -> Choice:
+        tuned = self._tuned(collective, msg_bytes, comm.size)
+        best: Optional[Choice] = None
+        for algo, gen in self.candidates(collective, comm):
+            sched = gen(comm)
+            protos = ALGO_PROTOCOLS.get((collective, algo), ("rendezvous",))
+            for proto in protos:
+                t = self.price(sched, proto, msg_bytes, comm)
+                if t is None:
+                    continue
+                cand = Choice(collective, algo, proto, t, sched)
+                if tuned == algo:
+                    return cand
+                if best is None or t < best.predicted_s:
+                    best = cand
+        if best is None:
+            raise ValueError(
+                f"no applicable algorithm for {collective} over {comm}")
+        return best
+
+    def table(self, collective: str, comm: Communicator,
+              sizes=(1 << 10, 1 << 13, 1 << 17, 1 << 20, 1 << 24, 1 << 27)):
+        """Selection table — the fig12-style artifact for EXPERIMENTS.md."""
+        return {s: self.choose(collective, s, comm) for s in sizes}

@@ -1,0 +1,173 @@
+"""Rank-level numpy simulator — the ACCL+ ZMQ simulation platform analogue.
+
+Executes a `Schedule` functionally over explicit per-rank buffers, with no
+jax involved. Used for:
+  * algorithm validation (tests compare against numpy oracles),
+  * schedule debugging without tracing/compiling,
+  * the latency *model* evaluation in the fig10/fig12 benchmarks.
+
+The semantics here are the reference the jax engine (core/engine.py) must
+match — the simulator is the "bus functional model of the CCLO".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedule import (
+    SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
+)
+
+_COMBINE = {
+    "copy": lambda old, new: new,
+    "add": lambda old, new: old + new,
+    "max": np.maximum,
+    "min": np.minimum,
+    "mul": lambda old, new: old * new,
+}
+
+
+def _chunk_view(buf: np.ndarray, chunks: int, idx: int, length: int = 1):
+    """Slice chunks [idx, idx+length) of the flat leading dim."""
+    csize = buf.shape[0] // chunks
+    return buf[idx * csize:(idx + length) * csize]
+
+
+def _select(buf: np.ndarray, chunks: int, sel: Sel, rank: int, step: int):
+    if sel.kind == SEL_ALL:
+        return buf.copy()
+    if sel.kind == SEL_CHUNK:
+        return _chunk_view(buf, chunks, int(sel.fn(rank, step))).copy()
+    if sel.kind == SEL_RANGE:
+        off, length = sel.fn(rank, step)
+        return _chunk_view(buf, chunks, int(off), int(length)).copy()
+    if sel.kind == SEL_MASK:
+        idxs = sel.fn(rank, step)
+        return np.concatenate(
+            [_chunk_view(buf, chunks, int(j)) for j in idxs], axis=0)
+    raise ValueError(sel.kind)
+
+
+def _place(buf: np.ndarray, chunks: int, sel: Sel, rank: int, step: int,
+           incoming: np.ndarray, op: str) -> None:
+    fn = _COMBINE[op]
+    if sel.kind == SEL_ALL:
+        buf[...] = fn(buf, incoming)
+        return
+    if sel.kind == SEL_CHUNK:
+        view = _chunk_view(buf, chunks, int(sel.fn(rank, step)))
+        view[...] = fn(view, incoming)
+        return
+    if sel.kind == SEL_RANGE:
+        off, length = sel.fn(rank, step)
+        view = _chunk_view(buf, chunks, int(off), int(length))
+        view[...] = fn(view, incoming)
+        return
+    if sel.kind == SEL_MASK:
+        idxs = sel.fn(rank, step)
+        csize = buf.shape[0] // chunks
+        for k, j in enumerate(idxs):
+            view = _chunk_view(buf, chunks, int(j))
+            view[...] = fn(view, incoming[k * csize:(k + 1) * csize])
+        return
+    raise ValueError(sel.kind)
+
+
+def _bruck_pre(bufs, n):
+    """Rank r rotates chunks so chunk j holds data destined to (r+j)%n."""
+    out = []
+    for r, b in enumerate(bufs):
+        csize = b.shape[0] // n
+        parts = [b[((j + r) % n) * csize:(((j + r) % n) + 1) * csize]
+                 for j in range(n)]
+        out.append(np.concatenate(parts, axis=0))
+    return out
+
+
+def _bruck_post(bufs, n):
+    """After the phases chunk j holds data from rank (r-j)%n; rearrange so
+    chunk j holds data from rank j."""
+    out = []
+    for r, b in enumerate(bufs):
+        csize = b.shape[0] // n
+        parts = [b[((r - j) % n) * csize:(((r - j) % n) + 1) * csize]
+                 for j in range(n)]
+        out.append(np.concatenate(parts, axis=0))
+    return out
+
+
+def simulate(schedule: Schedule, inputs: list[np.ndarray]) -> list[np.ndarray]:
+    """Run `schedule` over per-rank buffers; returns final per-rank buffers."""
+    n = schedule.nranks
+    assert len(inputs) == n, f"need {n} rank buffers"
+    for b in inputs:
+        if b.shape[0] % schedule.chunks:
+            raise ValueError(
+                f"leading dim {b.shape[0]} not divisible by {schedule.chunks}")
+    schedule.validate()
+
+    bufs = [np.array(b, copy=True) for b in inputs]
+    if schedule.pre_rotate == "bruck":
+        bufs = _bruck_pre(bufs, n)
+    originals = [b.copy() for b in bufs]
+    last_recv: list[np.ndarray | None] = [None] * n
+
+    for s_idx, step in enumerate(schedule.steps):
+        src_of = {dst: src for (src, dst) in step.perm}
+        # 1. every listed src places its payload on the wire
+        wire = {}
+        for (src, dst) in step.perm:
+            if schedule.relay == "original":
+                payload_src = originals[src]
+            elif schedule.relay == "received" and last_recv[src] is not None:
+                payload_src = last_recv[src]
+            else:
+                payload_src = bufs[src]
+            wire[dst] = _select(payload_src, schedule.chunks, step.send_sel,
+                                src, s_idx)
+        # 2. destinations combine
+        new_recv = list(last_recv)
+        for dst, payload in wire.items():
+            _place(bufs[dst], schedule.chunks, step.recv_sel, dst, s_idx,
+                   payload, step.op)
+            new_recv[dst] = payload
+        # non-destinations: mask_recv means keep state; rings always receive
+        if not step.mask_recv:
+            missing = set(range(n)) - set(wire.keys())
+            if missing:
+                raise ValueError(
+                    f"step {s_idx}: ranks {missing} receive nothing but "
+                    f"mask_recv=False")
+        last_recv = new_recv
+
+    if schedule.post_rotate == "bruck":
+        bufs = _bruck_post(bufs, n)
+    return bufs
+
+
+# ---------------------------------------------------------------------------
+# Numpy oracles (what each collective should produce)
+# ---------------------------------------------------------------------------
+
+def oracle(collective: str, inputs: list[np.ndarray], op: str = "add",
+           root: int = 0):
+    """Reference results, rank-indexed. For 'shard' results, returns the
+    full reduction; callers slice per owned_chunk."""
+    n = len(inputs)
+    stack = np.stack(inputs)
+    if collective in ("allreduce", "reduce", "reduce_scatter"):
+        red = {"add": np.sum, "max": np.max, "min": np.min,
+               "mul": np.prod}[op](stack, axis=0)
+        return red
+    if collective in ("allgather", "gather"):
+        return np.concatenate(inputs, axis=0)
+    if collective == "bcast":
+        return inputs[root]
+    if collective == "alltoall":
+        # chunk j of rank r's output = chunk r of rank j's input
+        csize = inputs[0].shape[0] // n
+        return [
+            np.concatenate([inputs[j][r * csize:(r + 1) * csize]
+                            for j in range(n)], axis=0)
+            for r in range(n)
+        ]
+    raise ValueError(collective)

@@ -1,0 +1,108 @@
+"""Mesh topology: the TPU analogue of ACCL+'s communicator.
+
+ACCL+ builds a `communicator` (rank list + session/queue-pair table held in
+CCLO configuration memory). On TPU, the communicator is a named mesh axis.
+This module owns:
+
+  * the production mesh axes ("pod", "data", "model"),
+  * rank-neighbour maps for schedule generation (rings, trees, hypercubes),
+  * the physical-cost view of an axis (ICI vs DCN) used by the selector.
+
+Schedule generators (core/algorithms.py) are expressed over a `Communicator`,
+which knows only rank count and hop costs — exactly the information the
+ACCL+ uC firmware reads from configuration memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+
+from repro.core.hw_spec import HwSpec, TPU_V5E
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Mesh constructor with stable axis_types across jax versions."""
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(axes)),
+        )
+    except TypeError:  # older jax without axis_types kwarg
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    """Rank group over one mesh axis (ACCL+ communicator analogue).
+
+    `axis` is the shard_map axis name collectives run over; `size` its rank
+    count. `is_dcn` marks pod-crossing axes (slower links) for the cost
+    model. Hardware constants ride along so the selector can price
+    schedules without global state.
+    """
+
+    axis: str
+    size: int
+    is_dcn: bool = False
+    hw: HwSpec = TPU_V5E
+
+    @property
+    def link_bw(self) -> float:
+        return self.hw.dcn_bw if self.is_dcn else self.hw.ici_link_bw
+
+    @property
+    def hop_latency(self) -> float:
+        return self.hw.dcn_hop_latency if self.is_dcn else self.hw.ici_hop_latency
+
+    # -- neighbour maps used by schedule generators ------------------------
+    def ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
+        """src->dst pairs rotating by `step` (bidirectional rings use ±1)."""
+        n = self.size
+        return [(i, (i + step) % n) for i in range(n)]
+
+    def hypercube_perm(self, dim: int) -> list[tuple[int, int]]:
+        """Pairwise exchange partners at hypercube dimension `dim`."""
+        n = self.size
+        if n & (n - 1):
+            raise ValueError(f"hypercube needs power-of-two ranks, got {n}")
+        return [(i, i ^ (1 << dim)) for i in range(n)]
+
+    def tree_rounds(self, root: int = 0) -> list[list[tuple[int, int]]]:
+        """Binomial-tree rounds of (src, dst) for broadcast from `root`.
+
+        Round k doubles the informed set: ranks with id < 2^k (relative to
+        root) send to id + 2^k. log2(n) rounds, n need not be a power of 2.
+        """
+        n = self.size
+        rounds: list[list[tuple[int, int]]] = []
+        informed = 1
+        while informed < n:
+            pairs = []
+            for i in range(min(informed, n - informed)):
+                src = (root + i) % n
+                dst = (root + i + informed) % n
+                pairs.append((src, dst))
+            rounds.append(pairs)
+            informed *= 2
+        return rounds
+
+    @property
+    def log2_size(self) -> int:
+        return int(math.log2(self.size))
+
+    @property
+    def is_pow2(self) -> bool:
+        return self.size & (self.size - 1) == 0
+
+
+def axis_comm(mesh, axis: str, hw: HwSpec = TPU_V5E) -> Communicator:
+    """Build a Communicator for one axis of a jax Mesh."""
+    return Communicator(
+        axis=axis,
+        size=mesh.shape[axis],
+        is_dcn=(axis == "pod"),
+        hw=hw,
+    )

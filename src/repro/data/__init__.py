@@ -1,0 +1,6 @@
+from repro.data.pipeline import (
+    DataConfig, SyntheticLM, MemmapTokens, ShardedLoader, make_loader,
+)
+
+__all__ = ["DataConfig", "SyntheticLM", "MemmapTokens", "ShardedLoader",
+           "make_loader"]

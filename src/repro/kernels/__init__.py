@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots ACCL+ optimizes in hardware:
+
+  fused_reduce      binary streaming plugin (combine + cast, one VMEM pass)
+  quantize          unary streaming plugin (per-block int8 codec)
+  matmul            MXU-tiled matmul (DLRM FC shards, collective-matmul step)
+  embedding_gather  DLRM sparse lookup via scalar-prefetch DMA
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ref.py oracle,
+ops.py public wrapper (padding + interpret-mode selection).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

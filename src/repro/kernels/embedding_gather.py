@@ -1,0 +1,55 @@
+"""DLRM embedding lookup — scalar-prefetch gather from an HBM-resident table.
+
+The paper's DLRM embedding layers are "memory-bound ... accessed via
+indexes, resulting in multiple random memory accesses" (§6). FPGA solutions
+spread tables over HBM channels for parallel access; the TPU analogue is a
+Pallas kernel whose *grid* is driven by the indices (scalar prefetch): each
+grid step DMAs exactly one (1, D) table row HBM->VMEM, so the sparse access
+pattern never materializes an intermediate one-hot or full-table read.
+
+D must be 128-aligned (DLRM vectors are 32-wide in the paper; ops.py pads
+the table's last dim).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _HAVE_TPU_GRID = True
+except Exception:  # pragma: no cover
+    _HAVE_TPU_GRID = False
+
+
+def _kernel(idx_ref, table_ref, o_ref):
+    # The index_map already steered this block to row idx_ref[i]; plain copy.
+    o_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(table, indices, *, interpret: bool = True):
+    """table: (V, D) fp; indices: (B,) int32 -> (B, D).
+
+    Scalar-prefetched indices drive the table BlockSpec's index_map, one
+    row per grid step.
+    """
+    v, d = table.shape
+    (b,) = indices.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(indices.astype(jnp.int32), table)

@@ -1,0 +1,102 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles shape padding/alignment so callers can pass arbitrary shapes, and
+selects interpret mode automatically (interpret=True on CPU — the
+validation path; compiled Mosaic on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import embedding_gather as _eg
+from repro.kernels import fused_reduce as _fr
+from repro.kernels import matmul as _mm
+from repro.kernels import quantize as _qz
+
+LANES = 128
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_dim(x, dim: int, mult: int):
+    pad = (-x.shape[dim]) % mult
+    if pad == 0:
+        return x, x.shape[dim]
+    widths = [(0, 0)] * x.ndim
+    widths[dim] = (0, pad)
+    return jnp.pad(x, widths), x.shape[dim]
+
+
+def fused_add(x, y, out_dtype=None):
+    """Streaming binary plugin: x + y (fp32 accumulate, fused cast)."""
+    shape = x.shape
+    flat_x = x.reshape(-1)
+    flat_y = y.reshape(-1)
+    flat_x, n = _pad_dim(flat_x, 0, _fr.DEFAULT_BLOCK_ROWS * LANES)
+    flat_y, _ = _pad_dim(flat_y, 0, _fr.DEFAULT_BLOCK_ROWS * LANES)
+    x2 = flat_x.reshape(-1, LANES)
+    y2 = flat_y.reshape(-1, LANES)
+    out = _fr.fused_combine(x2, y2, op="add", out_dtype=out_dtype,
+                            interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def fused_combine(x, y, op: str = "add", out_dtype=None):
+    shape = x.shape
+    flat_x, n = _pad_dim(x.reshape(-1), 0, _fr.DEFAULT_BLOCK_ROWS * LANES)
+    flat_y, _ = _pad_dim(y.reshape(-1), 0, _fr.DEFAULT_BLOCK_ROWS * LANES)
+    out = _fr.fused_combine(flat_x.reshape(-1, LANES),
+                            flat_y.reshape(-1, LANES), op=op,
+                            out_dtype=out_dtype, interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def quantize_int8(flat):
+    """flat (N,) fp -> (payload int8 (Np,), scales fp32 (Np/256,)).
+
+    Np is N padded to QUANT_BLOCK*BLOCK_ROWS; decompress slices back.
+    """
+    flat, _ = _pad_dim(flat.reshape(-1), 0,
+                       _qz.QUANT_BLOCK * _qz.BLOCK_ROWS)
+    q, s = _qz.quantize_blocks(flat.reshape(-1, _qz.QUANT_BLOCK),
+                               interpret=_interpret())
+    return q.reshape(-1), s
+
+
+def dequantize_int8(payload, scales):
+    out = _qz.dequantize_blocks(payload.reshape(-1, _qz.QUANT_BLOCK), scales,
+                                interpret=_interpret())
+    return out.reshape(-1)
+
+
+def matmul(x, y, out_dtype=None, bm=None, bn=None, bk=None):
+    """General (M,K)@(K,N) with automatic 128-alignment padding."""
+    m, k = x.shape
+    _, n = y.shape
+    bm = bm or min(_mm.DEFAULT_BM, _ceil_mult(m, LANES))
+    bn = bn or min(_mm.DEFAULT_BN, _ceil_mult(n, LANES))
+    bk = bk or min(_mm.DEFAULT_BK, _ceil_mult(k, LANES))
+    xp, _ = _pad_dim(x, 0, bm)
+    xp, _ = _pad_dim(xp, 1, bk)
+    yp, _ = _pad_dim(y, 0, bk)
+    yp, _ = _pad_dim(yp, 1, bn)
+    out = _mm.matmul_tiled(xp, yp, bm=bm, bn=bn, bk=bk,
+                           out_dtype=out_dtype, interpret=_interpret())
+    return out[:m, :n]
+
+
+def _ceil_mult(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def embedding_gather(table, indices):
+    """(V, D) table, (B,) int indices -> (B, D); pads D to 128."""
+    tp, d = _pad_dim(table, 1, LANES)
+    out = _eg.gather_rows(tp, indices, interpret=_interpret())
+    return out[:, :d]

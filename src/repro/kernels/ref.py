@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QUANT_BLOCK = 256
+
+
+def fused_combine(x, y, op: str = "add", out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    a = x.astype(jnp.float32)
+    b = y.astype(jnp.float32)
+    f = {"add": lambda p, q: p + q, "max": jnp.maximum,
+         "min": jnp.minimum, "mul": jnp.multiply}[op]
+    return f(a, b).astype(out_dtype)
+
+
+def quantize_blocks(x2d):
+    x = x2d.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_blocks(q2d, scales):
+    return q2d.astype(jnp.float32) * scales[:, None]
+
+
+def matmul(x, y, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def gather_rows(table, indices):
+    return jnp.take(table, indices, axis=0)

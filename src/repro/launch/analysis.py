@@ -1,0 +1,425 @@
+"""Loop-aware static analysis of compiled HLO.
+
+XLA's cost_analysis() counts while-loop bodies ONCE (verified empirically:
+a 10-trip scanned matmul reports 1 iteration of flops), and it reports no
+collective traffic at all. Since every layer stack here is a lax.scan and
+every ring collective a rolled loop, naive numbers are off by ~n_layers x
+ring_steps. This module parses the optimized HLO text into computations,
+builds the call graph (while bodies x trip count, fusions, reducers),
+propagates execution multiplicities from ENTRY, and accumulates:
+
+  flops        2 * result_elems * contracted_elems per dot (x multiplicity)
+  bytes        operand+result bytes of thread-level instructions (fusion
+               internals excluded, matching cost_analysis conventions)
+  collectives  per-op wire bytes under a ring execution model, with DCN
+               attribution for pod-spanning replica groups
+
+Validated against hand-counted schedules and against cost_analysis on
+loop-free programs in tests/test_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+    r"([\w\-]+)\(")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# no HBM traffic / bookkeeping only
+_NO_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: tuple
+    line: str
+
+
+def _balanced_args(line: str, start: int) -> str:
+    depth = 0
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start + 1:i]
+    return line[start + 1:]
+
+
+def parse_module(text: str):
+    """-> (comps: {name: {iname: Instr}}, entry_name)."""
+    comps: dict = {}
+    entry = None
+    depth = 0
+    header: list = []
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        delta = line.count("{") - line.count("}")
+        if depth == 0:
+            header.append(line)
+            if delta > 0:
+                htext = " ".join(header)
+                m = re.search(r"(ENTRY\s+)?%([\w\.\-]+)\s*\(", htext)
+                cur = m.group(2) if m else f"__anon{len(comps)}"
+                if m and m.group(1):
+                    entry = cur
+                comps[cur] = {}
+                header = []
+                depth = delta
+            continue
+        depth += delta
+        if depth <= 0:
+            cur, depth = None, 0
+            continue
+        m = _INSTR_RE.search(line)
+        if m and cur is not None:
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            args = _balanced_args(line, line.index("(", m.end(3) - 1))
+            operands = tuple(re.findall(r"%([\w\.\-]+)", args))
+            comps[cur][name] = Instr(name, type_str, opcode, operands, line)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _trip_count(cond_instrs: dict) -> int:
+    best = 1
+    for ins in cond_instrs.values():
+        for m in re.finditer(r"constant\((\d+)\)", ins.line):
+            v = int(m.group(1))
+            if 1 < v <= 10_000_000:
+                best = max(best, v)
+    return best
+
+
+def _call_edges(instrs: dict):
+    """yields (callee, kind) with kind in {'while','flow','apply'}."""
+    for ins in instrs.values():
+        line = ins.line
+        if ins.opcode == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if mb:
+                yield mb.group(1), "while", (mc.group(1) if mc else None)
+        elif ins.opcode == "conditional":
+            for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                 r"(?:true|false)_computation=%?([\w\.\-]+))",
+                                 line):
+                blob = m.group(1) or m.group(2) or ""
+                for name in re.findall(r"%?([\w\.\-]+)", blob):
+                    yield name, "flow", None
+        elif ins.opcode in ("call", "async-start", "custom-call"):
+            m = re.search(r"(?:to_apply|called_computations=\{)"
+                          r"=?%?([\w\.\-]+)", line)
+            if m:
+                yield m.group(1), "flow", None
+        else:
+            m = re.search(r"calls=%?([\w\.\-]+)", line)
+            if m:
+                yield m.group(1), "apply", None
+            m2 = re.search(r"to_apply=%?([\w\.\-]+)", line)
+            if m2:
+                yield m2.group(1), "apply", None
+
+
+def multiplicities(comps: dict, entry: str):
+    """Execution count per computation, propagating loop trip counts."""
+    mult = {name: 0 for name in comps}
+    mult[entry] = 1
+    # topological-ish: iterate until fixpoint (call graph is a DAG)
+    for _ in range(64):
+        changed = False
+        for name, instrs in comps.items():
+            base = mult.get(name, 0)
+            if base == 0:
+                continue
+            for callee, kind, cond in _call_edges(instrs):
+                if callee not in comps:
+                    continue
+                if kind == "while":
+                    trip = _trip_count(comps.get(cond, {})) if cond else 1
+                    inc = base * trip
+                    if cond and mult.get(cond, 0) < base * (trip + 1):
+                        mult[cond] = base * (trip + 1)
+                        changed = True
+                else:
+                    inc = base
+                if mult.get(callee, 0) < inc:
+                    mult[callee] = inc
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(ins: Instr, table: dict) -> float:
+    out_elems = _type_elems(ins.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if not m or not ins.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs = table.get(ins.operands[0])
+    if lhs is None:
+        return 2.0 * out_elems
+    dims_m = _SHAPE_RE.search(lhs.type_str)
+    if not dims_m:
+        return 2.0 * out_elems
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    k = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    return 2.0 * out_elems * k
+
+
+def _group_info(line: str, pod_size: int):
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        gs = max(len(ids), 1)
+        spans = pod_size and len({i // pod_size for i in ids}) > 1
+        return gs, bool(spans)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+    if m:
+        s = int(m.group(2))
+        return s, bool(pod_size and s > pod_size)
+    return 1, False
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_ops: float = 0.0
+    coll_wire_bytes: float = 0.0
+    coll_dcn_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    loops: int = 0
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+def _instr_bytes(ins: Instr, instrs: dict, comps: dict) -> float:
+    """HBM traffic of one thread-level instruction, slice-aware.
+
+    Loop bodies reference full carried buffers; actual traffic for a
+    (dynamic-)slice is the slice, and an in-place dynamic-update-slice
+    writes only the update region. Fusions are charged by inspecting their
+    called computation: parameters that are immediately sliced inside count
+    at slice size, and a DUS root writes only its update.
+    """
+    op = ins.opcode
+    rb = _type_bytes(ins.type_str)
+    if op in _SLICE_OPS:
+        return 2.0 * rb
+    if op == "dynamic-update-slice":
+        upd = instrs.get(ins.operands[1]) if len(ins.operands) > 1 else None
+        ub = _type_bytes(upd.type_str) if upd else rb
+        return 2.0 * ub
+    if op == "while":
+        return 0.0  # carries pass by reference; body traffic counted inside
+    if op == "fusion":
+        m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+        body = comps.get(m.group(1)) if m else None
+        if body is None:
+            ob = sum(_type_bytes(instrs[o].type_str)
+                     for o in ins.operands if o in instrs)
+            return rb + ob
+        # map parameter index -> effective read size
+        param_eff: dict = {}
+        root_dus_update = None
+        by_name = body
+        for bins in by_name.values():
+            if bins.opcode == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", bins.line)
+                if pm:
+                    param_eff[bins.name] = (int(pm.group(1)),
+                                            _type_bytes(bins.type_str))
+            if bins.opcode in _SLICE_OPS and bins.operands:
+                src = bins.operands[0]
+                if src in param_eff:
+                    idx, _ = param_eff[src]
+                    param_eff[src] = (idx, _type_bytes(bins.type_str))
+            if bins.opcode == "dynamic-update-slice" \
+                    and "ROOT" in bins.line and len(bins.operands) > 1:
+                upd = by_name.get(bins.operands[1])
+                if upd is not None:
+                    root_dus_update = _type_bytes(upd.type_str)
+        reads = sum(sz for (_, sz) in param_eff.values())
+        writes = root_dus_update if root_dus_update is not None else rb
+        if root_dus_update is not None:
+            # in-place DUS: the untouched region is neither read nor written
+            reads = min(reads, root_dus_update * 2 + sum(
+                sz for (_, sz) in param_eff.values()
+                if sz < rb))
+        return reads + writes
+    ob = sum(_type_bytes(instrs[o].type_str)
+             for o in ins.operands if o in instrs)
+    return rb + ob
+
+
+def analyze_hlo(text: str, pod_size: int = 0) -> HloStats:
+    comps, entry = parse_module(text)
+    mult = multiplicities(comps, entry)
+    # computations reached via 'apply' (fusion internals, reducers): flops
+    # count, bytes do not (the calling instruction carries the traffic).
+    applied = set()
+    for name, instrs in comps.items():
+        for callee, kind, _ in _call_edges(instrs):
+            if kind == "apply":
+                applied.add(callee)
+
+    st = HloStats()
+    for name, instrs in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        is_applied = name in applied
+        for ins in instrs.values():
+            if ins.opcode == "while":
+                st.loops += 1
+            if ins.opcode in ("dot", "convolution"):
+                st.flops += m * _dot_flops(ins, instrs)
+            if not is_applied and ins.opcode not in _NO_BYTES:
+                st.bytes_accessed += m * _instr_bytes(ins, instrs, comps)
+            if ins.opcode in COLLECTIVES or any(
+                    ins.opcode == c + "-start" for c in COLLECTIVES):
+                kind = ins.opcode.replace("-start", "")
+                rb = _type_bytes(ins.type_str)
+                gs, spans = _group_info(ins.line, pod_size)
+                if kind == "collective-permute":
+                    wire = rb
+                    pairs = re.search(r"source_target_pairs=\{([^}]*)\}",
+                                      ins.line)
+                    if pairs and pod_size:
+                        ids = [int(x) for x in
+                               re.findall(r"\d+", pairs.group(1))]
+                        spans = any(a // pod_size != b // pod_size
+                                    for a, b in zip(ids[::2], ids[1::2]))
+                elif gs <= 1:
+                    continue
+                elif kind == "all-gather":
+                    wire = rb * (gs - 1) / gs
+                elif kind == "reduce-scatter":
+                    wire = rb * (gs - 1)
+                elif kind == "all-reduce":
+                    wire = 2 * rb * (gs - 1) / gs
+                else:  # all-to-all
+                    wire = rb * (gs - 1) / gs
+                st.coll_ops += m
+                st.coll_wire_bytes += m * wire
+                if spans:
+                    st.coll_dcn_bytes += m * wire
+                k = st.coll_by_kind.setdefault(kind, [0.0, 0.0])
+                k[0] += m
+                k[1] += m * wire
+    return st
+
+
+# Backwards-compatible wrapper used by earlier code/tests.
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: float = 0.0
+    operand_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    dcn_bytes: float = 0.0
+    by_kind: dict = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(text: str, n_devices: int,
+                      pod_size: int = 0) -> CollectiveStats:
+    st = analyze_hlo(text, pod_size)
+    return CollectiveStats(
+        ops=st.coll_ops, operand_bytes=0.0, wire_bytes=st.coll_wire_bytes,
+        dcn_bytes=st.coll_dcn_bytes,
+        by_kind={k: [v[0], v[1]] for k, v in st.coll_by_kind.items()})
+
+
+# --------------------------------------------------------------------------
+# Roofline terms
+# --------------------------------------------------------------------------
+
+def roofline_terms(cost: dict, mem, hlo: HloStats, hw, chips: int):
+    """Three-term roofline from per-device compiled artifacts.
+
+    flops/bytes use the loop-aware analyzer; raw cost_analysis values ride
+    along for reference (they undercount loop bodies). t_memory_floor is
+    the touch-every-assigned-byte-once bound (args+outputs+temp arena) —
+    the artifact's HBM traffic lower bound; the gap between it and
+    t_memory is re-materialization traffic (XLA-CPU fusion boundaries; a
+    TPU backend / the Pallas kernels keep those tiles in VMEM).
+    """
+    flops_dev = hlo.flops
+    bytes_dev = hlo.bytes_accessed
+    t_compute = flops_dev / hw.peak_flops_bf16
+    t_memory = bytes_dev / hw.hbm_bw
+    arena = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+             + mem.temp_size_in_bytes) if mem is not None else 0
+    t_memory_floor = arena / hw.hbm_bw
+    ici_bw = hw.ici_link_bw * hw.ici_links_per_chip
+    t_coll_ici = (hlo.coll_wire_bytes - hlo.coll_dcn_bytes) / ici_bw
+    t_coll_dcn = hlo.coll_dcn_bytes / hw.dcn_bw
+    t_collective = t_coll_ici + t_coll_dcn
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)], key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "coll_wire_bytes_per_device": hlo.coll_wire_bytes,
+        "coll_dcn_bytes_per_device": hlo.coll_dcn_bytes,
+        "coll_ops": hlo.coll_ops,
+        "coll_by_kind": {k: {"ops": v[0], "wire_bytes": v[1]}
+                         for k, v in hlo.coll_by_kind.items()},
+        "raw_cost_flops": float(cost.get("flops", 0.0)),
+        "raw_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_floor_s": t_memory_floor,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "global_flops": flops_dev * chips,
+        "n_loops": hlo.loops,
+    }

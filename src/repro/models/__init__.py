@@ -1,0 +1,3 @@
+from repro.models import attention, blocks, common, lm, mlp, serve, ssm
+
+__all__ = ["attention", "blocks", "common", "lm", "mlp", "serve", "ssm"]

@@ -1,0 +1,431 @@
+"""Attention: GQA with RoPE/qk-norm/SWA, flash-style chunked kernel,
+sequence-sharded decode with engine flash-combine.
+
+Compute-memory design (TPU): scores never materialize beyond a
+(q_block, kv_block) tile held in fp32 registers/VMEM; the outer structure is
+lax.scan over kv blocks inside lax.map over q blocks, so the compiled body
+is O(blocks) small and the working set is O(q_block * kv_block).
+
+Decode over long caches shards the *sequence* of the KV cache across the TP
+axis; every rank computes all heads over its cache slice, and the partial
+softmax statistics (m, l, acc) are merged across ranks with engine
+collectives — a distributed flash-combine (this is where the collective
+engine touches the 500k-context path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Builder, rms_norm, rope
+from repro.parallel.ops import ParCtx
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = -1e30
+
+
+def padded_heads(cfg: ArchConfig, tp: int) -> int:
+    """Q heads padded to a TP multiple (dead heads are masked out)."""
+    h = cfg.n_heads
+    return ((h + tp - 1) // tp) * tp
+
+
+def kv_layout(cfg: ArchConfig, tp: int):
+    """(kv_heads_local, sharded?) — replicate KV when tp > n_kv.
+
+    KV sharding additionally requires unpadded Q heads, so that the local
+    q-head block aligns with the local kv-head block (GQA grouping).
+    """
+    if (cfg.n_kv_heads >= tp and cfg.n_kv_heads % tp == 0
+            and cfg.n_heads % tp == 0):
+        return cfg.n_kv_heads // tp, True
+    return cfg.n_kv_heads, False
+
+
+def attn_params(b: Builder, cfg: ArchConfig, tp: int):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hp = padded_heads(cfg, tp)
+    _, kv_sharded = kv_layout(cfg, tp)
+    kv_spec = P("data", "model") if kv_sharded else P("data", None)
+    p = {
+        "wq": b.param((d, hp * hd), P("data", "model")),
+        "wk": b.param((d, cfg.n_kv_heads * hd), kv_spec),
+        "wv": b.param((d, cfg.n_kv_heads * hd), kv_spec),
+        "wo": b.param((hp * hd, d), P("model", "data")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = b.param((hd,), P(None), init="ones")
+        p["k_norm"] = b.param((hd,), P(None), init="ones")
+    return p
+
+
+# --------------------------------------------------------------------------
+# Flash-style chunked attention (training / prefill)
+# --------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, window=0,
+                      q_block: int = 512, kv_block: int = 1024,
+                      q_offset=0):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd); H % KV == 0.
+
+    Returns (B, Sq, H, hd). `window` > 0 masks keys older than `window`
+    positions; it may be a traced scalar (0 = unlimited, applied
+    branchlessly so per-layer windows can ride through lax.scan).
+    `q_offset` is the absolute position of q[0] (for caches).
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    nq, nk = sq // qb, skv // kb
+    assert sq % qb == 0 and skv % kb == 0, (sq, qb, skv, kb)
+
+    qr = q.reshape(b, nq, qb, kv, g, hd)
+    kr = k.reshape(b, nk, kb, kv, hd)
+    vr = v.reshape(b, nk, kb, kv, hd)
+    kr = jnp.moveaxis(kr, 1, 0)  # (nk, b, kb, kv, hd)
+    vr = jnp.moveaxis(vr, 1, 0)
+
+    def q_step(qi, qblk):
+        # qblk: (b, qb, kv, g, hd)
+        q_pos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            k_pos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qb, kb), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            # branchless sliding window: 0 means unlimited
+            w = jnp.asarray(window, jnp.int32)
+            eff_w = jnp.where(w > 0, w, jnp.int32(1 << 30))
+            mask &= k_pos[None, :] > q_pos[:, None] - eff_w
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qb), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)  # (b, kv, g, qb, hd)
+
+    outs = jax.lax.map(lambda args: q_step(*args),
+                       (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    # outs: (nq, b, kv, g, qb, hd) -> (b, nq*qb, kv*g, hd)
+    outs = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)
+    return outs.reshape(b, sq, h, hd)
+
+
+# --------------------------------------------------------------------------
+# Flash attention with recompute-style custom VJP
+# --------------------------------------------------------------------------
+#
+# chunked_attention above is the oracle; differentiating it directly makes
+# scan linearization save every (q_block, kv_block) probability tile —
+# O(S^2) residuals, which is what flash attention exists to avoid. The
+# custom_vjp below saves only (q, k, v, out, lse) and recomputes P tiles in
+# the backward block loops (standard flash backward).
+
+def _flash_fwd_blocks(q, k, v, window, *, causal, qb, kb, q_offset):
+    """Returns (out, lse). Shapes as chunked_attention (already grouped):
+    q: (b, nq, qb, kv, g, hd); k, v: (nk, b, kb, kv, hd)."""
+    b, nq, qbs, kv, g, hd = q.shape
+    nk = k.shape[0]
+    scale = 1.0 / math.sqrt(hd)
+    w = jnp.asarray(window, jnp.int32)
+    eff_w = jnp.where(w > 0, w, jnp.int32(1 << 30))
+
+    def q_step(qi, qblk):
+        q_pos = q_offset + qi * qbs + jnp.arange(qbs)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            k_pos = ki * kb + jnp.arange(kb)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qbs, kb), bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            mask &= k_pos[None, :] > q_pos[:, None] - eff_w
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        m0 = jnp.full((b, kv, g, qbs), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qbs), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qbs, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), k, v))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    outs, lses = jax.lax.map(lambda args: q_step(*args),
+                             (jnp.arange(nq), jnp.moveaxis(q, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1), jnp.moveaxis(lses, 0, 1)
+
+
+@functools.lru_cache(maxsize=64)
+def _make_flash(causal: bool, qb: int, kb: int, nq: int, nk: int):
+    """custom_vjp flash attention specialized to static block structure."""
+
+    @jax.custom_vjp
+    def flash(q, k, v, window):
+        out, _ = _flash_fwd_blocks(q, k, v, window, causal=causal, qb=qb,
+                                   kb=kb, q_offset=0)
+        return out
+
+    def fwd(q, k, v, window):
+        out, lse = _flash_fwd_blocks(q, k, v, window, causal=causal, qb=qb,
+                                     kb=kb, q_offset=0)
+        return out, (q, k, v, window, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, window, out, lse = res
+        b, nq_, qbs, kv, g, hd = q.shape
+        scale = 1.0 / math.sqrt(hd)
+        w = jnp.asarray(window, jnp.int32)
+        eff_w = jnp.where(w > 0, w, jnp.int32(1 << 30))
+        doutf = dout.astype(jnp.float32)
+        delta = jnp.sum(doutf * out.astype(jnp.float32), axis=-1)
+
+        def kv_step(dq_full, inp):
+            ki, kblk, vblk = inp
+            k_pos = ki * kb + jnp.arange(kb)
+
+            def q_step(carry, qinp):
+                dkb, dvb, dq_full = carry
+                qi, qblk, doblk, lseblk, dblk = qinp
+                q_pos = qi * qbs + jnp.arange(qbs)
+                s = jnp.einsum("bqkgh,bskh->bkgqs", qblk, kblk,
+                               preferred_element_type=jnp.float32) * scale
+                mask = jnp.ones((qbs, kb), bool)
+                if causal:
+                    mask &= k_pos[None, :] <= q_pos[:, None]
+                mask &= k_pos[None, :] > q_pos[:, None] - eff_w
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                p = jnp.exp(s - lseblk[..., None])          # (b,kv,g,q,s)
+                dv_c = jnp.einsum("bkgqs,bkgqh->bskh", p, doblk)
+                dp = jnp.einsum("bkgqh,bskh->bkgqs", doblk,
+                                vblk.astype(jnp.float32))
+                ds = p * (dp - dblk[..., None]) * scale
+                dq_c = jnp.einsum("bkgqs,bskh->bqkgh", ds,
+                                  kblk.astype(jnp.float32))
+                dk_c = jnp.einsum("bkgqs,bqkgh->bskh", ds,
+                                  qblk.astype(jnp.float32))
+                dq_full = jax.lax.dynamic_update_index_in_dim(
+                    dq_full, dq_full[qi] + dq_c, qi, 0)
+                return (dkb + dk_c, dvb + dv_c, dq_full), None
+
+            dkb0 = jnp.zeros(kblk.shape, jnp.float32)
+            dvb0 = jnp.zeros(vblk.shape, jnp.float32)
+            (dkb, dvb, dq_full), _ = jax.lax.scan(
+                q_step, (dkb0, dvb0, dq_full),
+                (jnp.arange(nq_), jnp.moveaxis(q, 1, 0),
+                 jnp.moveaxis(doutf, 1, 0), jnp.moveaxis(lse, 1, 0),
+                 jnp.moveaxis(delta, 1, 0)))
+            return dq_full, (dkb, dvb)
+
+        dq0 = jnp.zeros((nq_,) + q.shape[:1] + q.shape[2:], jnp.float32)
+        dq_full, (dk, dv) = jax.lax.scan(
+            kv_step, dq0, (jnp.arange(k.shape[0]), k, v))
+        dq = jnp.moveaxis(dq_full, 0, 1).astype(q.dtype)
+        return dq, dk.astype(k.dtype), dv.astype(v.dtype), None
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention(q, k, v, *, causal: bool, window=0,
+                    q_block: int = 512, kv_block: int = 1024):
+    """Memory-efficient attention (training/prefill path).
+
+    Same contract as chunked_attention; O(S) residuals via custom VJP.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    nq, nk = sq // qb, skv // kb
+    assert sq % qb == 0 and skv % kb == 0, (sq, qb, skv, kb)
+    qr = q.reshape(b, nq, qb, kv, g, hd)
+    kr = jnp.moveaxis(k.reshape(b, nk, kb, kv, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kb, kv, hd), 1, 0)
+    fn = _make_flash(causal, qb, kb, nq, nk)
+    out = fn(qr, kr, vr, jnp.asarray(window, jnp.int32))
+    out = out.transpose(0, 1, 4, 2, 3, 5)  # (b,nq,qb,kv,g,hd)->(b,nq,qb,...)
+    return out.reshape(b, sq, h, hd)
+
+
+# --------------------------------------------------------------------------
+# Decode attention (single new token over a cache)
+# --------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, *, slot_positions, cur_pos,
+                     combine_axis: Optional[str] = None, engine=None):
+    """q: (B, H, hd); caches: (B, Sc, KV, hd) (a local slice when
+    combine_axis is set). slot_positions: (Sc,) absolute position held by
+    each cache slot (< 0 = unwritten); slots with position <= cur_pos
+    attend.
+
+    With combine_axis, partial (m, l, acc) merge across the TP group via
+    engine collectives — distributed flash-combine.
+    """
+    b, h, hd = q.shape
+    sc, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, kv, g, hd)
+    mask = (slot_positions >= 0) & (slot_positions <= cur_pos)
+
+    s = jnp.einsum("bkgh,bskh->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+
+    if combine_axis is not None and engine is not None \
+            and engine.mesh.shape[combine_axis] > 1:
+        m_g = engine.allreduce(m, combine_axis, op="max")
+        w = jnp.exp(m - m_g)
+        l = engine.allreduce(l * w, combine_axis)
+        acc = engine.allreduce(acc * w[..., None], combine_axis)
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Full attention layer (projections + cache plumbing)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AttnConfig:
+    causal: bool = True
+    cross: bool = False       # cross-attention (kv from encoder output)
+
+
+def head_mask(cfg: ArchConfig, ctx: ParCtx, local_heads: int, local: bool):
+    """Mask padded Q heads: global head index >= n_heads contributes 0."""
+    hp = padded_heads(cfg, ctx.tp)
+    if hp == cfg.n_heads:
+        return None
+    if local:
+        base = ctx.tp_rank() * local_heads
+        idx = base + jnp.arange(local_heads)
+    else:
+        idx = jnp.arange(hp)
+    return (idx < cfg.n_heads)
+
+
+def attention_block(params, x, cfg: ArchConfig, ctx: ParCtx,
+                    acfg: AttnConfig, positions, kv_source=None,
+                    window=0, q_block=512, kv_block=1024,
+                    return_kv: bool = False):
+    """Training/prefill attention over local Q heads.
+
+    x: (B, S, D) (seq-sharded under SP); kv_source overrides the kv input
+    (cross-attention). Returns (B, S, D)-partial summed via
+    row_parallel_finish.
+    """
+    hd = cfg.resolved_head_dim
+    hp = padded_heads(cfg, ctx.tp)
+    hl = hp // ctx.tp
+    kv_l, kv_sharded = kv_layout(cfg, ctx.tp)
+
+    if kv_source is None:
+        # fused QKV projection: ONE sequence gather / collective matmul
+        # feeds all three heads (a separate gather per projection tripled
+        # SP's wire bytes — see EXPERIMENTS §Perf iteration 1)
+        w_q = ctx.gather_fsdp(params["wq"])
+        w_k = ctx.gather_fsdp(params["wk"])
+        w_v = ctx.gather_fsdp(params["wv"])
+        w_qkv = jnp.concatenate([w_q, w_k, w_v], axis=1)
+        qkv = ctx.col_parallel_matmul(x, w_qkv, pregathered=True)
+        d_q = w_q.shape[1]
+        d_k = w_k.shape[1]
+        q = qkv[..., :d_q]
+        k = qkv[..., d_q:d_q + d_k]
+        v = qkv[..., d_q + d_k:]
+    else:
+        q = ctx.col_parallel_matmul(x, params["wq"])
+        k = ctx.dense(kv_source, params["wk"])
+        v = ctx.dense(kv_source, params["wv"])
+    b, s = q.shape[0], q.shape[1]
+    skv = k.shape[1]
+    q = q.reshape(b, s, hl, hd)
+    k = k.reshape(b, skv, kv_l, hd)
+    v = v.reshape(b, skv, kv_l, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if not acfg.cross:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    # GQA group alignment: local q heads must map onto local kv heads.
+    reps = hl // kv_l if kv_sharded else None
+    if not kv_sharded:
+        # every rank has all kv heads; local q heads belong to global groups
+        # -> bring q to (B,S,KV, hl/KV...) by padding group dim per rank.
+        # Simplest correct mapping: repeat kv to match local q heads.
+        group = max(cfg.n_heads // cfg.n_kv_heads, 1)
+        base = ctx.tp_rank() * hl
+        owner = jnp.clip((base + jnp.arange(hl)) // group, 0,
+                         cfg.n_kv_heads - 1)
+        k = jnp.take(k, owner, axis=2)  # (B, Skv, hl, hd)
+        v = jnp.take(v, owner, axis=2)
+
+    out = flash_attention(q, k, v, causal=acfg.causal, window=window,
+                          q_block=q_block, kv_block=kv_block)
+    hm = head_mask(cfg, ctx, hl, local=True)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    out = out.reshape(b, s, hl * hd)
+    wo = ctx.gather_fsdp(params["wo"], dim=1)
+    y = jnp.einsum("bsf,fd->bsd", out, wo.astype(out.dtype))
+    y = ctx.row_parallel_finish(y)
+    if not return_kv:
+        return y
+    # prefill cache emission, decode layout: seq-shard the cache over the
+    # TP axis when KV heads replicate (the flash-combine decode path),
+    # else keep the full sequence with local KV heads.
+    if (not kv_sharded) and ctx.pcfg.decode_seq_shard and ctx.tp > 1 \
+            and skv % ctx.tp == 0:
+        sl = skv // ctx.tp
+        kc = jax.lax.dynamic_slice_in_dim(k, ctx.tp_rank() * sl, sl, 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, ctx.tp_rank() * sl, sl, 1)
+    else:
+        kc, vc = k, v
+    return y, (kc, vc)

@@ -1,0 +1,230 @@
+"""Transformer blocks per family + stacked-layer scan machinery.
+
+Layers are stacked (L, ...) per param leaf and iterated with lax.scan
+(MaxText-style) so compile time and HLO size stay O(1) in depth — essential
+for lowering 48-layer models on 512 virtual devices. Per-layer
+heterogeneity (hymba's global-attention layers, mixtral's SWA) rides along
+as a scanned (L,) window array consumed branchlessly by the attention mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import AttnConfig, attention_block
+from repro.models.common import Builder, rms_norm
+from repro.parallel.ops import ParCtx
+
+
+def stacked(b: Builder, n: int, fn: Callable):
+    """Build n stacked copies of fn(builder) (params/specs/shapes)."""
+    if b.mode == "init":
+        base = jax.random.fold_in(b.key, b.counter)
+        b.counter += 1
+        keys = jax.random.split(base, n)
+        return jax.vmap(
+            lambda k: fn(Builder("init", key=k, dtype=b.dtype)))(keys)
+    if b.mode == "spec":
+        inner = fn(Builder("spec"))
+        return jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), inner,
+            is_leaf=lambda x: isinstance(x, P))
+    # shape mode: prepend the layer dim, replicated
+    inner_specs = fn(Builder("spec"))
+    inner = fn(Builder("shape", mesh=None, dtype=b.dtype))
+
+    def expand(sd, spec):
+        sharding = None
+        if b.mesh is not None:
+            sharding = jax.sharding.NamedSharding(
+                b.mesh, P(*((None,) + tuple(spec))))
+        return jax.ShapeDtypeStruct((n,) + sd.shape, sd.dtype,
+                                    sharding=sharding)
+
+    return jax.tree.map(expand, inner, inner_specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# --------------------------------------------------------------------------
+# Per-family layer params
+# --------------------------------------------------------------------------
+
+def layer_params(b: Builder, cfg: ArchConfig, tp: int, cross: bool = False,
+                 family: Optional[str] = None):
+    family = family or cfg.family
+    d = cfg.d_model
+    p = {"norm1": b.param((d,), P(None), init="ones")}
+    if family == "ssm":
+        p["ssm"] = ssm_mod.ssm_params(b, cfg, tp)
+        return p
+    p["attn"] = attn_mod.attn_params(b, cfg, tp)
+    p["norm2"] = b.param((d,), P(None), init="ones")
+    if family == "moe":
+        p["moe"] = mlp_mod.moe_params(b, cfg, tp)
+    else:
+        p["mlp"] = mlp_mod.mlp_params(b, cfg)
+    if family == "hybrid":
+        p["ssm"] = ssm_mod.ssm_params(b, cfg, tp)
+        p["norm_attn_out"] = b.param((d,), P(None), init="ones")
+        p["norm_ssm_out"] = b.param((d,), P(None), init="ones")
+    if cross:
+        p["xattn"] = attn_mod.attn_params(b, cfg, tp)
+        p["norm_x"] = b.param((d,), P(None), init="ones")
+    return p
+
+
+# --------------------------------------------------------------------------
+# Forward (training / prefill, no cache)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LayerIO:
+    window: jax.Array = None        # () int32; 0 = full attention
+    positions: jax.Array = None     # (S,)
+    enc_out: jax.Array = None       # encoder output for cross-attn
+
+
+def layer_forward(lp, x, cfg: ArchConfig, ctx: ParCtx, io: LayerIO,
+                  causal: bool = True, family: Optional[str] = None,
+                  collect_cache: bool = False):
+    """One block. Returns (x, moe_probs_or_None, cache_tuple)."""
+    family = family or cfg.family
+    pc = ctx.pcfg
+    aux = None
+    cache = ()
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if family == "ssm":
+        y, (conv, st) = ssm_mod.ssm_mixer(lp["ssm"], h, cfg, ctx)
+        y = checkpoint_name(y, "mixer_out")
+        if collect_cache:
+            cache = (conv, st)
+        return x + y, aux, cache
+
+    acfg = AttnConfig(causal=causal)
+    if family == "hybrid":
+        a_out = attention_block(
+            lp["attn"], h, cfg, ctx, acfg, io.positions, window=io.window,
+            q_block=pc.attn_q_block, kv_block=pc.attn_kv_block,
+            return_kv=collect_cache)
+        if collect_cache:
+            a_out, (kc, vc) = a_out
+        s_out, (conv, st) = ssm_mod.ssm_mixer(lp["ssm"], h, cfg, ctx)
+        if collect_cache:
+            cache = (kc, vc, conv, st)
+        y = 0.5 * (rms_norm(a_out, lp["norm_attn_out"], cfg.norm_eps)
+                   + rms_norm(s_out, lp["norm_ssm_out"], cfg.norm_eps))
+        y = checkpoint_name(y, "mixer_out")
+        x = x + y
+    else:
+        y = attention_block(
+            lp["attn"], h, cfg, ctx, acfg, io.positions, window=io.window,
+            q_block=pc.attn_q_block, kv_block=pc.attn_kv_block,
+            return_kv=collect_cache)
+        if collect_cache:
+            y, (kc, vc) = y
+            cache = (kc, vc)
+        y = checkpoint_name(y, "mixer_out")
+        x = x + y
+
+    if "xattn" in lp:
+        hx = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        y = attention_block(
+            lp["xattn"], hx, cfg, ctx, AttnConfig(causal=False, cross=True),
+            io.positions, kv_source=io.enc_out,
+            q_block=pc.attn_q_block, kv_block=pc.attn_kv_block,
+            return_kv=collect_cache)
+        if collect_cache:
+            y, (xk, xv) = y
+            cache = cache + (xk, xv)
+        x = x + y
+
+    h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+    if family == "moe":
+        y, probs = mlp_mod.moe_block(lp["moe"], h, cfg, ctx,
+                                     pc.moe_capacity_factor)
+        aux = probs
+    else:
+        y = mlp_mod.mlp_block(lp["mlp"], h, cfg, ctx)
+    y = checkpoint_name(y, "mlp_out")
+    return x + y, aux, cache
+
+
+def window_per_layer(cfg: ArchConfig, n_layers: int) -> list:
+    """Per-layer attention window (python ints); 0 = full attention."""
+    w = []
+    for i in range(n_layers):
+        if cfg.sliding_window and i not in cfg.global_attn_layers:
+            w.append(cfg.sliding_window)
+        else:
+            w.append(0)
+    return w
+
+
+def stack_forward(stack_params, x, cfg: ArchConfig, ctx: ParCtx,
+                  positions, *, causal=True, enc_out=None,
+                  family: Optional[str] = None, collect_cache: bool = False):
+    """Scan (or unroll) the layer stack.
+
+    Returns (x, moe_aux_loss, caches) — caches is a per-layer-stacked
+    tuple pytree when collect_cache (prefill), else ().
+    """
+    pc = ctx.pcfg
+    family = family or cfg.family
+    n_layers = cfg.encoder_layers if family == "encoder" else cfg.n_layers
+    fam = "dense" if family == "encoder" else family
+    windows = jnp.asarray(window_per_layer(cfg, n_layers),
+                          jnp.int32)
+
+    def body(x, inp):
+        lp, w = inp
+        io = LayerIO(window=w, positions=positions, enc_out=enc_out)
+        x, aux, cache = layer_forward(lp, x, cfg, ctx, io, causal=causal,
+                                      family=fam,
+                                      collect_cache=collect_cache)
+        if aux is None:
+            a = jnp.zeros((), jnp.float32)
+        else:
+            pe = aux.mean(0)  # (E,) mean router prob per expert
+            a = cfg.n_experts * jnp.sum(pe * pe)  # switch-style balance
+        return x, (a, cache)
+
+    if pc.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif pc.remat == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    elif pc.remat == "names":
+        # save only the block-boundary outputs (bf16, d-width): each
+        # branch's backward recomputes only its own branch
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "mlp_out"),
+            prevent_cse=False)
+
+    if pc.scan_layers:
+        x, (aux_l, caches) = jax.lax.scan(body, x, (stack_params, windows))
+        aux_loss = aux_l.mean()
+    else:
+        aux_terms, cache_list = [], []
+        for i in range(n_layers):
+            lp = jax.tree.map(lambda a: a[i], stack_params)
+            x, (a, c) = body(x, (lp, windows[i]))
+            aux_terms.append(a)
+            cache_list.append(c)
+        aux_loss = jnp.stack(aux_terms).mean()
+        caches = jax.tree.map(lambda *ls: jnp.stack(ls), *cache_list) \
+            if cache_list and cache_list[0] != () else ()
+    return x, aux_loss, caches

@@ -1,0 +1,136 @@
+"""Distributed DLRM inference — the paper's §6 use case, TPU-native.
+
+Paper design (Fig. 15): embedding tables distributed over nodes 1-4,
+FC1 checkerboard-decomposed over 8 nodes, FC2/FC3 pipelined on nodes 9/10,
+all communication through ACCL+ streaming collectives.
+
+TPU mapping over the (data, model) mesh:
+  * tables shard over 'model' (the HBM-capacity argument is identical:
+    50 GB of embeddings > 16 GB HBM/chip) — each rank holds a table slice
+    and serves lookups for its rows (vocab-parallel gather + psum, exactly
+    the embedding-node -> compute-node transmission of partial vectors);
+  * FC1 is checkerboard (row+column) decomposed: columns over 'model'
+    (each rank consumes its slice of the concat vector — the row partition)
+    and the partial products reduce through the engine (the paper's
+    "reduce slave" nodes) — matmul_reduce_scatter = FC1 + reduction fused;
+  * FC2/FC3 column-parallel, batch streams over 'data' (the pipeline axis
+    of nodes 9/10 becomes pure data parallelism — on a TPU mesh the
+    all-reduce fabric replaces the point-to-point pipeline).
+
+Requests are batched along 'data'; the Pallas embedding_gather kernel
+serves the per-rank lookups when use_pallas is on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.dlrm import DLRMConfig
+from repro.models.common import Builder
+from repro.parallel.ops import ParCtx
+
+
+def dlrm_params(b: Builder, cfg: DLRMConfig, tp: int):
+    """Tables stacked (T, rows, dim) sharded over model on rows."""
+    rows = ((cfg.rows_per_table + tp - 1) // tp) * tp
+    concat = cfg.n_tables * cfg.emb_dim
+    p = {
+        "tables": b.param((cfg.n_tables, rows, cfg.emb_dim),
+                          P(None, "model", None), scale=0.01),
+        "fc": [],
+    }
+    dims = (concat,) + tuple(cfg.fc_dims) + (cfg.out_dim,)
+    fcs = []
+    last = len(dims) - 2
+    for i in range(len(dims) - 1):
+        # FC1 checkerboard: in-dim over model (row partition of the concat
+        # vector); middle FCs column-parallel; the tiny head replicates.
+        if i == 0:
+            spec = P("model", None)
+        elif i < last:
+            spec = P(None, "model")
+        else:
+            spec = P(None, None)
+        fcs.append({
+            "w": b.param((dims[i], dims[i + 1]), spec),
+            "b": b.param((dims[i + 1],), P(None), init="zeros"),
+        })
+    p["fc"] = fcs
+    return p
+
+
+def dlrm_specs(cfg: DLRMConfig, tp: int):
+    return dlrm_params(Builder("spec"), cfg, tp)
+
+
+def embedding_lookup(tables, indices, ctx: ParCtx, use_pallas: bool = False):
+    """tables: (T, rows_local, dim) local slice over 'model'; indices:
+    (B, T) global row ids. Returns (B, T*dim) concat vector, replicated.
+
+    Each rank serves the rows it owns (partial vectors), then one engine
+    allreduce assembles the concat vector — the paper's partial-embedding
+    transmission from memory nodes to compute nodes.
+    """
+    t, rows_l, dim = tables.shape
+    tp = ctx.tp
+    lo = ctx.tp_rank() * rows_l
+    local = indices.T - lo                       # (T, B)
+    hit = (local >= 0) & (local < rows_l)
+    safe = jnp.clip(local, 0, rows_l - 1)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        rows = jnp.stack([
+            kops.embedding_gather(tables[i], safe[i]) for i in range(t)])
+    else:
+        rows = jax.vmap(lambda tab, ix: jnp.take(tab, ix, axis=0))(
+            tables, safe)                         # (T, B, dim)
+    rows = jnp.where(hit[..., None], rows, 0.0)
+    vec = jnp.moveaxis(rows, 0, 1).reshape(indices.shape[0], t * dim)
+    if tp > 1:
+        vec = ctx.engine.allreduce(vec, ctx.tp_axis)
+    return vec
+
+
+def dlrm_forward(params, indices, ctx: ParCtx, use_pallas: bool = False):
+    """indices: (B_local, T) -> (B_local, out_dim) click-through logits."""
+    vec = embedding_lookup(params["tables"], indices, ctx, use_pallas)
+    tp = ctx.tp
+    x = vec
+    for i, fc in enumerate(params["fc"]):
+        w, bias = fc["w"], fc["b"]
+        if i == 0 and tp > 1:
+            # checkerboard FC1: row-partitioned input slice x column slice
+            in_l = w.shape[0]
+            x_slice = jax.lax.dynamic_slice_in_dim(
+                x, ctx.tp_rank() * in_l, in_l, 1)
+            if ctx.pcfg.collective_matmul:
+                y = ctx.engine.matmul_reduce_scatter(x_slice, w, ctx.tp_axis)
+                y = ctx.engine.allgather(y, ctx.tp_axis).reshape(
+                    x.shape[0], -1)
+            else:
+                y = jnp.einsum("bi,io->bo", x_slice, w)
+                y = ctx.engine.allreduce(y, ctx.tp_axis)
+        else:
+            y = jnp.einsum("bi,io->bo", x, w)
+            if tp > 1 and 0 < i < len(params["fc"]) - 1:
+                # column-parallel: out-dim sharded; gather for next layer
+                y = ctx.engine.allgather(
+                    y.T, ctx.tp_axis).reshape(-1, x.shape[0]).T
+        y = y + bias
+        x = jax.nn.relu(y) if i < len(params["fc"]) - 1 else y
+    return x
+
+
+def dlrm_reference(params_full, indices):
+    """Single-device oracle on gathered params (tests)."""
+    t = params_full["tables"].shape[0]
+    rows = jnp.stack([params_full["tables"][i][indices[:, i]]
+                      for i in range(t)])
+    x = jnp.moveaxis(rows, 0, 1).reshape(indices.shape[0], -1)
+    n = len(params_full["fc"])
+    for i, fc in enumerate(params_full["fc"]):
+        x = x @ fc["w"] + fc["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,232 @@
+"""LM assembly: embeddings, vocab-parallel loss, train/prefill/decode.
+
+Sharding summary (mesh pod x data x model):
+  embedding/head (V, D): V over 'model' (vocab-parallel), D over 'data'
+  activations: batch over ('pod','data'); optionally seq over 'model' (SP)
+  caches (decode): KV-sequence over 'model' + engine flash-combine, or KV
+  heads over 'model' when n_kv >= tp (whisper)
+
+Loss-scaling contract (see parallel/ops.py): shard_map autodiff sums
+per-rank losses; the head input is always full-sequence and model-axis
+replicated, so local_loss = ce_local_sum / (total_tokens * tp_size).
+MoE aux stats are token-sharded, scaled by 1 / n_ranks_total.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.blocks import layer_params, stack_forward, stacked
+from repro.models.common import Builder, rms_norm, sinusoidal_positions
+from repro.parallel.ops import ParCtx
+
+
+def padded_vocab(cfg: ArchConfig, tp: int) -> int:
+    return ((cfg.vocab_size + tp - 1) // tp) * tp
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+def model_params(b: Builder, cfg: ArchConfig, tp: int):
+    vp = padded_vocab(cfg, tp)
+    d = cfg.d_model
+    p = {
+        "embed": b.param((vp, d), P("model", "data"), scale=0.02),
+        "final_norm": b.param((d,), P(None), init="ones"),
+        "layers": stacked(b, cfg.n_layers,
+                          lambda bb: layer_params(
+                              bb, cfg, tp, cross=bool(cfg.encoder_layers))),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = b.param((vp, d), P("model", "data"), scale=0.02)
+    if cfg.encoder_layers:
+        p["enc_layers"] = stacked(
+            b, cfg.encoder_layers,
+            lambda bb: layer_params(bb, cfg, tp, family="dense"))
+        p["enc_norm"] = b.param((d,), P(None), init="ones")
+    return p
+
+
+def batch_specs(cfg: ArchConfig, kind: str, dp=("pod", "data")):
+    """PartitionSpecs for the input batch pytree. dp=None replicates the
+    batch dim (global batch smaller than the DP group, e.g. B=1 decode)."""
+    if kind == "train":
+        spec = {"tokens": P(dp, None), "labels": P(dp, None)}
+        if cfg.family == "vlm":
+            spec["vis_embed"] = P(dp, None, None)
+        if cfg.encoder_layers:
+            spec["frames"] = P(dp, None, None)
+        return spec
+    if kind == "prefill":
+        spec = {"tokens": P(dp, None)}
+        if cfg.family == "vlm":
+            spec["vis_embed"] = P(dp, None, None)
+        if cfg.encoder_layers:
+            spec["frames"] = P(dp, None, None)
+        return spec
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Embedding + head (vocab-parallel)
+# --------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ArchConfig, ctx: ParCtx):
+    """tokens: (B, S) global ids -> (B, S, D). Vocab-parallel gather+psum."""
+    vp = padded_vocab(cfg, ctx.tp)
+    v_l = vp // ctx.tp
+    emb = ctx.gather_fsdp(params["embed"], dim=1)     # (V_l, D)
+    lo = ctx.tp_rank() * v_l
+    local = tokens - lo
+    hit = (local >= 0) & (local < v_l)
+    rows = jnp.take(emb, jnp.clip(local, 0, v_l - 1), axis=0)
+    rows = jnp.where(hit[..., None], rows, 0)
+    if ctx.tp > 1:
+        rows = ctx.engine.allreduce(rows, ctx.tp_axis)
+    return rows
+
+
+def lm_head_ce(params, x, labels, cfg: ArchConfig, ctx: ParCtx,
+               mask=None):
+    """Vocab-parallel cross-entropy. x: (B, S, D); labels: (B, S) int.
+
+    Returns (ce_sum, token_count) — sums over local batch tokens (the
+    model-replicated partial; caller applies the 1/(T_total*tp) scale).
+    """
+    vp = padded_vocab(cfg, ctx.tp)
+    v_l = vp // ctx.tp
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    w = ctx.gather_fsdp(w, dim=1)                     # (V_l, D)
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))        # (B, S, V_l)
+    # mask padded vocab rows
+    lo = ctx.tp_rank() * v_l
+    vocab_ok = (lo + jnp.arange(v_l)) < cfg.vocab_size
+    logits = jnp.where(vocab_ok[None, None], logits, -1e30)
+
+    # logsumexp stabilizer: gradient-free by identity. The max-allreduce
+    # pins the microcode path even on the native backend: lax.pmax has no
+    # differentiation rule, and stop_gradient alone does not stop jax from
+    # linearizing through it.
+    m_local = jax.lax.stop_gradient(logits.max(-1))
+    if ctx.tp > 1:
+        m = ctx.engine.allreduce(m_local, ctx.tp_axis, op="max",
+                                 algorithm="recursive_doubling"
+                                 if ctx.tp & (ctx.tp - 1) == 0 else "ring")
+    else:
+        m = m_local
+    m = jax.lax.stop_gradient(m)
+    e = jnp.exp(logits - m[..., None])
+    denom = e.sum(-1)
+    if ctx.tp > 1:
+        denom = ctx.engine.allreduce(denom, ctx.tp_axis)
+    lse = jnp.log(denom) + m
+
+    local_label = labels - lo
+    hit = (local_label >= 0) & (local_label < v_l)
+    picked = jnp.take_along_axis(
+        logits, jnp.clip(local_label, 0, v_l - 1)[..., None], axis=-1)[..., 0]
+    picked = jnp.where(hit, picked, 0.0)
+    if ctx.tp > 1:
+        picked = ctx.engine.allreduce(picked, ctx.tp_axis)
+
+    ce = lse - picked                                  # (B, S)
+    if mask is None:
+        mask = (labels >= 0)
+    ce = jnp.where(mask, ce, 0.0)
+    return ce.sum(), mask.sum()
+
+
+def lm_head_sample(params, x, cfg: ArchConfig, ctx: ParCtx):
+    """Greedy next-token over the vocab-parallel head. x: (B, D)."""
+    vp = padded_vocab(cfg, ctx.tp)
+    v_l = vp // ctx.tp
+    w = params["embed"] if cfg.tie_embeddings else params["head"]
+    w = ctx.gather_fsdp(w, dim=1)
+    logits = jnp.einsum("bd,vd->bv", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    lo = ctx.tp_rank() * v_l
+    vocab_ok = (lo + jnp.arange(v_l)) < cfg.vocab_size
+    logits = jnp.where(vocab_ok[None], logits, -1e30)
+    val = logits.max(-1)
+    idx = lo + logits.argmax(-1).astype(jnp.int32)
+    if ctx.tp > 1:
+        best = ctx.engine.allreduce(val, ctx.tp_axis, op="max")
+        cand = jnp.where(val >= best - 1e-6, idx, jnp.int32(2 ** 30))
+        idx = -ctx.engine.allreduce(-cand, ctx.tp_axis, op="max")  # min
+    return idx                                        # (B,)
+
+
+# --------------------------------------------------------------------------
+# Training forward + loss
+# --------------------------------------------------------------------------
+
+def _input_stream(params, batch, cfg: ArchConfig, ctx: ParCtx):
+    """Token embeddings with family-specific prefixes; returns (x, enc_out)."""
+    enc_out = None
+    if cfg.encoder_layers:
+        frames = batch["frames"]                      # (B, S_enc, D) stub
+        s_enc = frames.shape[1]
+        pe = sinusoidal_positions(s_enc, cfg.d_model).astype(frames.dtype)
+        h = frames + pe[None]
+        # the encoder stream is sequence-sharded under SP exactly like the
+        # decoder stream (blocks re-gather at their boundaries)
+        if ctx.pcfg.sequence_parallel and ctx.tp > 1 and s_enc % ctx.tp == 0:
+            sl = s_enc // ctx.tp
+            h = jax.lax.dynamic_slice_in_dim(h, ctx.tp_rank() * sl, sl, 1)
+        h, _, _ = stack_forward(params["enc_layers"], h, cfg, ctx,
+                                jnp.arange(s_enc), causal=False,
+                                family="encoder")
+        h = ctx.sp_allgather_seq(h)   # cross-attention needs full seq
+        enc_out = rms_norm(h, params["enc_norm"], cfg.norm_eps)
+    x = embed_tokens(params, batch["tokens"], cfg, ctx)
+    if cfg.family == "vlm" and "vis_embed" in batch:
+        nv = batch["vis_embed"].shape[1]
+        x = jnp.concatenate(
+            [batch["vis_embed"].astype(x.dtype), x[:, nv:]], axis=1)
+    return x, enc_out
+
+
+def forward(params, batch, cfg: ArchConfig, ctx: ParCtx):
+    """(B, S) tokens -> (B, S, D) final hidden + moe aux."""
+    x, enc_out = _input_stream(params, batch, cfg, ctx)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    if ctx.pcfg.sequence_parallel and ctx.tp > 1 and s % ctx.tp == 0:
+        sl = s // ctx.tp
+        x = jax.lax.dynamic_slice_in_dim(x, ctx.tp_rank() * sl, sl, 1)
+    x, aux, _ = stack_forward(params["layers"], x, cfg, ctx, positions,
+                              causal=True, enc_out=enc_out)
+    x = ctx.sp_allgather_seq(x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: ParCtx,
+            aux_coef: float = 0.01):
+    """Scalar local loss honouring the shard_map sum-of-losses contract."""
+    x, aux = forward(params, batch, cfg, ctx)
+    ce_sum, _ = lm_head_ce(params, x, batch["labels"], cfg, ctx)
+    sizes = dict(ctx.mesh.shape)
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    tp = sizes.get(ctx.pcfg.tp_axis, 1)
+    b_l, s = batch["labels"].shape
+    t_total = b_l * s * dp
+    loss = ce_sum / (t_total * tp)
+    if cfg.family == "moe":
+        loss = loss + aux_coef * aux / (dp * tp)
+    # metrics are globally reduced (out_specs P() reads one rank's value;
+    # a local batch mean would be rank-dependent)
+    ce_global = ce_sum
+    for ax in ("pod", "data"):
+        if sizes.get(ax, 1) > 1:
+            ce_global = ctx.engine.allreduce(ce_global, ax)
+    metrics = {
+        "ce_mean": ce_global / t_total,
+        "aux": aux,
+    }
+    return loss, metrics

@@ -1,0 +1,372 @@
+"""Serving: prefill + single-token decode over sharded caches.
+
+Decode cache layouts (per attention layer):
+  seq-sharded   (B, len/tp, KV, hd) over 'model' — every rank computes all
+                (padded) Q heads on its slice; partial softmax stats merge
+                via engine flash-combine. Used when KV heads replicate
+                (n_kv < tp) — the long-context path (32k/500k cells).
+  head-sharded  (B, len, KV/tp, hd) when n_kv >= tp (whisper MHA).
+  SWA layers    rolling cache of length `window` (slot = pos % W), layout
+                as above; slot->position recovered arithmetically for the
+                mask, so RoPE is applied before caching and slot order
+                never matters.
+
+SSM layers carry (conv_state, ssm_state) — O(1), which is what makes the
+long_500k cells runnable for mamba2/hymba.
+
+The decode layer loop is unrolled (not scanned) because cache shapes vary
+per layer (hymba: 3 global layers at full length, 29 at window length).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    decode_attention, kv_layout, padded_heads,
+)
+from repro.models.blocks import window_per_layer
+from repro.models.common import Builder, rms_norm, rope
+from repro.models.lm import (
+    _input_stream, embed_tokens, lm_head_sample,
+)
+from repro.models.blocks import stack_forward
+from repro.parallel.ops import ParCtx
+
+
+def layer_cache_len(cfg: ArchConfig, layer: int, s_max: int) -> int:
+    w = cfg.sliding_window
+    if w and layer not in cfg.global_attn_layers:
+        return min(w, s_max)
+    return s_max
+
+
+def attn_cache_params(b: Builder, cfg: ArchConfig, tp: int, b_local_axis,
+                      length: int, decode_seq_shard: bool):
+    """Cache leaves for one attention layer."""
+    hd = cfg.resolved_head_dim
+    kv_l, kv_sharded = kv_layout(cfg, tp)
+    dp = b_local_axis
+    if kv_sharded:
+        spec = P(dp, None, "model", None)
+        shape = (None, length, cfg.n_kv_heads, hd)
+    elif decode_seq_shard and tp > 1 and length % tp == 0:
+        spec = P(dp, "model", None, None)
+        shape = (None, length, cfg.n_kv_heads, hd)
+    else:
+        spec = P(dp, None, None, None)
+        shape = (None, length, cfg.n_kv_heads, hd)
+    return shape, spec
+
+
+def make_cache(b: Builder, cfg: ArchConfig, tp: int, batch: int,
+               s_max: int, pcfg, s_enc: int = 0, dp=("pod", "data")):
+    """Full decode-cache pytree (list per layer). Shapes are GLOBAL
+    (shard_map in_specs split them); dp=None replicates the batch dim
+    (the B=1 long-context cells)."""
+    caches = []
+    for layer in range(cfg.n_layers):
+        entry = {}
+        if cfg.has_attention:
+            length = layer_cache_len(cfg, layer, s_max)
+            shp, spec = attn_cache_params(b, cfg, tp, dp, length,
+                                          pcfg.decode_seq_shard)
+            shp = (batch,) + shp[1:]
+            q8 = pcfg.kv_cache_dtype == "int8"
+            kdt = jnp.int8 if q8 else None
+            entry["k"] = b.param(shp, spec, init="zeros", dtype=kdt)
+            entry["v"] = b.param(shp, spec, init="zeros", dtype=kdt)
+            if q8:
+                # one symmetric scale per (slot, kv head) — the unary
+                # compression plugin applied to cache storage
+                sshp, sspec = shp[:3], P(*spec[:3])
+                entry["k_scale"] = b.param(sshp, sspec, init="zeros",
+                                           dtype=jnp.float32)
+                entry["v_scale"] = b.param(sshp, sspec, init="zeros",
+                                           dtype=jnp.float32)
+            if cfg.encoder_layers and s_enc:
+                xshp, xspec = attn_cache_params(b, cfg, tp, dp, s_enc,
+                                                False)
+                xshp = (batch,) + xshp[1:]
+                entry["xk"] = b.param(xshp, xspec, init="zeros")
+                entry["xv"] = b.param(xshp, xspec, init="zeros")
+        if cfg.family in ("ssm", "hybrid"):
+            from repro.models.ssm import padded_ssm_heads
+            nh_p = padded_ssm_heads(cfg, tp)
+            di_l = nh_p * cfg.ssm_head_dim // tp
+            # conv channels are TP-local (x-part sharded, bc-part
+            # replicated); globally the cache is the concat of the
+            # per-rank local states, sharded back out on use.
+            chan_global = tp * (di_l + 2 * cfg.ssm_state)
+            entry["conv"] = b.param(
+                (batch, cfg.ssm_conv - 1, chan_global),
+                P(dp, None, "model" if tp > 1 else None), init="zeros")
+            entry["state"] = b.param(
+                (batch, nh_p, cfg.ssm_state, cfg.ssm_head_dim),
+                P(dp, "model" if tp > 1 else None, None, None),
+                init="zeros", dtype=jnp.float32)
+        caches.append(entry)
+    return caches
+
+
+def prefill_cache_specs(cfg: ArchConfig, pcfg, tp: int, s: int,
+                        dp=("pod", "data")):
+    """out_specs for the layer-stacked caches prefill emits (leading layer
+    dim; uniform full-sequence layout across layers)."""
+    kv_l, kv_sharded = kv_layout(cfg, tp)
+    m = "model" if tp > 1 else None
+    if kv_sharded:
+        kv = P(None, dp, None, "model", None)
+    elif pcfg.decode_seq_shard and tp > 1 and s % tp == 0:
+        kv = P(None, dp, "model", None, None)
+    else:
+        kv = P(None, dp, None, None, None)
+    conv = P(None, dp, None, m)
+    state = P(None, dp, m, None, None)
+    if cfg.family == "ssm":
+        return (conv, state)
+    if cfg.family == "hybrid":
+        return (kv, kv, conv, state)
+    if cfg.encoder_layers:
+        xkv = P(None, dp, None, "model" if kv_sharded else None, None)
+        return (kv, kv, xkv, xkv)
+    return (kv, kv)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def _slot_and_positions(length_total: int, rolling: bool, pos,
+                        local_len: int, rank, tp_sharded: bool):
+    """Write slot + per-slot absolute positions for the mask.
+
+    rolling caches hold the last `length_total` positions at slot
+    p % length_total; slot i therefore holds position
+    pos - ((pos - i) mod length_total) (negative = not yet written).
+    """
+    slot = pos % length_total if rolling else pos
+    base = rank * local_len if tp_sharded else 0
+    idx = base + jnp.arange(local_len)
+    if rolling:
+        slot_pos = pos - ((pos - idx) % length_total)
+    else:
+        slot_pos = idx
+    return slot, slot_pos
+
+
+def attn_decode(lp, h, cache, cfg: ArchConfig, ctx: ParCtx, pos,
+                window: int, s_max: int, cross: bool = False):
+    """h: (B, 1, D) normed input. Returns (y (B,1,D), new cache)."""
+    hd = cfg.resolved_head_dim
+    tp = ctx.tp
+    hp = padded_heads(cfg, tp)
+    hl = hp // tp
+    kv_l, kv_sharded = kv_layout(cfg, tp)
+    bsz = h.shape[0]
+    params = lp["xattn"] if cross else lp["attn"]
+    kname, vname = ("xk", "xv") if cross else ("k", "v")
+
+    q = ctx.dense(h, params["wq"]).reshape(bsz, 1, hl, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+    if not cross:
+        q = rope(q, jnp.asarray(pos)[None], cfg.rope_theta)
+    q = q[:, 0]                                       # (B, hl, hd)
+
+    k_cache, v_cache = cache[kname], cache[vname]
+    local_len = k_cache.shape[1]
+    if cross:
+        # static cross-attention cache: its own length, never seq-sharded
+        length_total = local_len
+        seq_sharded = False
+    else:
+        # mirror make_cache's layout decision exactly
+        length_total = min(window, s_max) if (window and window < s_max) \
+            else s_max
+        seq_sharded = (not kv_sharded) and ctx.pcfg.decode_seq_shard \
+            and tp > 1 and (length_total % tp == 0)
+        assert local_len == (length_total // tp if seq_sharded
+                             else length_total), \
+            (local_len, length_total, seq_sharded)
+
+    quant = (not cross) and k_cache.dtype == jnp.int8
+    k_scale = cache.get("k_scale") if quant else None
+    v_scale = cache.get("v_scale") if quant else None
+
+    def _wr(buf, new, cl, ok):
+        upd = jax.lax.dynamic_update_slice_in_dim(
+            buf, new.astype(buf.dtype), cl, 1)
+        return jnp.where(ok, upd, buf) if seq_sharded else upd
+
+    if not cross:
+        k_new = ctx.dense(h, params["wk"]).reshape(bsz, 1, kv_l, hd)
+        v_new = ctx.dense(h, params["wv"]).reshape(bsz, 1, kv_l, hd)
+        if cfg.qk_norm:
+            k_new = rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+        k_new = rope(k_new, jnp.asarray(pos)[None], cfg.rope_theta)
+        rolling = bool(window) and window < s_max  # cache len == window
+        slot, slot_pos = _slot_and_positions(
+            length_total, rolling, pos, local_len, ctx.tp_rank(),
+            seq_sharded)
+        local_slot = slot - (ctx.tp_rank() * local_len if seq_sharded else 0)
+        ok = (local_slot >= 0) & (local_slot < local_len)
+        cl = jnp.clip(local_slot, 0, local_len - 1)
+        if quant:
+            # int8 KV cache: one symmetric scale per (slot, kv head)
+            def _q(x):
+                s = jnp.maximum(
+                    jnp.max(jnp.abs(x.astype(jnp.float32)), -1) / 127.0,
+                    1e-8)                          # (B, 1, kv)
+                qv = jnp.clip(jnp.round(x.astype(jnp.float32)
+                                        / s[..., None]), -127, 127)
+                return qv.astype(jnp.int8), s
+            kq, ks = _q(k_new)
+            vq, vs = _q(v_new)
+            k_cache = _wr(k_cache, kq, cl, ok)
+            v_cache = _wr(v_cache, vq, cl, ok)
+            k_scale = _wr(k_scale, ks, cl, ok)
+            v_scale = _wr(v_scale, vs, cl, ok)
+        else:
+            k_cache = _wr(k_cache, k_new, cl, ok)
+            v_cache = _wr(v_cache, v_new, cl, ok)
+    else:
+        slot_pos = jnp.arange(local_len)
+        pos = jnp.asarray(2 ** 30)
+
+    # flash-combine path needs all (padded) q heads on every rank
+    if seq_sharded:
+        qf = ctx.engine.allgather(q.transpose(1, 0, 2), ctx.tp_axis)
+        qf = qf.reshape(hp, bsz, hd).transpose(1, 0, 2)   # (B, hp, hd)
+        n_q = hp
+    else:
+        qf = q
+        n_q = hl
+
+    # GQA owner-gather (g=1 einsum)
+    group = max(cfg.n_heads // cfg.n_kv_heads, 1)
+    if kv_sharded:
+        owner = jnp.arange(n_q) // (n_q // k_cache.shape[2])
+    else:
+        base = 0 if seq_sharded else ctx.tp_rank() * hl
+        owner = jnp.clip((base + jnp.arange(n_q)) // group,
+                         0, cfg.n_kv_heads - 1)
+    k_sel = jnp.take(k_cache, owner, axis=2)
+    v_sel = jnp.take(v_cache, owner, axis=2)
+    if quant:
+        # dequantize on read (in VMEM tiles on real TPU; see DESIGN §7b.5)
+        ks_sel = jnp.take(k_scale, owner, axis=2)
+        vs_sel = jnp.take(v_scale, owner, axis=2)
+        k_sel = (k_sel.astype(jnp.float32)
+                 * ks_sel[..., None]).astype(h.dtype)
+        v_sel = (v_sel.astype(jnp.float32)
+                 * vs_sel[..., None]).astype(h.dtype)
+
+    out = decode_attention(
+        qf, k_sel, v_sel, slot_positions=slot_pos, cur_pos=pos,
+        combine_axis=ctx.tp_axis if seq_sharded else None,
+        engine=ctx.engine)
+
+    # mask padded heads, take local rows for the row-parallel o_proj
+    if seq_sharded:
+        head_idx = jnp.arange(hp)
+        out = out * (head_idx < cfg.n_heads)[None, :, None].astype(out.dtype)
+        out = jax.lax.dynamic_slice_in_dim(out, ctx.tp_rank() * hl, hl, 1)
+    else:
+        base = ctx.tp_rank() * hl
+        head_idx = base + jnp.arange(hl)
+        out = out * (head_idx < cfg.n_heads)[None, :, None].astype(out.dtype)
+    out = out.reshape(bsz, 1, hl * hd)
+    wo = ctx.gather_fsdp(params["wo"], dim=1)
+    y = jnp.einsum("bsf,fd->bsd", out, wo.astype(out.dtype))
+    if tp > 1:
+        y = ctx.engine.allreduce(y, ctx.tp_axis)
+    cache = dict(cache)
+    cache[kname], cache[vname] = k_cache, v_cache
+    if quant:
+        cache["k_scale"], cache["v_scale"] = k_scale, v_scale
+    return y, cache
+
+
+def decode_step(params, caches, tokens, pos, cfg: ArchConfig, ctx: ParCtx,
+                s_max: int):
+    """One greedy decode step. tokens: (B, 1); pos: () int32.
+
+    Returns (next_tokens (B,), new caches).
+    """
+    from repro.models import mlp as mlp_mod
+    windows = window_per_layer(cfg, cfg.n_layers)  # python ints
+    x = embed_tokens(params, tokens, cfg, ctx)
+    new_caches = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        cache = caches[i]
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        new_cache = dict(cache)
+        if cfg.family == "ssm":
+            y, (conv, st) = ssm_mod.ssm_mixer(
+                lp["ssm"], h, cfg, ctx, conv_state=cache["conv"],
+                ssm_state=cache["state"], decode=True)
+            new_cache["conv"], new_cache["state"] = conv, st
+            x = x + y
+            new_caches.append(new_cache)
+            continue
+        if cfg.family == "hybrid":
+            a_out, c1 = attn_decode(lp, h, cache, cfg, ctx, pos,
+                                    windows[i], s_max)
+            s_out, (conv, st) = ssm_mod.ssm_mixer(
+                lp["ssm"], h, cfg, ctx, conv_state=cache["conv"],
+                ssm_state=cache["state"], decode=True)
+            new_cache.update(c1)
+            new_cache["conv"], new_cache["state"] = conv, st
+            y = 0.5 * (rms_norm(a_out, lp["norm_attn_out"], cfg.norm_eps)
+                       + rms_norm(s_out, lp["norm_ssm_out"], cfg.norm_eps))
+            x = x + y
+        else:
+            y, new_cache = attn_decode(lp, h, cache, cfg, ctx, pos,
+                                       windows[i], s_max)
+            x = x + y
+        if "xattn" in lp:
+            hx = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+            y, new_cache = attn_decode(lp, hx, new_cache, cfg, ctx, pos,
+                                       0, s_max, cross=True)
+            x = x + y
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = mlp_mod.moe_block(lp["moe"], h2, cfg, ctx,
+                                     ctx.pcfg.moe_capacity_factor,
+                                     dropless=True)
+        else:
+            y = mlp_mod.mlp_block(lp["mlp"], h2, cfg, ctx)
+        x = x + y
+        new_caches.append(new_cache)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    nxt = lm_head_sample(params, x[:, 0], cfg, ctx)
+    return nxt, new_caches
+
+
+# --------------------------------------------------------------------------
+# Prefill
+# --------------------------------------------------------------------------
+
+def prefill(params, batch, cfg: ArchConfig, ctx: ParCtx,
+            collect_cache: bool = True):
+    """Forward over the prompt; emit next token + caches.
+
+    Caches come back layer-stacked in uniform full-sequence layout
+    (scan-friendly; SWA layers included at full length); runtime/serve
+    converts to per-layer decode layouts on handoff.
+    """
+    x, enc_out = _input_stream(params, batch, cfg, ctx)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x, _, caches = stack_forward(params["layers"], x, cfg, ctx, positions,
+                                 causal=True, enc_out=enc_out,
+                                 collect_cache=collect_cache)
+    x = ctx.sp_allgather_seq(x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    nxt = lm_head_sample(params, x[:, -1], cfg, ctx)
+    return nxt, caches

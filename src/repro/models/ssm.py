@@ -1,0 +1,204 @@
+"""Mamba2 / SSD mixer: chunked state-space dual scan + O(1) decode.
+
+TP layout: inner channels (heads x head_dim) shard over 'model'; the shared
+B/C state projections (n_groups=1) replicate; the gated RMSNorm over the
+sharded inner dim reduces its mean-square across TP through the engine.
+
+Chunked SSD (paper Alg. 1 of arXiv:2405.21060): within a chunk the dual
+quadratic form (an L x L decay-masked attention-like product); across chunks
+a lax.scan recurrence over (heads, state, head_dim) states. Decode carries
+(conv window, ssm state) — constant memory, which is why the mamba2/hymba
+cells run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Builder, silu
+from repro.parallel.ops import ParCtx
+
+
+def padded_ssm_heads(cfg: ArchConfig, tp: int) -> int:
+    """SSM heads padded to a TP multiple (hymba: 50 -> 64 on tp=16).
+
+    Padded channels are zero-masked before the gated norm, so they
+    contribute nothing to outputs or gradients (see ssm_mixer)."""
+    nh = cfg.ssm_n_heads
+    return ((nh + tp - 1) // tp) * tp
+
+
+def ssm_params(b: Builder, cfg: ArchConfig, tp: int):
+    d = cfg.d_model
+    nh = padded_ssm_heads(cfg, tp)
+    di = nh * cfg.ssm_head_dim
+    n = cfg.ssm_state
+    cw = cfg.ssm_conv
+    return {
+        # z and x projections are separate params: a concatenated (d, 2*di)
+        # matrix sharded on dim1 would hand each TP rank a misaligned slice
+        # spanning the z|x boundary.
+        "w_z": b.param((d, di), P("data", "model")),
+        "w_x": b.param((d, di), P("data", "model")),
+        "w_bc": b.param((d, 2 * n), P("data", None)),
+        "w_dt": b.param((d, nh), P("data", "model")),
+        "conv_x": b.param((cw, di), P(None, "model"), scale=0.5),
+        "conv_bc": b.param((cw, 2 * n), P(None, None), scale=0.5),
+        "a_log": b.param((nh,), P("model"), init="ssm_a", dtype=jnp.float32),
+        "dt_bias": b.param((nh,), P("model"), init="ssm_dt",
+                           dtype=jnp.float32),
+        "d_skip": b.param((nh,), P("model"), init="ones", dtype=jnp.float32),
+        "norm": b.param((di,), P("model"), init="ones"),
+        "out_proj": b.param((di, d), P("model", "data")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, width cw. x: (B, S, C); w: (cw, C).
+
+    With `state` (B, cw-1, C) uses it as left context and returns
+    (y, new_state) — the decode path.
+    """
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+            for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, a_neg, b_in, c_in, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); dt: (B, S, H) (post-softplus); a_neg: (H,) negative;
+    b_in, c_in: (B, S, N). Returns (y: (B, S, H, P), final state
+    (B, H, N, P)).
+    """
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+
+    xc = xh.reshape(bsz, nc, l, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, l, h).astype(jnp.float32)
+    bc = b_in.reshape(bsz, nc, l, n).astype(jnp.float32)
+    cc = c_in.reshape(bsz, nc, l, n).astype(jnp.float32)
+
+    log_a = dtc * a_neg[None, None, None, :]              # (b,c,l,h) <= 0
+    ll = jnp.cumsum(log_a, axis=2)                        # within-chunk
+    ll_last = ll[:, :, -1:]                               # (b,c,1,h)
+
+    # intra-chunk quadratic form
+    scores = jnp.einsum("bcln,bcsn->bcls", cc, bc)        # (b,c,l,s)
+    decay = ll[:, :, :, None, :] - ll[:, :, None, :, :]   # (b,c,l,s,h)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    m = jnp.where(mask[None, None, :, :, None],
+                  jnp.exp(decay), 0.0) * scores[..., None]
+    xdt = xc * dtc[..., None]                             # (b,c,l,h,p)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", m, xdt)
+
+    # chunk-end states and inter-chunk recurrence
+    decay_to_end = jnp.exp(ll_last - ll)                  # (b,c,l,h)
+    s_chunk = jnp.einsum("bcln,bclh,bclhp->bchnp",
+                         bc, decay_to_end * dtc, xc)
+    a_chunk = jnp.exp(ll_last[:, :, 0])                   # (b,c,h)
+
+    def scan_fn(h_prev, inp):
+        a_c, s_c = inp                                    # (b,h), (b,h,n,p)
+        h_new = a_c[..., None, None] * h_prev + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(s_chunk, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (b,c,h,n,p)
+
+    y_inter = jnp.einsum("bcln,bchnp->bclhp", cc, h_prevs) \
+        * jnp.exp(ll)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y.astype(xh.dtype), h_final
+
+
+def ssm_mixer(params, x, cfg: ArchConfig, ctx: ParCtx, conv_state=None,
+              ssm_state=None, decode: bool = False):
+    """x: (B, S, D) -> (B, S, D). decode=True: S==1, carries required.
+
+    Returns (y, (new_conv_state, new_ssm_state)).
+    """
+    tp = ctx.tp
+    nh_p = padded_ssm_heads(cfg, tp)
+    di_p = nh_p * cfg.ssm_head_dim
+    di_l = di_p // tp
+    nh_l = nh_p // tp
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+
+    x = ctx.sp_allgather_seq(x) if (not decode) else x
+    # fused in-projection: one matmul for z | x | bc | dt
+    w_z = ctx.gather_fsdp(params["w_z"])
+    w_x = ctx.gather_fsdp(params["w_x"])
+    w_bc = ctx.gather_fsdp(params["w_bc"])
+    w_dt = ctx.gather_fsdp(params["w_dt"])
+    w_in = jnp.concatenate([w_z, w_x, w_bc, w_dt], axis=1)
+    zxbd = jnp.einsum("...d,df->...f", x, w_in.astype(x.dtype))
+    o1, o2 = w_z.shape[1], w_z.shape[1] + w_x.shape[1]
+    o3 = o2 + w_bc.shape[1]
+    z, xin, bc, dt_raw = (zxbd[..., :o1], zxbd[..., o1:o2],
+                          zxbd[..., o2:o3], zxbd[..., o3:])
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    # conv weights: x-part is TP-local already (spec shards dim1); bc-part
+    # replicated — concat matches conv_in's channel layout.
+    wc = jnp.concatenate([params["conv_x"], params["conv_bc"]], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, wc, conv_state)
+    conv_out = silu(conv_out)
+    xin = conv_out[..., :di_l]
+    b_in = conv_out[..., di_l:di_l + n]
+    c_in = conv_out[..., di_l + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])
+    a_neg = -jnp.exp(params["a_log"])
+
+    bsz, s = xin.shape[0], xin.shape[1]
+    xh = xin.reshape(bsz, s, nh_l, p)
+
+    if decode:
+        a_step = jnp.exp(dt[:, 0] * a_neg[None])            # (B, nh_l)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", b_in[:, 0].astype(jnp.float32),
+                         dt[:, 0], xh[:, 0].astype(jnp.float32))
+        new_ssm = a_step[..., None, None] * ssm_state + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_in[:, 0].astype(jnp.float32),
+                       new_ssm)[:, None]
+    else:
+        y, new_ssm = _ssd_chunked(xh, dt, a_neg, b_in, c_in, cfg.ssm_chunk)
+
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di_l).astype(x.dtype)
+    y = y * silu(z)
+    # zero padded channels (hymba: heads padded to a TP multiple) so they
+    # never reach the norm statistics, outputs, or gradients
+    ch = ctx.tp_rank() * di_l + jnp.arange(di_l)
+    live = ch < cfg.ssm_d_inner
+    y = y * live[None, None, :].astype(y.dtype)
+    # gated RMSNorm over the REAL inner width (cross-TP mean-square)
+    yf = y.astype(jnp.float32)
+    ss = jnp.sum(yf * yf, axis=-1, keepdims=True)
+    if tp > 1:
+        ss = ctx.engine.allreduce(ss, ctx.tp_axis)
+    ms = ss / cfg.ssm_d_inner
+    y = (yf * jax.lax.rsqrt(ms + cfg.norm_eps)
+         * params["norm"].astype(jnp.float32)[None, None]).astype(x.dtype)
+    wo = ctx.gather_fsdp(params["out_proj"], dim=1)
+    out = jnp.einsum("bsf,fd->bsd", y, wo.astype(y.dtype))
+    out = ctx.row_parallel_finish(out) if not decode \
+        else (ctx.engine.allreduce(out, ctx.tp_axis) if tp > 1 else out)
+    return out, (new_conv, new_ssm)

@@ -1,0 +1,10 @@
+from repro.optim.adamw import (
+    AdamWConfig, adamw_init, adamw_update, apply_updates,
+    global_norm, clip_by_global_norm,
+)
+from repro.optim.schedules import cosine_warmup, linear_warmup
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "apply_updates",
+    "global_norm", "clip_by_global_norm", "cosine_warmup", "linear_warmup",
+]

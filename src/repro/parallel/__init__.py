@@ -1,0 +1,6 @@
+# stages is intentionally NOT imported here: it pulls in the model zoo and
+# would create a models <-> parallel import cycle. Import it directly:
+# `from repro.parallel import stages`.
+from repro.parallel.ops import ParCtx, spec_axes
+
+__all__ = ["ParCtx", "spec_axes"]

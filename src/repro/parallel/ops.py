@@ -1,0 +1,137 @@
+"""Sharded linear algebra through the CollectiveEngine.
+
+Every TP/FSDP communication pattern used by the models lives here, so the
+collective engine (paper contribution) is the single chokepoint for all
+model communication:
+
+  gather_fsdp          ZeRO-3 weight all-gather at use (VJP = reduce-scatter
+                       over the same ring — verified to produce data-summed
+                       shard gradients)
+  row_parallel_finish  psum (baseline) or seq reduce-scatter (SP)
+  sp_allgather_seq     SP re-gather of sequence-sharded activations
+  col_parallel_matmul  optionally the streaming collective matmul
+
+Gradient semantics (empirically validated, see tests/test_grad_semantics.py):
+shard_map autodiff differentiates the SUM of per-rank local losses, so a
+loss replicated over the TP axis must be pre-scaled by 1/tp_size, and each
+param's gradient must be psum'd over every mesh axis absent from its
+PartitionSpec (runtime/grad_sync).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ParallelConfig
+from repro.core.engine import CollectiveEngine
+
+
+@dataclasses.dataclass
+class ParCtx:
+    """Per-step parallel context threaded through all layers."""
+
+    engine: CollectiveEngine
+    pcfg: ParallelConfig
+    mesh: jax.sharding.Mesh
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape.get(self.pcfg.tp_axis, 1)
+
+    @property
+    def fsdp(self) -> int:
+        if self.pcfg.serving:
+            return 1  # serving layout: weights replicated over 'data'
+        return self.mesh.shape.get(self.pcfg.fsdp_axis, 1)
+
+    @property
+    def tp_axis(self) -> str:
+        return self.pcfg.tp_axis
+
+    @property
+    def fsdp_axis(self) -> str:
+        return self.pcfg.fsdp_axis
+
+    def tp_rank(self):
+        return jax.lax.axis_index(self.pcfg.tp_axis) if self.tp > 1 else 0
+
+    # -- FSDP ---------------------------------------------------------------
+    def gather_fsdp(self, w, dim: int = 0):
+        """All-gather a ZeRO-3-sharded weight along `dim` for use."""
+        if self.fsdp == 1:
+            return w
+        if dim != 0:
+            w = jnp.moveaxis(w, dim, 0)
+        shape = (w.shape[0] * self.fsdp,) + w.shape[1:]
+        out = self.engine.allgather(w, self.fsdp_axis).reshape(shape)
+        if dim != 0:
+            out = jnp.moveaxis(out, 0, dim)
+        return out
+
+    # -- TP epilogues/prologues ----------------------------------------------
+    def row_parallel_finish(self, y_partial, seq_dim: int = 1):
+        """Finish a row-parallel matmul: psum over TP, or — under sequence
+        parallelism — reduce-scatter the sequence dim (engine ring RS)."""
+        if self.tp == 1:
+            return y_partial
+        if self.pcfg.sequence_parallel and y_partial.shape[seq_dim] % self.tp == 0:
+            y = jnp.moveaxis(y_partial, seq_dim, 0)
+            lead = y.shape[0]
+            flat = y.reshape(lead, -1)
+            shard = self.engine.reduce_scatter(flat.reshape(-1), self.tp_axis)
+            y = shard.reshape(lead // self.tp, *y.shape[1:])
+            return jnp.moveaxis(y, 0, seq_dim)
+        return self.engine.allreduce(y_partial, self.tp_axis)
+
+    def sp_allgather_seq(self, x, seq_dim: int = 1):
+        """SP prologue: re-gather sequence-sharded activations over TP."""
+        if self.tp == 1 or not self.pcfg.sequence_parallel:
+            return x
+        y = jnp.moveaxis(x, seq_dim, 0)
+        flat = self.engine.allgather(y, self.tp_axis)
+        y = flat.reshape((self.tp * y.shape[0],) + y.shape[1:])
+        return jnp.moveaxis(y, 0, seq_dim)
+
+    def dense(self, x, w, fsdp_dim: int = 0):
+        """x @ gather(w); the workhorse projection."""
+        w = self.gather_fsdp(w, fsdp_dim)
+        return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+    def col_parallel_matmul(self, x, w, fsdp_dim: int = 0, seq_dim: int = 1,
+                            pregathered: bool = False):
+        """Column-parallel projection. Under SP + collective_matmul, the
+        sequence all-gather is fused with the matmul (streaming collective,
+        paper Listing 2); otherwise gather-then-matmul. `pregathered`
+        skips the FSDP gather (fused multi-projection weights)."""
+        if not pregathered:
+            w = self.gather_fsdp(w, fsdp_dim)
+        if (self.pcfg.sequence_parallel and self.pcfg.collective_matmul
+                and self.tp > 1):
+            b = x.shape[0]
+            xt = jnp.moveaxis(x, seq_dim, 1) if seq_dim != 1 else x
+            s_l, d = xt.shape[1], xt.shape[-1]
+            # fold batch into rows rank-consistently: rows cycle seq-major
+            x2 = xt.reshape(b * s_l, d)
+            y2 = self.engine.allgather_matmul(x2, w.astype(x.dtype),
+                                              self.tp_axis)
+            y = y2.reshape(self.tp, b, s_l, -1).transpose(1, 0, 2, 3)
+            y = y.reshape(b, self.tp * s_l, -1)
+            return jnp.moveaxis(y, 1, seq_dim) if seq_dim != 1 else y
+        x = self.sp_allgather_seq(x, seq_dim)
+        return jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+
+
+def spec_axes(spec: P) -> set:
+    """Mesh axes appearing anywhere in a PartitionSpec."""
+    axes = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, (tuple, list)):
+            axes.update(entry)
+        else:
+            axes.add(entry)
+    return axes

@@ -1,0 +1,120 @@
+"""Serving session: prefill -> decode cache handoff.
+
+prefill emits layer-stacked caches in a uniform full-prompt-length layout
+(scan-friendly); decode wants per-layer caches at s_max with SWA windows
+rolled. The conversion works on GLOBAL array views (device_get ->
+rearrange -> device_put with the decode specs), which is exactly what a
+serving frontend does between the two compiled programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ParallelConfig
+from repro.models.blocks import window_per_layer
+from repro.models.serve import layer_cache_len
+from repro.parallel import stages
+
+
+def convert_prefill_caches(prefill_caches, cfg: ArchConfig,
+                           pcfg: ParallelConfig, mesh, tp: int,
+                           batch: int, s_prompt: int, s_max: int,
+                           s_enc: int = 0):
+    """Rearrange prefill's stacked caches into decode's per-layer layout."""
+    windows = window_per_layer(cfg, cfg.n_layers)
+    dp = stages.dp_axes(mesh, batch)
+    decode_specs = stages.cache_specs(cfg, pcfg, tp, s_max, s_enc=s_enc,
+                                      dp=dp)
+    host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                        prefill_caches)
+
+    def attn_pair(k_all, v_all, layer):
+        length = layer_cache_len(cfg, layer, s_max)
+        k_l, v_l = k_all[layer], v_all[layer]        # (B, S_p, KV, hd)
+        out_k = np.zeros((batch, length) + k_l.shape[2:], k_l.dtype)
+        out_v = np.zeros_like(out_k)
+        w = windows[layer]
+        if w and w < s_max:
+            # rolling window: position p lives at slot p % length
+            take = min(length, s_prompt)
+            src = k_l[:, s_prompt - take:s_prompt]
+            pos = np.arange(s_prompt - take, s_prompt)
+            out_k[:, pos % length] = src
+            out_v[:, pos % length] = v_l[:, s_prompt - take:s_prompt]
+        else:
+            out_k[:, :s_prompt] = k_l[:, :s_prompt]
+            out_v[:, :s_prompt] = v_l[:, :s_prompt]
+        return out_k, out_v
+
+    caches = []
+    if cfg.family == "ssm":
+        conv_all, state_all = host
+        for layer in range(cfg.n_layers):
+            caches.append({"conv": conv_all[layer],
+                           "state": state_all[layer]})
+    elif cfg.family == "hybrid":
+        k_all, v_all, conv_all, state_all = host
+        for layer in range(cfg.n_layers):
+            k, v = attn_pair(k_all, v_all, layer)
+            caches.append({"k": k, "v": v, "conv": conv_all[layer],
+                           "state": state_all[layer]})
+    elif cfg.encoder_layers:
+        k_all, v_all, xk_all, xv_all = host
+        for layer in range(cfg.n_layers):
+            k, v = attn_pair(k_all, v_all, layer)
+            caches.append({"k": k, "v": v, "xk": xk_all[layer],
+                           "xv": xv_all[layer]})
+    else:
+        k_all, v_all = host
+        for layer in range(cfg.n_layers):
+            k, v = attn_pair(k_all, v_all, layer)
+            caches.append({"k": k, "v": v})
+
+    return jax.tree.map(
+        lambda x, sp: jax.device_put(np.asarray(x),
+                                     NamedSharding(mesh, sp)),
+        caches, decode_specs,
+        is_leaf=lambda x: isinstance(x, np.ndarray))
+
+
+@dataclasses.dataclass
+class ServeSession:
+    """Compiled prefill + decode pair with automatic cache handoff."""
+
+    cfg: ArchConfig
+    pcfg: ParallelConfig
+    mesh: object
+    tp: int
+    batch: int
+    s_prompt: int
+    s_max: int
+
+    def __post_init__(self):
+        # handoff requires the uniform (non-quantized) cache dtype
+        assert self.pcfg.kv_cache_dtype == "param", \
+            "int8 caches are decode-internal; prefill emits param dtype"
+        self.prefill_fn, _, _, _ = stages.build_prefill(
+            self.cfg, self.pcfg, self.mesh, self.batch, self.s_prompt)
+        self.decode_fn, _, _, _ = stages.build_decode_step(
+            self.cfg, self.pcfg, self.mesh, s_max=self.s_max,
+            global_batch=self.batch)
+
+    def generate(self, params, tokens, n_new: int):
+        """tokens: (B, s_prompt) -> (B, n_new) greedy continuation."""
+        nxt, pf_caches = self.prefill_fn(params, {"tokens": tokens})
+        caches = convert_prefill_caches(
+            pf_caches, self.cfg, self.pcfg, self.mesh, self.tp,
+            self.batch, self.s_prompt, self.s_max)
+        out = [np.asarray(nxt)]
+        tok = jnp.asarray(np.asarray(nxt)[:, None], jnp.int32)
+        for i in range(n_new - 1):
+            nxt, caches = self.decode_fn(params, caches, tok,
+                                         jnp.int32(self.s_prompt + i))
+            out.append(np.asarray(nxt))
+            tok = jnp.asarray(np.asarray(nxt)[:, None], jnp.int32)
+        return np.stack(out, axis=1)

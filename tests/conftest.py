@@ -1,0 +1,37 @@
+"""Test fixtures.
+
+NOTE on device count: collective-engine correctness tests fundamentally
+need multiple ranks, so we use 8 virtual host devices here — NOT the 512
+of the production dry-run (launch/dryrun.py is the only place that sets
+512). Smoke tests run tiny configs on (1,1,1)/(2,2,2) sub-meshes of these
+8, so they see effectively single-device workloads.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh222():
+    from repro.core.topology import make_mesh
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh111():
+    from repro.core.topology import make_mesh
+    return make_mesh((1, 1, 1), ("pod", "data", "model"))
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    from repro.core.topology import make_mesh
+    return make_mesh((8,), ("x",))
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,56 @@
+"""Algorithm/protocol selector behaviour (paper Table 1 / Fig 12)."""
+from repro.core import Communicator, Selector
+
+
+def test_small_message_prefers_low_latency():
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    c = sel.choose("allreduce", 1024, comm)
+    assert c.algorithm in ("recursive_doubling",), c
+    # latency-optimal: log(n) steps
+    assert c.schedule.n_steps() == 3
+
+
+def test_large_message_prefers_bandwidth_optimal():
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    c = sel.choose("allreduce", 64 << 20, comm)
+    assert c.algorithm in ("ring", "bidi_ring", "halving_doubling")
+    assert c.schedule.bytes_on_wire(1.0) <= 2.0  # <= 2(n-1)/n + eps
+
+
+def test_eager_only_below_rx_pool():
+    sel = Selector(eager_max_bytes=4096)
+    comm = Communicator(axis="x", size=8)
+    small = sel.choose("bcast", 1024, comm)
+    large = sel.choose("bcast", 1 << 20, comm)
+    assert large.protocol == "rendezvous"
+    assert small.predicted_s <= large.predicted_s
+
+
+def test_runtime_tuning_override():
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    auto = sel.choose("allreduce", 1 << 20, comm)
+    sel.set_tuning("allreduce", "recursive_doubling")
+    tuned = sel.choose("allreduce", 1 << 20, comm)
+    assert tuned.algorithm == "recursive_doubling"
+    assert auto.algorithm != "recursive_doubling"
+
+
+def test_reduce_switches_algorithm_with_size():
+    """Fig 12: all-to-one for small messages, tree for large."""
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    small = sel.choose("reduce", 8 << 10, comm)
+    large = sel.choose("reduce", 8 << 20, comm)
+    assert small.predicted_s < large.predicted_s
+    assert large.algorithm == "binomial_tree"
+
+
+def test_nonpow2_excludes_hypercube():
+    sel = Selector()
+    comm = Communicator(axis="x", size=6)
+    for size in (1024, 1 << 20):
+        c = sel.choose("allreduce", size, comm)
+        assert c.algorithm in ("ring", "bidi_ring")
