@@ -26,8 +26,28 @@ def timeit(fn, *args, warmup=2, iters=10):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+# Machine-readable mirror of everything row() prints, plus structured
+# records benchmarks attach directly (segment sweeps). run.py serializes
+# this into BENCH_collectives.json so the perf trajectory is diffable
+# across PRs.
+RESULTS = {"rows": [], "segment_sweep": []}
+
+
 def row(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}")
+    RESULTS["rows"].append(
+        {"name": name, "us_per_call": round(float(us), 3),
+         "derived": derived})
+
+
+def record_sweep(entry: dict):
+    """Attach one structured segment-sweep record (see figures.seg_sweep)."""
+    RESULTS["segment_sweep"].append(entry)
+
+
+def reset_results():
+    RESULTS["rows"].clear()
+    RESULTS["segment_sweep"].clear()
 
 
 def header():

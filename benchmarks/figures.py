@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import row, timeit
+from benchmarks.common import record_sweep, row, timeit
 from repro.core import CollectiveEngine, Communicator, Selector
 from repro.core.hw_spec import ACCL_CLUSTER, TPU_V5E
 from repro.core.topology import make_mesh
@@ -133,6 +133,63 @@ def fig12_scaling():
             row(f"fig12/reduce/{label}/{n}ranks", preds[c.algorithm],
                 f"selected={c.algorithm} " +
                 " ".join(f"{k}={v:.1f}us" for k, v in preds.items()))
+
+
+# -- Segment sweep: pipelined protocol (paper §4.4.3 / Fig 10 knob) -----------
+
+def seg_sweep(segment_counts=None, nranks: int = 8,
+              sizes=(1 << 16, 1 << 20, 1 << 22, 1 << 24, 1 << 26)):
+    """Alpha-beta time vs wire segment count, per collective and size.
+
+    Pure model (no device timing): this is the paper's Rx-buffer-size
+    latency knob (arXiv 2403.18374 shows it dominating collective latency
+    at scale). Emits one printed row per (collective, size) with the best
+    segment count, and one structured record per (collective, size,
+    segments) into BENCH_collectives.json. Pipelining must strictly
+    dominate the 1-segment baseline for every message >= 1 MiB.
+    """
+    if segment_counts is None:
+        # price the ladder the selector actually picks from
+        segment_counts = Selector.DEFAULT_SEGMENT_CANDIDATES
+    # the 1-segment baseline is always priced: dominance is relative to it
+    segment_counts = sorted(set(int(k) for k in segment_counts) | {1})
+    comm = Communicator(axis="x", size=nranks)
+    sel = Selector()
+    for coll in ("allreduce", "reduce_scatter", "allgather"):
+        for nbytes in sizes:
+            choice = sel.choose(coll, nbytes, comm)
+            sched = choice.schedule
+            # whether the selector would ever auto-segment this schedule
+            # at this size (copy-only schedules and sub-floor messages
+            # never are) — single source of truth: admissible_segments
+            auto_ok = sel.admissible_segments(sched, nbytes) != (1,)
+            copy_only = all(s.op == "copy" for s in sched.steps)
+            why_not = "copy-only" if copy_only else "below-floor"
+            times = {}
+            for k in segment_counts:
+                t = sched.predict_time(nbytes, comm.hop_latency,
+                                       comm.link_bw, segments=k)
+                times[k] = t
+                record_sweep({
+                    "collective": coll,
+                    "algorithm": choice.algorithm,
+                    "protocol": choice.protocol,
+                    "nranks": nranks,
+                    "msg_bytes": int(nbytes),
+                    "segments": int(k),
+                    "predicted_s": t,
+                    "selected": k == choice.segments,
+                    "auto_segmentable": auto_ok,
+                })
+            best_k = min(times, key=times.get)
+            dominated = times[best_k] < times[1]
+            row(f"segsweep/{coll}/{nbytes>>10}KB/{nranks}ranks",
+                times[best_k] * 1e6,
+                f"algo={choice.algorithm} best_segments={best_k} "
+                f"t1={times[1]*1e6:.1f}us "
+                f"speedup={times[1]/times[best_k]:.2f}x "
+                f"dominates={dominated}"
+                + ("" if auto_ok else f" auto=1seg({why_not})"))
 
 
 # -- Fig 13: engine vs baseline (ACCL+ vs ACCL vs MPI analogue) ---------------

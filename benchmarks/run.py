@@ -1,24 +1,110 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Wall-clock columns are host-CPU
-relative numbers; `derived` carries the alpha-beta model for the paper's
-cluster and the TPU target (quoted in EXPERIMENTS.md).
+Prints ``name,us_per_call,derived`` CSV and writes the same data (plus the
+structured segment sweep) to a machine-readable JSON file so the perf
+trajectory is tracked across PRs. See benchmarks/README.md.
 """
-from benchmarks.common import header
+import argparse
+import json
+
+from benchmarks.common import RESULTS, header, reset_results
+
+DEFAULT_JSON = "BENCH_collectives.json"
 
 
-def main() -> None:
+def _parse_segments(text: str):
+    return tuple(int(t) for t in text.split(",") if t)
+
+
+def _selector_default_segments():
+    from repro.core import Selector
+    return Selector.DEFAULT_SEGMENT_CANDIDATES
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="Run the paper-figure benchmarks and the segment sweep.")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="where to write the machine-readable results "
+                         f"(default: {DEFAULT_JSON} for full runs; with "
+                         "--only no file is written unless --json is "
+                         "given explicitly; empty string disables)")
+    ap.add_argument("--only", default=None, metavar="NAME",
+                    help="run a single benchmark (e.g. fig10_collectives, "
+                         "seg_sweep) instead of the full set")
+    default_segments = ",".join(
+        str(k) for k in _selector_default_segments())
+    ap.add_argument("--segments", default=default_segments,
+                    metavar="K1,K2,...",
+                    help="segment counts the sweep prices "
+                         f"(default: the selector's ladder, "
+                         f"{default_segments})")
+    ap.add_argument("--sweep-ranks", type=int, default=8,
+                    help="communicator size for the segment sweep")
+    args = ap.parse_args(argv)
+    if args.json is None:
+        # a partial run must not clobber the full tracked results file
+        args.json = "" if args.only else DEFAULT_JSON
+
     from benchmarks import figures
+    reset_results()
     header()
-    figures.fig07_sendrecv()
-    figures.fig08_invocation()
-    figures.fig10_collectives(h2h=False)
-    figures.fig10_collectives(h2h=True)
-    figures.fig12_scaling()
-    figures.fig13_backend_compare()
-    figures.fig16_vecmat()
-    figures.fig17_dlrm()
-    figures.table3_resources()
+
+    try:
+        sweep_counts = _parse_segments(args.segments)
+    except ValueError:
+        ap.error(f"--segments must be comma-separated integers, "
+                 f"got {args.segments!r}")
+    if not sweep_counts:
+        ap.error("--segments needs at least one count, e.g. --segments 1,4")
+    if any(k < 1 for k in sweep_counts):
+        ap.error(f"--segments counts must be >= 1, got {args.segments!r}")
+
+    def seg_sweep():
+        figures.seg_sweep(segment_counts=sweep_counts,
+                          nranks=args.sweep_ranks)
+
+    benches = {
+        "fig07_sendrecv": figures.fig07_sendrecv,
+        "fig08_invocation": figures.fig08_invocation,
+        "fig10_collectives": lambda: (figures.fig10_collectives(h2h=False),
+                                      figures.fig10_collectives(h2h=True)),
+        "fig12_scaling": figures.fig12_scaling,
+        "fig13_backend_compare": figures.fig13_backend_compare,
+        "seg_sweep": seg_sweep,
+        "fig16_vecmat": figures.fig16_vecmat,
+        "fig17_dlrm": figures.fig17_dlrm,
+        "table3_resources": figures.table3_resources,
+    }
+    if args.only is not None:
+        if args.only not in benches:
+            ap.error(f"unknown benchmark {args.only!r}; "
+                     f"have {sorted(benches)}")
+        benches = {args.only: benches[args.only]}
+    for fn in benches.values():
+        fn()
+
+    results = {
+        "meta": _meta(),
+        "rows": list(RESULTS["rows"]),
+        "segment_sweep": list(RESULTS["segment_sweep"]),
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"# wrote {args.json}: {len(results['rows'])} rows, "
+              f"{len(results['segment_sweep'])} sweep points")
+    return results
+
+
+def _meta() -> dict:
+    import jax
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
 
 
 if __name__ == "__main__":

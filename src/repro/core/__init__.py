@@ -6,6 +6,7 @@ Public API:
     Communicator       rank group over a mesh axis
     Schedule/Step/Sel  microcode IR
 """
+from repro.core import compat  # installs the jax.shard_map polyfill first
 from repro.core.engine import CollectiveEngine, interpret_schedule
 from repro.core.selector import Selector, Choice
 from repro.core.topology import Communicator, axis_comm, make_mesh
@@ -17,4 +18,5 @@ __all__ = [
     "CollectiveEngine", "interpret_schedule", "Selector", "Choice",
     "Communicator", "axis_comm", "make_mesh", "Schedule", "Step", "Sel",
     "HwSpec", "TPU_V5E", "ACCL_CLUSTER", "algorithms", "plugins", "simulator",
+    "compat",
 ]

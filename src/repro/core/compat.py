@@ -1,0 +1,65 @@
+"""jax version compatibility shims.
+
+The repo targets the modern `jax.shard_map(..., check_vma=...)` API, but the
+pinned toolchain ships jax 0.4.x where shard_map still lives at
+`jax.experimental.shard_map.shard_map` and the replication-check kwarg is
+named `check_rep`. This module resolves whichever implementation exists and
+normalizes the kwarg rename, then installs the wrapper as `jax.shard_map`
+when the attribute is missing so call sites written against the modern API
+(tests, benchmarks, examples) run unchanged on either version.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+_NATIVE = getattr(jax, "shard_map", None)
+
+if _NATIVE is not None:
+    _IMPL = _NATIVE
+else:
+    from jax.experimental.shard_map import shard_map as _IMPL  # type: ignore
+
+_IMPL_PARAMS = inspect.signature(_IMPL).parameters
+# Which replication-check kwarg the resolved implementation understands.
+_CHECK_KW = ("check_vma" if "check_vma" in _IMPL_PARAMS
+             else "check_rep" if "check_rep" in _IMPL_PARAMS
+             else None)
+
+
+@functools.wraps(_IMPL)
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              check_rep=None, **kwargs):
+    """`jax.shard_map` with the `check_vma`/`check_rep` rename absorbed.
+
+    Accepts either kwarg spelling (first non-None wins) and forwards it
+    under whatever name the installed jax understands; drops it entirely
+    on versions with neither.
+    """
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check
+    return _IMPL(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                 **kwargs)
+
+
+if _NATIVE is None:
+    # Polyfill: let `jax.shard_map(...)` / `from jax import shard_map`
+    # call sites work on 0.4.x once repro is imported.
+    jax.shard_map = shard_map
+
+
+if not hasattr(jax.tree, "flatten_with_path"):
+    # jax 0.4.x keeps the *_with_path helpers in jax.tree_util only.
+    import jax.tree_util as _tu
+
+    def _flatten_with_path(tree, is_leaf=None):
+        return _tu.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+    def _map_with_path(f, tree, *rest, is_leaf=None):
+        return _tu.tree_map_with_path(f, tree, *rest, is_leaf=is_leaf)
+
+    jax.tree.flatten_with_path = _flatten_with_path
+    jax.tree.map_with_path = _map_with_path

@@ -23,8 +23,10 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.core import plugins
 from repro.core.algorithms import GENERATORS
@@ -86,18 +88,45 @@ def _place(buf, chunks: int, sel: Sel, rank, s_idx: int, incoming, op: str,
     raise ValueError(sel.kind)
 
 
+def _recv_region(buf, chunks: int, sel: Sel, rank, s_idx: int):
+    """(view, elem_offset) of the region `recv_sel` will write.
+
+    The view is exactly `_select`'s slice (one decode path for both the
+    segmented and unsegmented interpreter); elem_offset is None for
+    SEL_ALL (whole buffer). SEL_MASK selectors are not contiguous regions
+    and return (None, None)."""
+    if sel.kind not in (SEL_ALL, SEL_CHUNK, SEL_RANGE):
+        return None, None
+    csize = buf.shape[0] // chunks
+    if sel.kind == SEL_ALL:
+        off = None
+    elif sel.kind == SEL_CHUNK:
+        off = sel.fn(rank, s_idx) * csize
+    else:
+        off = sel.fn(rank, s_idx)[0] * csize
+    return _select(buf, chunks, sel, rank, s_idx), off
+
+
 def interpret_schedule(schedule: Schedule, buf, axis: str, *,
                        compression: Optional[str] = None,
-                       use_pallas: bool = False):
+                       use_pallas: bool = False,
+                       segments: Optional[int] = None):
     """Execute `schedule` on the local shard `buf` inside shard_map.
 
     `buf` leading dim must be divisible by schedule.chunks. Returns the
     final buffer (meaning depends on schedule.result).
+
+    `segments` (default: the schedule's own knob) pipelines each step's
+    wire payload through Rx-buffer-sized segments: segment s+1 is
+    ppermuted while segment s runs through the combine plugin. Steps the
+    segmented datapath cannot express (mask selectors, relay-of-received
+    schedules, indivisible payloads) fall back to whole-payload moves.
     """
     n = schedule.nranks
     rank = lax.axis_index(axis)
     codec = plugins.get_codec(compression) if compression else None
     csize = buf.shape[0] // schedule.chunks
+    k_req = schedule.segments if segments is None else int(segments)
 
     if schedule.pre_rotate == "bruck":
         grp = buf.reshape((schedule.chunks, csize) + buf.shape[1:])
@@ -112,6 +141,48 @@ def interpret_schedule(schedule: Schedule, buf, axis: str, *,
                      "received": last_recv}[schedule.relay]
         payload = _select(src_store, schedule.chunks, step.send_sel, rank, s_idx)
 
+        is_dst = None
+        if step.mask_recv:
+            dsts = jnp.asarray([d for (_, d) in step.perm])
+            is_dst = jnp.any(rank == dsts)
+
+        view, off = (None, None)
+        if (k_req > 1 and schedule.relay != "received"
+                and step.send_sel.kind != SEL_MASK
+                and step.recv_sel.kind != SEL_MASK):
+            view, off = _recv_region(buf, schedule.chunks, step.recv_sel,
+                                     rank, s_idx)
+        k = (_fit_segments(payload.shape[0], k_req)
+             if view is not None and view.shape[0] == payload.shape[0] else 1)
+
+        if k > 1:
+            # segmented datapath: pipeline wire + combine per segment
+            tgt = view.reshape((k, -1) + view.shape[1:])
+            comb = functools.partial(plugins.combine, step.op,
+                                     use_pallas=use_pallas)
+
+            def send(seg):
+                if codec is None:
+                    return lax.ppermute(seg, axis, step.perm)
+                wire = codec.compress(seg, use_pallas=use_pallas)
+                wire = jax.tree.map(
+                    lambda leaf: lax.ppermute(leaf, axis, step.perm), wire)
+                return codec.decompress(wire, seg.shape, seg.dtype,
+                                        use_pallas=use_pallas)
+
+            def consume(i, incoming):
+                return comb(tgt[i], incoming.astype(buf.dtype))
+
+            new = _pipelined_exchange(payload, send, consume, k)
+            new = new.reshape(view.shape)
+            if is_dst is not None:
+                new = jnp.where(is_dst, new, view)
+            if off is None:
+                buf = new
+            else:
+                buf = lax.dynamic_update_slice_in_dim(buf, new, off, 0)
+            continue
+
         if codec is not None:
             wire = codec.compress(payload, use_pallas=use_pallas)
             wire = jax.tree.map(
@@ -121,10 +192,6 @@ def interpret_schedule(schedule: Schedule, buf, axis: str, *,
         else:
             incoming = lax.ppermute(payload, axis, step.perm)
 
-        is_dst = None
-        if step.mask_recv:
-            dsts = jnp.asarray([d for (_, d) in step.perm])
-            is_dst = jnp.any(rank == dsts)
         buf = _place(buf, schedule.chunks, step.recv_sel, rank, s_idx,
                      incoming, step.op, is_dst, use_pallas)
         if schedule.relay == "received":
@@ -151,53 +218,116 @@ def _maybe_codec(compression):
     return plugins.get_codec(compression) if compression else None
 
 
-def _ring_send(payload, axis, comm, codec, use_pallas, shape_dtype):
+def _ring_send(payload, axis, comm, codec, use_pallas, shape_dtype, shift=1):
     if codec is None:
-        return lax.ppermute(payload, axis, comm.ring_perm(1))
+        return lax.ppermute(payload, axis, comm.ring_perm(shift))
     wire = codec.compress(payload, use_pallas=use_pallas)
-    wire = jax.tree.map(lambda l: lax.ppermute(l, axis, comm.ring_perm(1)),
+    wire = jax.tree.map(lambda l: lax.ppermute(l, axis, comm.ring_perm(shift)),
                         wire)
     return codec.decompress(wire, payload.shape, shape_dtype,
                             use_pallas=use_pallas)
 
 
+def _fit_segments(seg_len: int, segments) -> int:
+    """Largest k <= segments that divides seg_len (>= 1).
+
+    Segment counts come from the selector as a preference; the data plane
+    clamps to a divisor of the payload length so segments stay equal-sized
+    (halving mirrors the pow2 candidate ladder)."""
+    k = max(1, int(segments or 1))
+    k = min(k, max(1, seg_len))
+    while k > 1 and seg_len % k:
+        k -= 1
+    return k
+
+
+def _pipelined_exchange(payload, send, consume, segments: int):
+    """Double-buffered segmented exchange: the ACCL+ Rx-buffer pipeline.
+
+    Splits `payload` (leading dim divisible by `segments`) into segments,
+    puts segment 0 on the wire, then runs an inner lax.scan whose body
+    launches segment s+1 with `send` while `consume(s, incoming_s)`
+    combines/places the segment already in flight — so the wire and the
+    combine plugin run concurrently, exactly the §4.4.3 Tx/Rx pipelining.
+
+    send:    seg -> incoming seg (ppermute, optionally through a codec).
+    consume: (seg_index, incoming seg) -> output seg (must be jax-traceable
+             with a traced index).
+    Returns the concatenated consumed segments, shaped like `payload`'s
+    consume output stacked back to the full step payload.
+    """
+    k = int(segments)
+    if k <= 1:
+        return consume(0, send(payload))
+    pay = payload.reshape((k, payload.shape[0] // k) + payload.shape[1:])
+    inflight = send(pay[0])
+
+    def seg_body(carry, i):
+        nxt = send(pay[i + 1])          # segment i+1 rides the wire ...
+        out = consume(i, carry)         # ... while segment i is combined
+        return nxt, out
+
+    last, outs = lax.scan(seg_body, inflight, jnp.arange(k - 1))
+    tail = consume(k - 1, last)
+    flat = jnp.concatenate(
+        [outs.reshape((-1,) + outs.shape[2:]), tail], axis=0)
+    return flat
+
+
 def ring_reduce_scatter_loop(x2d, axis, comm: Communicator, op="add",
-                             compression=None, use_pallas=False):
+                             compression=None, use_pallas=False,
+                             segments: int = 1):
     """x2d: (n, csize); returns rank's fully-reduced row (csize,).
 
-    Canonical chunk ownership (rank r ends with row r), one scan."""
+    Canonical chunk ownership (rank r ends with row r), one scan. With
+    segments > 1 each ring step's chunk is cut into Rx-buffer-sized
+    segments pipelined through the wire/combine stages."""
     n = comm.size
     rank = lax.axis_index(axis)
     codec = _maybe_codec(compression)
+    segs = _fit_segments(x2d.shape[1], segments)
 
     def body(buf, s):
         send_idx = (rank - s - 1) % n
         recv_idx = (rank - s - 2) % n
         payload = buf[send_idx]
-        incoming = _ring_send(payload, axis, comm, codec, use_pallas,
-                              buf.dtype)
-        new_val = plugins.combine(op, buf[recv_idx],
-                                  incoming.astype(buf.dtype),
-                                  use_pallas=use_pallas)
-        buf = lax.dynamic_update_index_in_dim(buf, new_val, recv_idx, 0)
+        tgt = buf[recv_idx].reshape((segs, -1) + buf.shape[2:])
+
+        def send(seg):
+            return _ring_send(seg, axis, comm, codec, use_pallas, buf.dtype)
+
+        def consume(i, incoming):
+            return plugins.combine(op, tgt[i], incoming.astype(buf.dtype),
+                                   use_pallas=use_pallas)
+
+        new_val = _pipelined_exchange(payload, send, consume, segs)
+        buf = lax.dynamic_update_index_in_dim(
+            buf, new_val.reshape(buf.shape[1:]), recv_idx, 0)
         return buf, None
 
     buf, _ = lax.scan(body, x2d, jnp.arange(n - 1))
     return buf[rank]
 
 
-def ring_allgather_loop(shard, axis, comm: Communicator):
+def ring_allgather_loop(shard, axis, comm: Communicator, segments: int = 1):
     """shard: (csize, ...); returns (n, csize, ...) rows in rank order."""
     n = comm.size
     rank = lax.axis_index(axis)
     buf = jnp.zeros((n,) + shard.shape, shard.dtype)
     buf = lax.dynamic_update_index_in_dim(buf, shard, rank, 0)
+    segs = _fit_segments(shard.shape[0] if shard.ndim else 1, segments)
 
     def body(buf, s):
         send_idx = (rank - s) % n
         recv_idx = (rank - s - 1) % n
-        incoming = lax.ppermute(buf[send_idx], axis, comm.ring_perm(1))
-        buf = lax.dynamic_update_index_in_dim(buf, incoming, recv_idx, 0)
+
+        def send(seg):
+            return lax.ppermute(seg, axis, comm.ring_perm(1))
+
+        incoming = _pipelined_exchange(buf[send_idx], send,
+                                       lambda i, seg: seg, segs)
+        buf = lax.dynamic_update_index_in_dim(
+            buf, incoming.reshape(buf.shape[1:]), recv_idx, 0)
         return buf, None
 
     buf, _ = lax.scan(body, buf, jnp.arange(n - 1))
@@ -205,57 +335,76 @@ def ring_allgather_loop(shard, axis, comm: Communicator):
 
 
 def ring_allreduce_loop(x2d, axis, comm: Communicator, op="add",
-                        compression=None, use_pallas=False):
-    """x2d: (n, csize) -> (n, csize) fully reduced (RS loop + AG loop)."""
+                        compression=None, use_pallas=False,
+                        segments: int = 1):
+    """x2d: (n, csize) -> (n, csize) fully reduced (RS loop + AG loop).
+
+    Only the RS phase segments: the AG phase is copy-only, so cutting it
+    up would add per-segment alpha with no combine work to overlap (the
+    same rule Selector.admissible_segments applies to pure allgathers)."""
     shard = ring_reduce_scatter_loop(x2d, axis, comm, op, compression,
-                                     use_pallas)
-    return ring_allgather_loop(shard, axis, comm)
+                                     use_pallas, segments=segments)
+    return ring_allgather_loop(shard, axis, comm, segments=1)
 
 
 def bidi_ring_allreduce_loop(x2d, axis, comm: Communicator, op="add",
-                             compression=None, use_pallas=False):
+                             compression=None, use_pallas=False,
+                             segments: int = 1):
     """x2d: (2n, csize): rows [0,n) ride the +1 ring, [n,2n) the -1 ring.
 
     Both directions advance in the same scan iteration — two independent
-    ppermutes per step use both ICI directions concurrently."""
+    ppermutes per step use both ICI directions concurrently. With
+    segments > 1 both directions' chunks are additionally cut into
+    pipelined segments (the two directional pipelines stay independent)."""
     n = comm.size
     rank = lax.axis_index(axis)
     codec = _maybe_codec(compression)
+    segs = _fit_segments(x2d.shape[1], segments)
+
+    def _dir_new_row(buf, send_idx, recv_idx, shift, combine_op):
+        """New value for `recv_idx`'s row, read entirely from the pre-step
+        buffer — the two directions' exchanges stay data-independent so
+        XLA schedules their ppermutes on both ICI directions concurrently.
+
+        Copy-only exchanges (the AG phase, combine_op=None) never
+        segment: there is no combine work to overlap."""
+        k = segs if combine_op is not None else 1
+        payload = buf[send_idx]
+        tgt = buf[recv_idx].reshape((k, -1) + buf.shape[2:])
+        # compression applies to the RS phase only (as in the uni ring:
+        # the AG phase relays already-reduced chunks uncompressed)
+        cdc = codec if combine_op is not None else None
+
+        def send(seg):
+            return _ring_send(seg, axis, comm, cdc, use_pallas, buf.dtype,
+                              shift=shift)
+
+        def consume(i, incoming):
+            inc = incoming.astype(buf.dtype)
+            if combine_op is None:
+                return inc
+            return plugins.combine(combine_op, tgt[i], inc,
+                                   use_pallas=use_pallas)
+
+        new_val = _pipelined_exchange(payload, send, consume, k)
+        return new_val.reshape(buf.shape[1:])
 
     def rs_body(buf, s):
         cw_send, cw_recv = (rank - s - 1) % n, (rank - s - 2) % n
         ccw_send, ccw_recv = n + (rank + s + 1) % n, n + (rank + s + 2) % n
-        pc = buf[cw_send]
-        pw = buf[ccw_send]
-        if codec is None:
-            inc_c = lax.ppermute(pc, axis, comm.ring_perm(1))
-            inc_w = lax.ppermute(pw, axis, comm.ring_perm(-1))
-        else:
-            wc = codec.compress(pc, use_pallas=use_pallas)
-            ww = codec.compress(pw, use_pallas=use_pallas)
-            wc = jax.tree.map(
-                lambda l: lax.ppermute(l, axis, comm.ring_perm(1)), wc)
-            ww = jax.tree.map(
-                lambda l: lax.ppermute(l, axis, comm.ring_perm(-1)), ww)
-            inc_c = codec.decompress(wc, pc.shape, buf.dtype,
-                                     use_pallas=use_pallas)
-            inc_w = codec.decompress(ww, pw.shape, buf.dtype,
-                                     use_pallas=use_pallas)
-        buf = lax.dynamic_update_index_in_dim(
-            buf, plugins.combine(op, buf[cw_recv], inc_c.astype(buf.dtype)),
-            cw_recv, 0)
-        buf = lax.dynamic_update_index_in_dim(
-            buf, plugins.combine(op, buf[ccw_recv], inc_w.astype(buf.dtype)),
-            ccw_recv, 0)
+        new_c = _dir_new_row(buf, cw_send, cw_recv, 1, op)
+        new_w = _dir_new_row(buf, ccw_send, ccw_recv, -1, op)
+        buf = lax.dynamic_update_index_in_dim(buf, new_c, cw_recv, 0)
+        buf = lax.dynamic_update_index_in_dim(buf, new_w, ccw_recv, 0)
         return buf, None
 
     def ag_body(buf, s):
         cw_send, cw_recv = (rank - s) % n, (rank - s - 1) % n
         ccw_send, ccw_recv = n + (rank + s) % n, n + (rank + s + 1) % n
-        inc_c = lax.ppermute(buf[cw_send], axis, comm.ring_perm(1))
-        inc_w = lax.ppermute(buf[ccw_send], axis, comm.ring_perm(-1))
-        buf = lax.dynamic_update_index_in_dim(buf, inc_c, cw_recv, 0)
-        buf = lax.dynamic_update_index_in_dim(buf, inc_w, ccw_recv, 0)
+        new_c = _dir_new_row(buf, cw_send, cw_recv, 1, None)
+        new_w = _dir_new_row(buf, ccw_send, ccw_recv, -1, None)
+        buf = lax.dynamic_update_index_in_dim(buf, new_c, cw_recv, 0)
+        buf = lax.dynamic_update_index_in_dim(buf, new_w, ccw_recv, 0)
         return buf, None
 
     buf, _ = lax.scan(rs_body, x2d, jnp.arange(n - 1))
@@ -316,23 +465,56 @@ class CollectiveEngine:
     use_pallas: bool = False
     # trace-time log of issued collectives (for tests / EXPERIMENTS tables)
     trace_log: list = dataclasses.field(default_factory=list)
+    # trace-time schedule cache: (collective, algorithm, n, root, op) ->
+    # Schedule. Repeated collectives in a training step hit this instead of
+    # re-running the generator (the uC caches compiled microcode).
+    _sched_cache: dict = dataclasses.field(default_factory=dict)
+    # control-plane telemetry, asserted on by tests
+    stats: dict = dataclasses.field(
+        default_factory=lambda: {"gen_calls": 0, "sched_cache_hits": 0})
 
     # -- infrastructure ------------------------------------------------------
     def comm(self, axis: str) -> Communicator:
         return axis_comm(self.mesh, axis, self.hw)
 
+    def _cached_schedule(self, collective: str, algorithm: str,
+                         comm: Communicator, root: int, op: str) -> Schedule:
+        key = (collective, algorithm, comm.size, root, op)
+        sched = self._sched_cache.get(key)
+        if sched is not None:
+            self.stats["sched_cache_hits"] += 1
+            return sched
+        self.stats["gen_calls"] += 1
+        sched = _gen_schedule(collective, algorithm, comm, root, op)
+        self._sched_cache[key] = sched
+        return sched
+
     def _resolve(self, collective: str, x, axis: str, algorithm: str,
-                 root: int = 0, op: str = "add") -> Schedule:
+                 root: int = 0, op: str = "add",
+                 segments: Optional[int] = None) -> Schedule:
+        """Pick algorithm + segment count; return the (cached) schedule.
+
+        The returned schedule carries the chosen segment count in
+        `.segments` (caller-supplied `segments` overrides the selector).
+        """
         comm = self.comm(axis)
         if algorithm in (None, "auto"):
             choice = self.selector.choose(
                 collective, x.size * x.dtype.itemsize, comm)
-            sched = choice.schedule
-            # regenerate with root/op if the auto pick ignored them
-            sched = _gen_schedule(collective, choice.algorithm, comm, root, op)
             algorithm = choice.algorithm
+            if segments is None:
+                segments = choice.segments
+            if root == 0 and op == "add":
+                # the auto pick already generated exactly this schedule —
+                # don't run the generator a second time
+                sched = choice.schedule
+            else:
+                sched = self._cached_schedule(collective, algorithm, comm,
+                                              root, op)
         else:
-            sched = _gen_schedule(collective, algorithm, comm, root, op)
+            sched = self._cached_schedule(collective, algorithm, comm,
+                                          root, op)
+        sched = sched.with_segments(segments if segments else 1)
         self.trace_log.append((collective, algorithm, axis,
                                int(x.size * x.dtype.itemsize)))
         return sched
@@ -346,7 +528,8 @@ class CollectiveEngine:
     # -- MPI-like API (paper Listing 1) --------------------------------------
     def allreduce(self, x, axis: str, op: str = "add",
                   algorithm: str = "auto",
-                  compression: Optional[str] = None):
+                  compression: Optional[str] = None,
+                  segments: Optional[int] = None):
         n = self.mesh.shape[axis]
         if n == 1:
             return x
@@ -357,17 +540,28 @@ class CollectiveEngine:
                 return lax.pmax(x, axis)
             if op == "min":
                 return lax.pmin(x, axis)
-        sched = self._resolve("allreduce", x, axis, algorithm, op=op)
+        if compression is not None and segments is None:
+            # codecs quantize per wire payload, so auto-segmenting would
+            # silently change numerics (per-segment scale blocks); only
+            # segment compressed wires when the caller asks for it
+            segments = 1
+        sched = self._resolve("allreduce", x, axis, algorithm, op=op,
+                              segments=segments)
         comm = self.comm(axis)
         if sched.name in ("ring", "bidi_ring"):
-            # memory-safe rolled-loop lowering
+            # memory-safe rolled-loop lowering. Padding stays a function of
+            # chunks alone so the chunk layout — and hence the elementwise
+            # reduction order — is identical at every segment count
+            # (uncompressed segmented lowerings are bitwise-equal to
+            # unsegmented ones); the loops clamp segments to a divisor of
+            # the chunk size.
             chunks = n if sched.name == "ring" else 2 * n
             flat, shape, size = _flatten_pad(x, chunks)
             x2d = flat.reshape(chunks, -1)
             fn = ring_allreduce_loop if sched.name == "ring" \
                 else bidi_ring_allreduce_loop
             out = fn(x2d, axis, comm, op=op, compression=compression,
-                     use_pallas=self.use_pallas)
+                     use_pallas=self.use_pallas, segments=sched.segments)
             return out.reshape(-1)[:size].reshape(shape)
         flat, shape, size = _flatten_pad(x, sched.chunks)
         out = interpret_schedule(sched, flat, axis, compression=compression,
@@ -376,7 +570,8 @@ class CollectiveEngine:
 
     def reduce_scatter(self, x, axis: str, op: str = "add",
                        algorithm: str = "auto",
-                       compression: Optional[str] = None):
+                       compression: Optional[str] = None,
+                       segments: Optional[int] = None):
         """Tiled semantics on the flattened array: rank r gets slice r of
         the reduction. Input size must be divisible by the rank count."""
         n = self.mesh.shape[axis]
@@ -388,12 +583,16 @@ class CollectiveEngine:
             return lax.psum_scatter(x.reshape(n, -1), axis,
                                     scatter_dimension=0,
                                     tiled=False).reshape(-1)
-        sched = self._resolve("reduce_scatter", x, axis, algorithm, op=op)
+        if compression is not None and segments is None:
+            segments = 1  # see allreduce: codecs quantize per wire payload
+        sched = self._resolve("reduce_scatter", x, axis, algorithm, op=op,
+                              segments=segments)
         if sched.name == "ring":
             return ring_reduce_scatter_loop(
                 x.reshape(n, -1), axis, self.comm(axis), op=op,
                 compression=compression,
-                use_pallas=self.use_pallas).reshape(-1)
+                use_pallas=self.use_pallas,
+                segments=sched.segments).reshape(-1)
         flat = x.reshape(-1)
         out = interpret_schedule(sched, flat, axis, compression=compression,
                                  use_pallas=self.use_pallas)
@@ -402,7 +601,8 @@ class CollectiveEngine:
         own = sched.owned_chunk(rank)
         return lax.dynamic_slice_in_dim(out, own * csize, csize, 0)
 
-    def allgather(self, x, axis: str, algorithm: str = "auto"):
+    def allgather(self, x, axis: str, algorithm: str = "auto",
+                  segments: Optional[int] = None):
         """Tiled: returns concat of every rank's flat x (own shard at
         position rank)."""
         n = self.mesh.shape[axis]
@@ -411,10 +611,12 @@ class CollectiveEngine:
         if self.backend == "native" and algorithm in (None, "auto"):
             return lax.all_gather(x.reshape(-1), axis, axis=0,
                                   tiled=True)
-        sched = self._resolve("allgather", x, axis, algorithm)
+        sched = self._resolve("allgather", x, axis, algorithm,
+                              segments=segments)
         if sched.name == "ring":
-            return ring_allgather_loop(x.reshape(-1), axis,
-                                       self.comm(axis)).reshape(-1)
+            return ring_allgather_loop(
+                x.reshape(-1), axis, self.comm(axis),
+                segments=sched.segments).reshape(-1)
         flat = x.reshape(-1)
         rank = lax.axis_index(axis)
         buf = jnp.zeros((n * flat.shape[0],), flat.dtype)
@@ -541,12 +743,17 @@ class CollectiveEngine:
         return jnp.dot(a, b,
                        preferred_element_type=jnp.float32).astype(out_dtype)
 
-    def allgather_matmul(self, x, w, axis: str):
+    def allgather_matmul(self, x, w, axis: str, segments: int = 1):
         """y = allgather(x, rows) @ w without staging the gathered buffer.
 
         Each ring step multiplies the resident shard while the next shard is
         on the wire — the streaming collective of Listing 2, fused with the
         MXU consumer. x: (m, k) local rows; w: (k, p); out: (n*m, p).
+
+        With segments > 1 the shard is row-split into independent segment
+        pipelines: segment j's matmul at step s+1 depends only on segment
+        j's ppermute at step s, so a late segment never stalls the MXU on
+        the rest of the shard.
         """
         n = self.mesh.shape[axis]
         if n == 1:
@@ -554,22 +761,32 @@ class CollectiveEngine:
         comm = self.comm(axis)
         rank = lax.axis_index(axis)
         m = x.shape[0]
+        segs = _fit_segments(m, segments)
         out = jnp.zeros((n * m, w.shape[-1]), x.dtype)
-        cur = x
+        # resident shard kept as per-segment arrays — never concatenated,
+        # so each segment's wire/compute chain stays independent
+        parts = list(jnp.split(x, segs, axis=0)) if segs > 1 else [x]
+        sub = m // segs
         for s in range(n):
-            seg = self._matmul(cur, w)
-            out = lax.dynamic_update_slice_in_dim(
-                out, seg, ((rank - s) % n) * m, 0)
+            for j, part in enumerate(parts):
+                seg_out = self._matmul(part, w)
+                out = lax.dynamic_update_slice_in_dim(
+                    out, seg_out, ((rank - s) % n) * m + j * sub, 0)
             if s < n - 1:
-                cur = lax.ppermute(cur, axis, comm.ring_perm(1))
+                parts = [lax.ppermute(p, axis, comm.ring_perm(1))
+                         for p in parts]
         self.trace_log.append(("allgather_matmul", "ring", axis,
                                int(x.size * x.dtype.itemsize)))
         return out
 
-    def matmul_reduce_scatter(self, x, w, axis: str):
+    def matmul_reduce_scatter(self, x, w, axis: str, segments: int = 1):
         """Row-sharded output of (x @ w) with the partial-sum reduction
         streamed around the ring. x: (m, k_local); w: (k_local, p);
-        out: (m/n, p) — rank r holds row-chunk r, fully summed."""
+        out: (m/n, p) — rank r holds row-chunk r, fully summed.
+
+        segments > 1 splits the rotating accumulator into independent
+        row-segment pipelines (wire of segment j overlaps the adds of the
+        other segments)."""
         n = self.mesh.shape[axis]
         partial = self._matmul(x, w)
         if n == 1:
@@ -580,17 +797,22 @@ class CollectiveEngine:
         if m % n:
             raise ValueError(f"matmul_reduce_scatter rows {m} % {n} != 0")
         c = m // n
-        acc = lax.dynamic_slice_in_dim(partial, ((rank - 1) % n) * c, c, 0)
+        segs = _fit_segments(c, segments)
+        sub = c // segs
+        accs = [lax.dynamic_slice_in_dim(
+            partial, ((rank - 1) % n) * c + j * sub, sub, 0)
+            for j in range(segs)]
         for s in range(1, n):
-            acc = lax.ppermute(acc, axis, comm.ring_perm(1))
-            acc = acc + lax.dynamic_slice_in_dim(
-                partial, ((rank - 1 - s) % n) * c, c, 0)
+            accs = [lax.ppermute(a, axis, comm.ring_perm(1)) for a in accs]
+            accs = [a + lax.dynamic_slice_in_dim(
+                partial, ((rank - 1 - s) % n) * c + j * sub, sub, 0)
+                for j, a in enumerate(accs)]
         self.trace_log.append(("matmul_reduce_scatter", "ring", axis,
                                int(partial.size * partial.dtype.itemsize)))
-        return acc
+        return accs[0] if segs == 1 else jnp.concatenate(accs, axis=0)
 
     def ring_attention(self, q, k, v, axis: str, *, causal: bool = True,
-                       scale: Optional[float] = None):
+                       scale: Optional[float] = None, segments: int = 1):
         """Context-parallel attention: the streaming API generalized.
 
         q, k, v: (B, S_local, H, hd) — the SEQUENCE is sharded over `axis`
@@ -628,10 +850,10 @@ class CollectiveEngine:
         l0 = jnp.zeros((b, kv, g, sl), jnp.float32)
         a0 = jnp.zeros((b, kv, g, sl, hd), jnp.float32)
 
-        def accumulate(carry, kv_blk, owner):
+        def accumulate(carry, kv_blk, owner, seg_off=0):
             m, l, acc = carry
             kb, vb = kv_blk
-            k_pos = owner * sl + jnp.arange(sl)
+            k_pos = owner * sl + seg_off + jnp.arange(kb.shape[1])
             s = jnp.einsum("bqkgh,bskh->bkgqs", qr, kb,
                            preferred_element_type=jnp.float32) * scale
             if causal:
@@ -645,14 +867,29 @@ class CollectiveEngine:
                             preferred_element_type=jnp.float32)
             return m_new, l, acc * corr[..., None] + pv
 
-        carry = accumulate((m0, l0, a0), (k, v), rank)
-        cur_k, cur_v = k, v
+        # KV blocks rotate as independent sequence segments: segment j's
+        # flash-accumulate at step s+1 depends only on segment j's
+        # ppermute at step s (online softmax is exact under any block
+        # split, so segmentation leaves the math unchanged).
+        segs = _fit_segments(sl, segments)
+        sub = sl // segs
+        k_parts = list(jnp.split(k, segs, axis=1)) if segs > 1 else [k]
+        v_parts = list(jnp.split(v, segs, axis=1)) if segs > 1 else [v]
+
+        carry = (m0, l0, a0)
+        for j in range(segs):
+            carry = accumulate(carry, (k_parts[j], v_parts[j]), rank,
+                               seg_off=j * sub)
         for step in range(1, n):
-            # next block is on the wire while the current one computes
-            cur_k = lax.ppermute(cur_k, axis, comm.ring_perm(1))
-            cur_v = lax.ppermute(cur_v, axis, comm.ring_perm(1))
+            # next block rides the wire while the current one computes
+            k_parts = [lax.ppermute(p, axis, comm.ring_perm(1))
+                       for p in k_parts]
+            v_parts = [lax.ppermute(p, axis, comm.ring_perm(1))
+                       for p in v_parts]
             owner = (rank - step) % n
-            carry = accumulate(carry, (cur_k, cur_v), owner)
+            for j in range(segs):
+                carry = accumulate(carry, (k_parts[j], v_parts[j]), owner,
+                                   seg_off=j * sub)
         m, l, acc = carry
         out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
         self.trace_log.append(("ring_attention", "ring", axis,
@@ -660,26 +897,56 @@ class CollectiveEngine:
         return out.transpose(0, 3, 1, 2, 4).reshape(b, sl, h, hd)
 
     # -- gradient-bucket collectives (offload-engine H2H role) ---------------
+    #: default gradient-bucket cap; sized so a bucket fills the segmented
+    #: ring pipeline without monopolizing HBM for the fused buffer.
+    BUCKET_BYTES = 4 << 20
+
     def tree_allreduce(self, tree, axes: Sequence[str], op: str = "add",
                        compression: Optional[str] = None,
-                       algorithm: str = "auto"):
-        """Bucketed pytree allreduce: one fused collective for all leaves.
+                       algorithm: str = "auto",
+                       bucket_bytes: Optional[int] = None):
+        """Bucketed pytree allreduce: fused collectives over leaf groups.
 
-        Flattening every gradient into a single buffer amortizes the alpha
-        term across the whole pytree (gradient bucketing).
+        Leaves are grouped by dtype (wire bytes stay native — a bf16
+        gradient ships 2 bytes/elem, no blanket fp32 upcast) and packed
+        into buckets of at most `bucket_bytes` each. Concatenating leaves
+        amortizes the alpha term; capping the bucket keeps several
+        collectives in flight so buckets pipeline through the segmented
+        rings instead of serializing behind one giant fused buffer.
         """
         leaves, treedef = jax.tree.flatten(tree)
         if not leaves:
             return tree
-        sizes = [l.size for l in leaves]
-        shapes = [l.shape for l in leaves]
-        dtypes = [l.dtype for l in leaves]
-        buf = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
-                               for l in leaves])
-        buf = self.allreduce_multi(buf, axes, op=op, algorithm=algorithm,
-                                   compression=compression)
-        outs, off = [], 0
-        for size, shape, dtype in zip(sizes, shapes, dtypes):
-            outs.append(buf[off:off + size].reshape(shape).astype(dtype))
-            off += size
-        return jax.tree.unflatten(treedef, outs)
+        cap = bucket_bytes if bucket_bytes is not None else self.BUCKET_BYTES
+
+        # dtype-grouped, size-capped buckets over leaf indices
+        groups: dict = {}
+        for i, leaf in enumerate(leaves):
+            groups.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+        buckets: list[list[int]] = []
+        for dtype, idxs in groups.items():
+            cur, cur_bytes = [], 0
+            for i in idxs:
+                nbytes = leaves[i].size * dtype.itemsize
+                if cur and cur_bytes + nbytes > cap:
+                    buckets.append(cur)
+                    cur, cur_bytes = [], 0
+                cur.append(i)
+                cur_bytes += nbytes
+            if cur:
+                buckets.append(cur)
+
+        out: list = [None] * len(leaves)
+        for idxs in buckets:
+            buf = (leaves[idxs[0]].reshape(-1) if len(idxs) == 1
+                   else jnp.concatenate([leaves[i].reshape(-1)
+                                         for i in idxs]))
+            buf = self.allreduce_multi(buf, axes, op=op,
+                                       algorithm=algorithm,
+                                       compression=compression)
+            off = 0
+            for i in idxs:
+                leaf = leaves[i]
+                out[i] = buf[off:off + leaf.size].reshape(leaf.shape)
+                off += leaf.size
+        return jax.tree.unflatten(treedef, out)

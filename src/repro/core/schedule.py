@@ -117,6 +117,10 @@ class Schedule:
     # Chunk-index coordinate system: 'absolute' (chunk j = rank j's slot) or
     # 'relative' (chunk j = rank (root+j)%n's slot — binomial gather).
     chunk_coords: str = "absolute"
+    # Wire segmentation: each step's payload is split into this many
+    # Rx-buffer-sized segments and pipelined (segment s+1 rides the wire
+    # while segment s is combined — ACCL+ §4.4.3). 1 = unsegmented.
+    segments: int = 1
 
     # ---- static cost terms (selector + EXPERIMENTS tables) ---------------
     def n_steps(self) -> int:
@@ -127,13 +131,41 @@ class Schedule:
         return float(msg_bytes) * sum(s.bytes_frac for s in self.steps)
 
     def predict_time(self, msg_bytes: float, hop_latency: float,
-                     link_bw: float) -> float:
-        """alpha-beta time: sum over steps of (alpha + step_bytes / bw),
-        divided by overlap_factor when independent links run concurrently."""
-        t = 0.0
+                     link_bw: float, segments: Optional[int] = None) -> float:
+        """alpha-beta time with wire segmentation.
+
+        Unsegmented (k=1): sum over steps of (alpha + step_bytes / bw).
+
+        Segmented (k>1): each step's payload is cut into k segments that
+        stream through the step chain double-buffered, so the pipeline
+        drains in  sum_i t_i + (k-1) * max_i t_i  where
+        t_i = alpha + step_bytes_i / (k * bw)  is one segment's time
+        through step i (the classic pipeline fill/drain model; for a
+        homogeneous S-step ring this is (S + k - 1) * t). Divided by
+        overlap_factor when independent links run concurrently.
+
+        This models the CCLO target, where segments stream *across*
+        consecutive hops. The XLA lowerings pipeline segments only within
+        a step (the scan carry is a per-step barrier), realizing wire/
+        combine overlap but not cross-step streaming — so treat segmented
+        predictions as the hardware roadmap, and pin measured optima via
+        the tuning table (see ROADMAP open items).
+        """
+        k = int(segments if segments is not None else self.segments)
+        if k < 1:
+            raise ValueError(f"segments must be >= 1, got {k}")
+        total, t_max = 0.0, 0.0
         for s in self.steps:
-            t += hop_latency + (msg_bytes * s.bytes_frac) / link_bw
-        return t / self.overlap_factor
+            t = hop_latency + (msg_bytes * s.bytes_frac) / (k * link_bw)
+            total += t
+            t_max = max(t_max, t)
+        return (total + (k - 1) * t_max) / self.overlap_factor
+
+    def with_segments(self, segments: int) -> "Schedule":
+        """Copy of this schedule with the segmentation knob set."""
+        if segments == self.segments:
+            return self
+        return dataclasses.replace(self, segments=int(segments))
 
     def validate(self) -> None:
         """Structural checks (the 'firmware assembler')."""

@@ -64,27 +64,53 @@ class Choice:
     protocol: str
     predicted_s: float
     schedule: Schedule
+    segments: int = 1
 
 
 class Selector:
-    """Prices schedules; honours a user tuning table first."""
+    """Prices schedules; honours a user tuning table first.
 
-    def __init__(self, eager_max_bytes: int = 64 * 1024):
+    Segmentation (ACCL+ §4.4.3): `choose` picks the wire segment count
+    jointly with algorithm/protocol — each candidate schedule is priced at
+    every admissible segment count and the cheapest (algo, proto, segments)
+    triple wins. `choose` is memoized on (collective, msg_bytes, comm) so a
+    training step that re-issues the same collective never re-runs the
+    generators or the pricing sweep; `set_tuning` invalidates the cache.
+    """
+
+    #: segment counts the selector sweeps (1 = unsegmented baseline).
+    DEFAULT_SEGMENT_CANDIDATES = (1, 2, 4, 8, 16, 32)
+
+    def __init__(self, eager_max_bytes: int = 64 * 1024,
+                 segment_candidates: tuple = DEFAULT_SEGMENT_CANDIDATES,
+                 min_segment_bytes: int = 8 * 1024):
         self.eager_max_bytes = eager_max_bytes
-        # (collective, lo_bytes, hi_bytes, nranks_or_None) -> algorithm
+        self.segment_candidates = tuple(segment_candidates)
+        # Rx-buffer floor: never cut a step's payload below this many bytes
+        # (tiny segments are all alpha, and real Rx buffers have a floor).
+        self.min_segment_bytes = min_segment_bytes
+        # (collective, lo_bytes, hi_bytes, nranks_or_None, algorithm, segs)
         self._tuning: list[tuple] = []
+        self._cache: dict = {}
+        # generator/memoization telemetry, asserted on in tests
+        self.stats = {"choose_calls": 0, "cache_hits": 0, "gen_calls": 0}
 
     # -- the paper's runtime configuration parameters ----------------------
     def set_tuning(self, collective: str, algorithm: str,
                    lo_bytes: int = 0, hi_bytes: int = 1 << 62,
-                   nranks: Optional[int] = None) -> None:
-        self._tuning.append((collective, lo_bytes, hi_bytes, nranks, algorithm))
+                   nranks: Optional[int] = None,
+                   segments: Optional[int] = None) -> None:
+        self._tuning.append((collective, lo_bytes, hi_bytes, nranks,
+                             algorithm, segments))
+        self._cache.clear()  # stale choices may no longer honour the table
 
-    def _tuned(self, collective: str, msg_bytes: int, n: int) -> Optional[str]:
-        for (c, lo, hi, nr, algo) in reversed(self._tuning):
+    def _tuned(self, collective: str, msg_bytes: int,
+               n: int) -> tuple[Optional[str], Optional[int]]:
+        """Last-set matching rule wins (algorithm, pinned segment count)."""
+        for (c, lo, hi, nr, algo, segs) in reversed(self._tuning):
             if c == collective and lo <= msg_bytes < hi and (nr is None or nr == n):
-                return algo
-        return None
+                return algo, segs
+        return None, None
 
     # -- pricing ------------------------------------------------------------
     def _protocol_overhead(self, protocol: str, msg_bytes: float,
@@ -96,12 +122,35 @@ class Selector:
         return comm.hw.rendezvous_rtt
 
     def price(self, schedule: Schedule, protocol: str, msg_bytes: float,
-              comm: Communicator) -> Optional[float]:
+              comm: Communicator, segments: int = 1) -> Optional[float]:
         ov = self._protocol_overhead(protocol, msg_bytes, comm)
         if ov is None:
             return None
         return schedule.predict_time(msg_bytes, comm.hop_latency,
-                                     comm.link_bw) + ov
+                                     comm.link_bw, segments=segments) + ov
+
+    def admissible_segments(self, schedule: Schedule,
+                            msg_bytes: float) -> tuple:
+        """Segment counts worth sweeping for this schedule/message.
+
+        A step's per-segment wire payload must stay >= min_segment_bytes;
+        k=1 is always admissible. Copy-only schedules (allgather, bcast,
+        alltoall) are never auto-segmented: the XLA lowering runs each
+        step's segments through a scan with no combine work to overlap,
+        so segmentation only adds per-segment alpha there — unlike the
+        CCLO, which streams copies across hops. (A tuning-table entry can
+        still pin segments explicitly.)
+        """
+        if not schedule.steps:
+            return (1,)
+        if all(s.op == "copy" for s in schedule.steps):
+            return (1,)
+        step_bytes = max(msg_bytes * s.bytes_frac for s in schedule.steps)
+        out = []
+        for k in self.segment_candidates:
+            if k == 1 or step_bytes / k >= self.min_segment_bytes:
+                out.append(int(k))
+        return tuple(out) or (1,)
 
     def candidates(self, collective: str, comm: Communicator):
         for (coll, algo), gen in algos.GENERATORS.items():
@@ -115,20 +164,42 @@ class Selector:
 
     def choose(self, collective: str, msg_bytes: int,
                comm: Communicator) -> Choice:
-        tuned = self._tuned(collective, msg_bytes, comm.size)
+        self.stats["choose_calls"] += 1
+        key = (collective, int(msg_bytes), comm)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.stats["cache_hits"] += 1
+            return hit
+        choice = self._choose_uncached(collective, msg_bytes, comm)
+        self._cache[key] = choice
+        return choice
+
+    def _choose_uncached(self, collective: str, msg_bytes: int,
+                         comm: Communicator) -> Choice:
+        tuned_algo, tuned_segs = self._tuned(collective, msg_bytes, comm.size)
         best: Optional[Choice] = None
         for algo, gen in self.candidates(collective, comm):
+            self.stats["gen_calls"] += 1
             sched = gen(comm)
             protos = ALGO_PROTOCOLS.get((collective, algo), ("rendezvous",))
+            seg_space = ((tuned_segs,) if tuned_algo == algo
+                         and tuned_segs is not None
+                         else self.admissible_segments(sched, msg_bytes))
+            tuned_best: Optional[Choice] = None
             for proto in protos:
-                t = self.price(sched, proto, msg_bytes, comm)
-                if t is None:
-                    continue
-                cand = Choice(collective, algo, proto, t, sched)
-                if tuned == algo:
-                    return cand
-                if best is None or t < best.predicted_s:
-                    best = cand
+                for k in seg_space:
+                    t = self.price(sched, proto, msg_bytes, comm, segments=k)
+                    if t is None:
+                        continue
+                    cand = Choice(collective, algo, proto, t,
+                                  sched.with_segments(k), segments=k)
+                    if tuned_algo == algo:
+                        if tuned_best is None or t < tuned_best.predicted_s:
+                            tuned_best = cand
+                    if best is None or t < best.predicted_s:
+                        best = cand
+            if tuned_best is not None:
+                return tuned_best
         if best is None:
             raise ValueError(
                 f"no applicable algorithm for {collective} over {comm}")

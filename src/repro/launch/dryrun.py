@@ -176,6 +176,8 @@ def _finish(result, lowered, chips, pod_size, model_flops, t_start):
     result["fits_hbm"] = result["memory"]["peak_bytes_est"] \
         < TPU_V5E.hbm_bytes
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        cost = cost[0]
     text = compiled.as_text()
     hlo = analysis.analyze_hlo(text, pod_size)
     terms = analysis.roofline_terms(cost, mem, hlo, TPU_V5E, chips)
@@ -212,7 +214,7 @@ def run_dlrm_cell(multi_pod: bool, pcfg: ParallelConfig,
     from repro.models.common import Builder
     from repro.parallel.ops import ParCtx
     from repro.core.engine import CollectiveEngine
-    from jax import shard_map
+    from repro.core.compat import shard_map
 
     t_start = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)

@@ -1,0 +1,77 @@
+"""Fallback for the `hypothesis` dependency when it isn't installed.
+
+The container image pins the jax toolchain but does not ship hypothesis,
+and the suite must run without network installs. When hypothesis is
+available we re-export it untouched; otherwise a tiny deterministic
+sampler runs each property test over `max_examples` pseudo-random draws —
+weaker than real shrinking/coverage, but it keeps the structural
+invariants exercised on every CI run.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import functools
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw  # callable(rng) -> value
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _DataObject:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: min_value + (max_value - min_value) * rng.random())
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _DataObject(rng))
+
+    st = _Strategies()
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            import inspect
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(fn, "_max_examples", 10)):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **dict(kwargs, **drawn))
+
+            # pytest must see only the non-drawn params (fixtures): drop
+            # the __wrapped__ signature pass-through and publish a reduced
+            # signature instead.
+            del wrapper.__wrapped__
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            return wrapper
+        return deco

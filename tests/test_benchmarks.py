@@ -1,0 +1,57 @@
+"""The benchmark harness's machine-readable output (BENCH_collectives.json).
+
+Runs only the model-based segment sweep (no device timing) so this stays
+fast; the full `python -m benchmarks.run` exercises the same writer.
+"""
+import json
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def sweep_results(tmp_path_factory):
+    from benchmarks import run as bench_run
+    path = tmp_path_factory.mktemp("bench") / "BENCH_collectives.json"
+    returned = bench_run.main(["--only", "seg_sweep", "--json", str(path)])
+    on_disk = json.loads(path.read_text())
+    return returned, on_disk
+
+
+def test_json_written_and_matches_returned(sweep_results):
+    returned, on_disk = sweep_results
+    assert on_disk["rows"] == returned["rows"]
+    assert on_disk["segment_sweep"] == returned["segment_sweep"]
+    assert {"jax", "backend", "device_count"} <= set(on_disk["meta"])
+
+
+def test_sweep_schema(sweep_results):
+    _, on_disk = sweep_results
+    sweep = on_disk["segment_sweep"]
+    assert sweep
+    required = {"collective", "algorithm", "protocol", "nranks", "msg_bytes",
+                "segments", "predicted_s", "selected"}
+    for entry in sweep:
+        assert required <= set(entry)
+    # every (collective, size) curve includes the 1-segment baseline
+    curves = {(e["collective"], e["msg_bytes"]) for e in sweep}
+    for coll, nbytes in curves:
+        ks = {e["segments"] for e in sweep
+              if (e["collective"], e["msg_bytes"]) == (coll, nbytes)}
+        assert 1 in ks and len(ks) > 1
+
+
+def test_sweep_pipelining_dominates_at_1mib(sweep_results):
+    """Acceptance: predicted time strictly dominates the 1-segment
+    baseline for every message >= 1 MiB."""
+    _, on_disk = sweep_results
+    curves: dict = {}
+    for e in on_disk["segment_sweep"]:
+        curves.setdefault((e["collective"], e["msg_bytes"]), {})[
+            e["segments"]] = e["predicted_s"]
+    checked = 0
+    for (coll, nbytes), times in curves.items():
+        if nbytes < 1 << 20:
+            continue
+        checked += 1
+        assert min(times.values()) < times[1], (coll, nbytes)
+    assert checked >= 3  # sweep must actually cover >= 1 MiB messages

@@ -161,6 +161,71 @@ def test_tree_allreduce_bucketing(engines, rng):
                                    stacked[k].sum(0), atol=1e-4)
 
 
+# -- control plane: schedule cache & single-generation ------------------------
+
+def _fresh_engine():
+    from repro.core.topology import make_mesh
+    return CollectiveEngine(make_mesh((8,), ("x",)), backend="microcode")
+
+
+def test_auto_resolve_generates_each_schedule_once():
+    """Auto picks with default root/op reuse the selector's schedule —
+    the engine-side generator must never run (no double generation)."""
+    eng = _fresh_engine()
+    g = jax.jit(jax.shard_map(
+        lambda v: eng.allreduce(v, "x", algorithm="auto"),
+        mesh=eng.mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
+    g.lower(jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    assert eng.stats["gen_calls"] == 0
+    assert eng.selector.stats["gen_calls"] > 0
+
+
+def test_repeated_collectives_hit_caches():
+    """A step issuing the same collective many times prices it once and
+    generates its schedule at most once."""
+    eng = _fresh_engine()
+
+    def step(v):
+        for _ in range(5):
+            v = eng.allreduce(v, "x", algorithm="auto")
+        return v
+
+    g = jax.jit(jax.shard_map(step, mesh=eng.mesh, in_specs=P("x"),
+                              out_specs=P("x"), check_vma=False))
+    g.lower(jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    st = eng.selector.stats
+    assert st["choose_calls"] == 5
+    assert st["cache_hits"] == 4
+    # generators ran only for the first choose's candidate sweep
+    assert st["gen_calls"] == len(
+        list(eng.selector.candidates("allreduce", eng.comm("x"))))
+
+
+def test_explicit_algorithm_schedule_cached():
+    eng = _fresh_engine()
+
+    def step(v):
+        v = eng.allreduce(v, "x", algorithm="ring")
+        v = eng.allreduce(v, "x", algorithm="ring")
+        v = eng.allreduce(v, "x", op="max", algorithm="ring")
+        return v
+
+    g = jax.jit(jax.shard_map(step, mesh=eng.mesh, in_specs=P("x"),
+                              out_specs=P("x"), check_vma=False))
+    g.lower(jax.ShapeDtypeStruct((8, 64), jnp.float32))
+    # two cache keys: (ring, add) generated once then hit, (ring, max) once
+    assert eng.stats["gen_calls"] == 2
+    assert eng.stats["sched_cache_hits"] == 1
+
+
+def test_nondefault_op_regenerates_with_op():
+    """Auto pick with op != add must re-key the schedule on the op."""
+    eng = _fresh_engine()
+    out = run(eng.mesh, lambda xs: eng.allreduce(
+        xs[0], "x", op="max", algorithm="auto")[None], X)
+    np.testing.assert_allclose(out[0], X.max(0), atol=1e-6)
+
+
 @pytest.mark.parametrize("causal", [True, False])
 def test_ring_attention_matches_full(engines, rng, causal):
     """Context-parallel streaming attention == full-sequence attention."""

@@ -54,3 +54,94 @@ def test_nonpow2_excludes_hypercube():
     for size in (1024, 1 << 20):
         c = sel.choose("allreduce", size, comm)
         assert c.algorithm in ("ring", "bidi_ring")
+
+
+# -- tuning-table semantics ---------------------------------------------------
+
+def test_tuning_last_set_rule_wins():
+    """Overlapping tuning rules: the most recently set one applies."""
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    sel.set_tuning("allreduce", "ring")
+    sel.set_tuning("allreduce", "recursive_doubling")
+    assert sel.choose("allreduce", 1 << 20, comm).algorithm == \
+        "recursive_doubling"
+    # a later, narrower rule shadows it inside its byte range only
+    sel.set_tuning("allreduce", "halving_doubling", lo_bytes=1 << 22)
+    assert sel.choose("allreduce", 1 << 20, comm).algorithm == \
+        "recursive_doubling"
+    assert sel.choose("allreduce", 1 << 23, comm).algorithm == \
+        "halving_doubling"
+
+
+def test_tuning_nranks_filter():
+    """nranks-scoped rules apply only to matching communicator sizes."""
+    sel = Selector()
+    sel.set_tuning("allreduce", "recursive_doubling", nranks=4)
+    c8 = sel.choose("allreduce", 64 << 20, Communicator(axis="x", size=8))
+    c4 = sel.choose("allreduce", 64 << 20, Communicator(axis="x", size=4))
+    assert c4.algorithm == "recursive_doubling"
+    assert c8.algorithm != "recursive_doubling"
+
+
+def test_tuning_pins_segment_count():
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    auto = sel.choose("allreduce", 64 << 20, comm)
+    assert auto.segments > 1
+    sel.set_tuning("allreduce", auto.algorithm, segments=1)
+    pinned = sel.choose("allreduce", 64 << 20, comm)
+    assert pinned.algorithm == auto.algorithm
+    assert pinned.segments == 1
+    assert pinned.predicted_s > auto.predicted_s  # pipelining was winning
+
+
+def test_eager_cutoff_exact_boundary():
+    """eager admissible up to eager_max_bytes inclusive, not beyond."""
+    sel = Selector(eager_max_bytes=4096)
+    comm = Communicator(axis="x", size=8)
+    assert sel._protocol_overhead("eager", 4096, comm) is not None
+    assert sel._protocol_overhead("eager", 4097, comm) is None
+    assert sel._protocol_overhead("rendezvous", 1 << 30, comm) == \
+        comm.hw.rendezvous_rtt
+
+
+def test_pow2_only_filtering_on_nonpow2_comm():
+    """Candidate enumeration drops pow2-only generators on n=6."""
+    sel = Selector()
+    algos6 = {a for a, _ in sel.candidates("allreduce",
+                                           Communicator(axis="x", size=6))}
+    algos8 = {a for a, _ in sel.candidates("allreduce",
+                                           Communicator(axis="x", size=8))}
+    assert algos6 == {"ring", "bidi_ring"}
+    assert algos8 == {"ring", "bidi_ring", "recursive_doubling",
+                      "halving_doubling"}
+
+
+# -- memoization --------------------------------------------------------------
+
+def test_choose_is_memoized_zero_generator_calls():
+    """Second identical choose() runs no generators and returns the same
+    Choice object."""
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    first = sel.choose("allreduce", 1 << 20, comm)
+    gens_after_first = sel.stats["gen_calls"]
+    assert gens_after_first > 0
+    second = sel.choose("allreduce", 1 << 20, comm)
+    assert second is first
+    assert sel.stats["gen_calls"] == gens_after_first  # zero new invocations
+    assert sel.stats["cache_hits"] == 1
+    # a different message size is a different cache entry
+    sel.choose("allreduce", 1 << 21, comm)
+    assert sel.stats["gen_calls"] > gens_after_first
+
+
+def test_set_tuning_invalidates_choose_cache():
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    auto = sel.choose("allreduce", 1 << 20, comm)
+    sel.set_tuning("allreduce", "recursive_doubling")
+    tuned = sel.choose("allreduce", 1 << 20, comm)
+    assert tuned.algorithm == "recursive_doubling"
+    assert auto.algorithm != tuned.algorithm
