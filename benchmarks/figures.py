@@ -110,6 +110,8 @@ def fig10_collectives(h2h: bool = False):
                                     else "allreduce", nbytes, comm)
                 row(f"{tag}/{coll}/{nbytes>>10}KB/{backend}", us,
                     f"selected={choice.algorithm}/{choice.protocol} "
+                    f"segments={choice.segments} "
+                    f"compressed={choice.compressed} "
                     f"tpu_model={choice.predicted_s*1e6:.1f}us")
 
 
@@ -137,17 +139,38 @@ def fig12_scaling():
 
 # -- Segment sweep: pipelined protocol (paper §4.4.3 / Fig 10 knob) -----------
 
+#: named schedules swept IN ADDITION to the selector's auto picks — the
+#: tree / masked / recursive-doubling algorithms that became segmentable
+#: when the data plane unified behind the micro-op executor. Every one of
+#: these lowers through the same SEG_LOOP pipeline as the rings now.
+SEG_SWEEP_NAMED = (
+    ("allreduce", "halving_doubling"),      # recursive halving + doubling
+    ("allreduce", "recursive_doubling"),    # hypercube, SEL_ALL steps
+    ("reduce_scatter", "recursive_halving"),
+    ("reduce", "binomial_tree"),            # tree with masked receivers
+    ("reduce", "ring"),                     # relay='received' eager ring
+    ("bcast", "binomial_tree"),
+    ("alltoall", "bruck"),                  # SEL_MASK gather/scatter segs
+)
+
+
 def seg_sweep(segment_counts=None, nranks: int = 8,
               sizes=(1 << 16, 1 << 20, 1 << 22, 1 << 24, 1 << 26)):
-    """Alpha-beta time vs wire segment count, per collective and size.
+    """Alpha-beta time vs wire segment count, per schedule and size.
 
     Pure model (no device timing): this is the paper's Rx-buffer-size
     latency knob (arXiv 2403.18374 shows it dominating collective latency
-    at scale). Emits one printed row per (collective, size) with the best
-    segment count, and one structured record per (collective, size,
-    segments) into BENCH_collectives.json. Pipelining must strictly
-    dominate the 1-segment baseline for every message >= 1 MiB.
+    at scale). Sweeps the selector's auto pick for the big three
+    collectives plus SEG_SWEEP_NAMED — the tree/masked/recursive
+    schedules the micro-op executor made segmentable. Emits one printed
+    row per (schedule, size) with the best segment count, and one
+    structured record per (schedule, size, segments) into
+    BENCH_collectives.json. Pipelining must strictly dominate the
+    1-segment baseline for every message >= 1 MiB.
     """
+    from repro.core.engine import _gen_schedule
+    from repro.core.selector import ALGO_PROTOCOLS
+
     if segment_counts is None:
         # price the ladder the selector actually picks from
         segment_counts = Selector.DEFAULT_SEGMENT_CANDIDATES
@@ -155,14 +178,37 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
     segment_counts = sorted(set(int(k) for k in segment_counts) | {1})
     comm = Communicator(axis="x", size=nranks)
     sel = Selector()
-    for coll in ("allreduce", "reduce_scatter", "allgather"):
+
+    items = [(coll, None) for coll in
+             ("allreduce", "reduce_scatter", "allgather")]
+    items += [(c, a) for (c, a) in SEG_SWEEP_NAMED
+              if comm.is_pow2 or a not in
+              ("halving_doubling", "recursive_doubling",
+               "recursive_halving", "bruck")]
+
+    emitted = set()  # (collective, algorithm, msg_bytes) curves recorded
+    for coll, named_algo in items:
         for nbytes in sizes:
-            choice = sel.choose(coll, nbytes, comm)
-            sched = choice.schedule
+            if named_algo is None:
+                choice = sel.choose(coll, nbytes, comm)
+                sched = choice.schedule
+                algo, proto = choice.algorithm, choice.protocol
+                chosen_k = choice.segments
+                label = coll
+            else:
+                if (coll, named_algo, int(nbytes)) in emitted:
+                    continue  # the auto pick already recorded this curve
+                sched = _gen_schedule(coll, named_algo, comm)
+                algo = named_algo
+                proto = ALGO_PROTOCOLS.get((coll, algo),
+                                           ("rendezvous",))[0]
+                chosen_k = None
+                label = f"{coll}.{algo}"
+            emitted.add((coll, algo, int(nbytes)))
             # whether the selector would ever auto-segment this schedule
             # at this size (copy-only schedules and sub-floor messages
             # never are) — single source of truth: admissible_segments
-            auto_ok = sel.admissible_segments(sched, nbytes) != (1,)
+            auto_ok = sel.admissible_segments(sched, nbytes, comm) != (1,)
             copy_only = all(s.op == "copy" for s in sched.steps)
             why_not = "copy-only" if copy_only else "below-floor"
             times = {}
@@ -172,20 +218,21 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
                 times[k] = t
                 record_sweep({
                     "collective": coll,
-                    "algorithm": choice.algorithm,
-                    "protocol": choice.protocol,
+                    "algorithm": algo,
+                    "protocol": proto,
+                    "auto": named_algo is None,
                     "nranks": nranks,
                     "msg_bytes": int(nbytes),
                     "segments": int(k),
                     "predicted_s": t,
-                    "selected": k == choice.segments,
+                    "selected": k == chosen_k,
                     "auto_segmentable": auto_ok,
                 })
             best_k = min(times, key=times.get)
             dominated = times[best_k] < times[1]
-            row(f"segsweep/{coll}/{nbytes>>10}KB/{nranks}ranks",
+            row(f"segsweep/{label}/{nbytes>>10}KB/{nranks}ranks",
                 times[best_k] * 1e6,
-                f"algo={choice.algorithm} best_segments={best_k} "
+                f"algo={algo} best_segments={best_k} "
                 f"t1={times[1]*1e6:.1f}us "
                 f"speedup={times[1]/times[best_k]:.2f}x "
                 f"dominates={dominated}"

@@ -1,22 +1,28 @@
 """repro.core — the ACCL+ collective engine, TPU/JAX-native.
 
 Public API:
-    CollectiveEngine   the CCLO: MPI-like + streaming collectives
-    Selector           runtime-tunable algorithm/protocol selection
-    Communicator       rank group over a mesh axis
-    Schedule/Step/Sel  microcode IR
+    CollectiveEngine     the CCLO: MPI-like + streaming collectives
+    execute_program      the one data plane: runs a compiled micro-op Program
+    Selector             runtime-tunable algorithm/protocol selection
+    Communicator         rank group over a mesh axis
+    Schedule/Step/Sel    microcode IR (compiles to a Program)
+    Program              the micro-op IR (core/program.py)
+    register_collective  out-of-tree collectives, no engine changes needed
 """
 from repro.core import compat  # installs the jax.shard_map polyfill first
-from repro.core.engine import CollectiveEngine, interpret_schedule
+from repro.core.engine import CollectiveEngine, execute_program
+from repro.core.program import Program, compile_schedule
+from repro.core.plugins import register_collective, unregister_collective
 from repro.core.selector import Selector, Choice
 from repro.core.topology import Communicator, axis_comm, make_mesh
 from repro.core.schedule import Schedule, Step, Sel
 from repro.core.hw_spec import HwSpec, TPU_V5E, ACCL_CLUSTER
-from repro.core import algorithms, plugins, simulator
+from repro.core import algorithms, plugins, program, simulator
 
 __all__ = [
-    "CollectiveEngine", "interpret_schedule", "Selector", "Choice",
+    "CollectiveEngine", "execute_program", "Program", "compile_schedule",
+    "register_collective", "unregister_collective", "Selector", "Choice",
     "Communicator", "axis_comm", "make_mesh", "Schedule", "Step", "Sel",
-    "HwSpec", "TPU_V5E", "ACCL_CLUSTER", "algorithms", "plugins", "simulator",
-    "compat",
+    "HwSpec", "TPU_V5E", "ACCL_CLUSTER", "algorithms", "plugins", "program",
+    "simulator", "compat",
 ]

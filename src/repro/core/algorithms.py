@@ -42,17 +42,19 @@ def ring_reduce_scatter(comm: Communicator, op: str = "add") -> Schedule:
     Canonical layout (matches lax.psum_scatter tiled): after the schedule,
     rank r owns fully-reduced chunk r. Chunk c starts its journey at rank
     c+1 and lands at rank c after n-1 hops.
+
+    The selector closures are shared across steps and pure in the step
+    index (uniform=True), so the IR compiler rolls the whole ring into
+    one LOOP micro-op — a single lax.scan with one live buffer.
     """
     n = comm.size
+    perm = tuple(comm.ring_perm(1))
+    send = Sel.chunk(lambda r, s: (r - s - 1) % n)
+    recv = Sel.chunk(lambda r, s: (r - s - 2) % n)
     steps = tuple(
-        Step(
-            perm=tuple(comm.ring_perm(1)),
-            op=op,
-            send_sel=Sel.chunk(lambda r, _s, s=s: (r - s - 1) % n),
-            recv_sel=Sel.chunk(lambda r, _s, s=s: (r - s - 2) % n),
-            bytes_frac=1.0 / n,
-        )
-        for s in range(n - 1)
+        Step(perm=perm, op=op, send_sel=send, recv_sel=recv,
+             bytes_frac=1.0 / n, uniform=True)
+        for _ in range(n - 1)
     )
     return Schedule(
         name="ring", collective="reduce_scatter", nranks=n, steps=steps,
@@ -60,18 +62,24 @@ def ring_reduce_scatter(comm: Communicator, op: str = "add") -> Schedule:
     )
 
 
-def ring_allgather(comm: Communicator, own_shift: int = 0) -> Schedule:
-    """Chunked ring allgather; rank r initially owns chunk (r+own_shift)%n."""
+def ring_allgather(comm: Communicator, own_shift: int = 0,
+                   step_offset: int = 0) -> Schedule:
+    """Chunked ring allgather; rank r initially owns chunk (r+own_shift)%n.
+
+    `step_offset` is the global step index of this phase's first step when
+    the steps are embedded in a composite schedule (ring allreduce): the
+    shared uniform closures subtract it from the step index they receive.
+    """
     n = comm.size
+    perm = tuple(comm.ring_perm(1))
+    send = Sel.chunk(
+        lambda r, s, off=step_offset: (r + own_shift - (s - off)) % n)
+    recv = Sel.chunk(
+        lambda r, s, off=step_offset: (r + own_shift - 1 - (s - off)) % n)
     steps = tuple(
-        Step(
-            perm=tuple(comm.ring_perm(1)),
-            op="copy",
-            send_sel=Sel.chunk(lambda r, _s, s=s: (r + own_shift - s) % n),
-            recv_sel=Sel.chunk(lambda r, _s, s=s: (r + own_shift - 1 - s) % n),
-            bytes_frac=1.0 / n,
-        )
-        for s in range(n - 1)
+        Step(perm=perm, op="copy", send_sel=send, recv_sel=recv,
+             bytes_frac=1.0 / n, uniform=True)
+        for _ in range(n - 1)
     )
     return Schedule(
         name="ring", collective="allgather", nranks=n, steps=steps,
@@ -81,11 +89,12 @@ def ring_allgather(comm: Communicator, own_shift: int = 0) -> Schedule:
 
 def ring_allreduce(comm: Communicator, op: str = "add") -> Schedule:
     """Bandwidth-optimal ring allreduce: RS then AG, 2(n-1) steps."""
+    n = comm.size
     rs = ring_reduce_scatter(comm, op)
-    ag = ring_allgather(comm, own_shift=0)
+    ag = ring_allgather(comm, own_shift=0, step_offset=n - 1)
     return Schedule(
-        name="ring", collective="allreduce", nranks=comm.size,
-        steps=rs.steps + ag.steps, chunks=comm.size, result="full",
+        name="ring", collective="allreduce", nranks=n,
+        steps=rs.steps + ag.steps, chunks=n, result="full",
     )
 
 
@@ -98,36 +107,41 @@ def bidi_ring_allreduce(comm: Communicator, op: str = "add") -> Schedule:
     overlap_factor=2.
     """
     n = comm.size
+    cw, ccw = tuple(comm.ring_perm(1)), tuple(comm.ring_perm(-1))
+    # Steps interleave cw/ccw, so phase index = step_index // 2 (works for
+    # both slots: global index 2s and 2s+1 floor-divide to s). Closures
+    # are shared per direction and pure in (rank, step), so the compiler
+    # coalesces each phase into one period-2 LOOP whose two slots write
+    # disjoint chunk halves ([0, n) cw, [n, 2n) ccw) — XLA schedules the
+    # two permutes on both ICI directions concurrently.
+    rs_cw_send = Sel.chunk(lambda r, g: (r - g // 2 - 1) % n)
+    rs_cw_recv = Sel.chunk(lambda r, g: (r - g // 2 - 2) % n)
+    rs_ccw_send = Sel.chunk(lambda r, g: n + (r + g // 2 + 1) % n)
+    rs_ccw_recv = Sel.chunk(lambda r, g: n + (r + g // 2 + 2) % n)
+    ag_base = 2 * (n - 1)
+    ag_cw_send = Sel.chunk(lambda r, g: (r - (g - ag_base) // 2) % n)
+    ag_cw_recv = Sel.chunk(lambda r, g: (r - 1 - (g - ag_base) // 2) % n)
+    ag_ccw_send = Sel.chunk(lambda r, g: n + (r + (g - ag_base) // 2) % n)
+    ag_ccw_recv = Sel.chunk(
+        lambda r, g: n + (r + 1 + (g - ag_base) // 2) % n)
     steps = []
     # reduce-scatter phase (canonical: rank r ends owning cw chunk r and
     # ccw chunk n + r, both fully reduced)
-    for s in range(n - 1):
-        steps.append(Step(  # clockwise half
-            perm=tuple(comm.ring_perm(1)), op=op,
-            send_sel=Sel.chunk(lambda r, _s, s=s: (r - s - 1) % n),
-            recv_sel=Sel.chunk(lambda r, _s, s=s: (r - s - 2) % n),
-            bytes_frac=0.5 / n,
-        ))
-        steps.append(Step(  # counter-clockwise half (chunk ids offset by n)
-            perm=tuple(comm.ring_perm(-1)), op=op,
-            send_sel=Sel.chunk(lambda r, _s, s=s: n + (r + s + 1) % n),
-            recv_sel=Sel.chunk(lambda r, _s, s=s: n + (r + s + 2) % n),
-            bytes_frac=0.5 / n,
-        ))
+    for _ in range(n - 1):
+        steps.append(Step(perm=cw, op=op, send_sel=rs_cw_send,
+                          recv_sel=rs_cw_recv, bytes_frac=0.5 / n,
+                          uniform=True))
+        steps.append(Step(perm=ccw, op=op, send_sel=rs_ccw_send,
+                          recv_sel=rs_ccw_recv, bytes_frac=0.5 / n,
+                          uniform=True))
     # allgather phase (both halves owned at chunk r / n + r)
-    for s in range(n - 1):
-        steps.append(Step(
-            perm=tuple(comm.ring_perm(1)), op="copy",
-            send_sel=Sel.chunk(lambda r, _s, s=s: (r - s) % n),
-            recv_sel=Sel.chunk(lambda r, _s, s=s: (r - 1 - s) % n),
-            bytes_frac=0.5 / n,
-        ))
-        steps.append(Step(
-            perm=tuple(comm.ring_perm(-1)), op="copy",
-            send_sel=Sel.chunk(lambda r, _s, s=s: n + (r + s) % n),
-            recv_sel=Sel.chunk(lambda r, _s, s=s: n + (r + 1 + s) % n),
-            bytes_frac=0.5 / n,
-        ))
+    for _ in range(n - 1):
+        steps.append(Step(perm=cw, op="copy", send_sel=ag_cw_send,
+                          recv_sel=ag_cw_recv, bytes_frac=0.5 / n,
+                          uniform=True))
+        steps.append(Step(perm=ccw, op="copy", send_sel=ag_ccw_send,
+                          recv_sel=ag_ccw_recv, bytes_frac=0.5 / n,
+                          uniform=True))
     return Schedule(
         name="bidi_ring", collective="allreduce", nranks=n,
         steps=tuple(steps), chunks=2 * n, result="full", overlap_factor=2.0,
@@ -142,9 +156,10 @@ def ring_reduce(comm: Communicator, root: int = 0, op: str = "add") -> Schedule:
     holds the complete reduction. relay='received'.
     """
     n = comm.size
+    perm = tuple(comm.ring_perm(1))
     steps = tuple(
-        Step(perm=tuple(comm.ring_perm(1)), op=op,
-             send_sel=Sel.all(), recv_sel=Sel.all(), bytes_frac=1.0)
+        Step(perm=perm, op=op, send_sel=Sel.all(), recv_sel=Sel.all(),
+             bytes_frac=1.0, uniform=True)
         for _ in range(n - 1)
     )
     return Schedule(
@@ -384,6 +399,12 @@ def linear_alltoall(comm: Communicator) -> Schedule:
 
     Buffer convention: chunk j outbound = data for rank j; after the
     schedule chunk j holds data *from* rank j.
+
+    Every step uses a different ring shift, so these steps can never
+    coalesce into a LOOP micro-op — the executor unrolls n-1 chunk
+    writes. At large rank counts prefer bruck (log n steps; the auto
+    selector already does); a stacked-receive peephole for
+    relay='original' copy schedules is a ROADMAP item.
     """
     n = comm.size
     steps = tuple(
@@ -415,10 +436,13 @@ def bruck_alltoall(comm: Communicator) -> Schedule:
         def msel(r, s, mask=mask):
             return mask
 
+        sel = Sel.mask(msel)
         steps.append(Step(
             perm=tuple(comm.ring_perm(d)), op="copy",
-            send_sel=Sel.mask(msel), recv_sel=Sel.mask(msel),
-            bytes_frac=len(mask) / n,
+            # identical send/recv masks: the gathered payload segments on
+            # the wire and scatters back (segmentable=True annotation)
+            send_sel=sel, recv_sel=sel,
+            bytes_frac=len(mask) / n, segmentable=True,
         ))
     return Schedule(
         name="bruck", collective="alltoall", nranks=n, steps=tuple(steps),

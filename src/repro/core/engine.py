@@ -3,11 +3,20 @@
 Mirrors the ACCL+ hardware split (§4.4):
 
   control plane  = Python at trace time: the selector picks an algorithm,
-                   the generator emits a Schedule (microcode), this module
-                   interprets it — the uC + DMP.
-  data plane     = the lowered XLA program: `collective-permute` ops (Tx/Rx
-                   systems), dynamic slices (RxBuf manager placement),
-                   combine ops / codecs (streaming plugins).
+                   the generator emits a Schedule (microcode), the compiler
+                   lowers it to a micro-op Program — the uC + DMP.
+  data plane     = ONE executor, `execute_program`, interpreting the fixed
+                   micro-op set (core/program.py) as XLA: `collective-
+                   permute` ops (Tx/Rx systems), dynamic slices (RxBuf
+                   manager placement), combine ops / codecs (streaming
+                   plugins).
+
+Every collective — ring, tree, hypercube, masked, compressed, segmented —
+lowers through the same executor; there are no per-algorithm hand-written
+lowerings. That is the paper's property: new collectives are new
+microprograms, not new circuits. Uniform step runs (rings) execute as one
+rolled lax.scan (the LOOP micro-op), keeping O(n)-step schedules at O(1)
+live buffers; O(log n) schedules (trees, hypercubes) unroll.
 
 All MPI-like methods are called *inside* a `shard_map` region (the engine's
 H2H role inside train/serve steps) or via `run()` which wraps one for
@@ -30,6 +39,10 @@ from repro.core.compat import shard_map
 
 from repro.core import plugins
 from repro.core.algorithms import GENERATORS
+from repro.core.program import (
+    Copy, Compress, Decompress, Loop, Program, RecvCombine, SegLoop, Send,
+    fit_segments, split_exchange,
+)
 from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
 )
@@ -39,10 +52,10 @@ from repro.core.hw_spec import HwSpec, TPU_V5E
 
 
 # --------------------------------------------------------------------------
-# Schedule interpreter (the DMP)
+# Region helpers (RxBuf manager placement)
 # --------------------------------------------------------------------------
 
-def _select(buf, chunks: int, sel: Sel, rank, s_idx: int):
+def _select(buf, chunks: int, sel: Sel, rank, s_idx):
     csize = buf.shape[0] // chunks
     if sel.kind == SEL_ALL:
         return buf
@@ -59,189 +72,108 @@ def _select(buf, chunks: int, sel: Sel, rank, s_idx: int):
     raise ValueError(sel.kind)
 
 
-def _place(buf, chunks: int, sel: Sel, rank, s_idx: int, incoming, op: str,
-           is_dst, use_pallas: bool):
+def _recv_region(buf, chunks: int, sel: Sel, rank, s_idx):
+    """(view, elem_offset, mask_idxs) of the region `recv_sel` writes.
+
+    elem_offset is None for SEL_ALL (the whole buffer); mask_idxs is the
+    static chunk-index tuple for SEL_MASK (the view is their gathered
+    concatenation) and None otherwise."""
     csize = buf.shape[0] // chunks
-    comb = functools.partial(plugins.combine, op, use_pallas=use_pallas)
-    if sel.kind == SEL_ALL:
-        new = comb(buf, incoming.astype(buf.dtype))
-        return jnp.where(is_dst, new, buf) if is_dst is not None else new
-    if sel.kind in (SEL_CHUNK, SEL_RANGE):
-        if sel.kind == SEL_CHUNK:
-            off, length = sel.fn(rank, s_idx), 1
-        else:
-            off, length = sel.fn(rank, s_idx)
-        view = lax.dynamic_slice_in_dim(buf, off * csize, int(length) * csize, 0)
-        new = comb(view, incoming.astype(buf.dtype))
-        if is_dst is not None:
-            new = jnp.where(is_dst, new, view)
-        return lax.dynamic_update_slice_in_dim(buf, new, off * csize, 0)
     if sel.kind == SEL_MASK:
         idxs = sel.fn(rank, s_idx)
-        for k, j in enumerate(idxs):
-            view = buf[j * csize:(j + 1) * csize]
-            new = comb(view, incoming[k * csize:(k + 1) * csize].astype(buf.dtype))
-            if is_dst is not None:
-                new = jnp.where(is_dst, new, view)
-            buf = buf.at[j * csize:(j + 1) * csize].set(new)
-        return buf
-    raise ValueError(sel.kind)
-
-
-def _recv_region(buf, chunks: int, sel: Sel, rank, s_idx: int):
-    """(view, elem_offset) of the region `recv_sel` will write.
-
-    The view is exactly `_select`'s slice (one decode path for both the
-    segmented and unsegmented interpreter); elem_offset is None for
-    SEL_ALL (whole buffer). SEL_MASK selectors are not contiguous regions
-    and return (None, None)."""
-    if sel.kind not in (SEL_ALL, SEL_CHUNK, SEL_RANGE):
-        return None, None
-    csize = buf.shape[0] // chunks
+        view = jnp.concatenate(
+            [buf[j * csize:(j + 1) * csize] for j in idxs], axis=0)
+        return view, None, tuple(idxs)
     if sel.kind == SEL_ALL:
-        off = None
-    elif sel.kind == SEL_CHUNK:
+        return buf, None, None
+    if sel.kind == SEL_CHUNK:
         off = sel.fn(rank, s_idx) * csize
     else:
         off = sel.fn(rank, s_idx)[0] * csize
-    return _select(buf, chunks, sel, rank, s_idx), off
+    return _select(buf, chunks, sel, rank, s_idx), off, None
 
 
-def interpret_schedule(schedule: Schedule, buf, axis: str, *,
-                       compression: Optional[str] = None,
-                       use_pallas: bool = False,
-                       segments: Optional[int] = None):
-    """Execute `schedule` on the local shard `buf` inside shard_map.
+def _apply_write(buf, chunks: int, off, mask_idxs, new_val):
+    """Write a combined region value back (inverse of `_recv_region`)."""
+    if mask_idxs is not None:
+        csize = buf.shape[0] // chunks
+        for k, j in enumerate(mask_idxs):
+            buf = buf.at[j * csize:(j + 1) * csize].set(
+                new_val[k * csize:(k + 1) * csize])
+        return buf
+    if off is None:
+        return new_val
+    return lax.dynamic_update_slice_in_dim(buf, new_val, off, 0)
 
-    `buf` leading dim must be divisible by schedule.chunks. Returns the
-    final buffer (meaning depends on schedule.result).
 
-    `segments` (default: the schedule's own knob) pipelines each step's
-    wire payload through Rx-buffer-sized segments: segment s+1 is
-    ppermuted while segment s runs through the combine plugin. Steps the
-    segmented datapath cannot express (mask selectors, relay-of-received
-    schedules, indivisible payloads) fall back to whole-payload moves.
-    """
-    n = schedule.nranks
-    rank = lax.axis_index(axis)
-    codec = plugins.get_codec(compression) if compression else None
-    csize = buf.shape[0] // schedule.chunks
-    k_req = schedule.segments if segments is None else int(segments)
-
-    if schedule.pre_rotate == "bruck":
-        grp = buf.reshape((schedule.chunks, csize) + buf.shape[1:])
-        grp = jnp.roll(grp, -rank, axis=0)
-        buf = grp.reshape(buf.shape)
-
-    x0 = buf
-    last_recv = buf  # relay='received': step 0 forwards the original input
-
-    for s_idx, step in enumerate(schedule.steps):
-        src_store = {"buffer": buf, "original": x0,
-                     "received": last_recv}[schedule.relay]
-        payload = _select(src_store, schedule.chunks, step.send_sel, rank, s_idx)
-
-        is_dst = None
-        if step.mask_recv:
-            dsts = jnp.asarray([d for (_, d) in step.perm])
-            is_dst = jnp.any(rank == dsts)
-
-        view, off = (None, None)
-        if (k_req > 1 and schedule.relay != "received"
-                and step.send_sel.kind != SEL_MASK
-                and step.recv_sel.kind != SEL_MASK):
-            view, off = _recv_region(buf, schedule.chunks, step.recv_sel,
-                                     rank, s_idx)
-        k = (_fit_segments(payload.shape[0], k_req)
-             if view is not None and view.shape[0] == payload.shape[0] else 1)
-
-        if k > 1:
-            # segmented datapath: pipeline wire + combine per segment
-            tgt = view.reshape((k, -1) + view.shape[1:])
-            comb = functools.partial(plugins.combine, step.op,
-                                     use_pallas=use_pallas)
-
-            def send(seg):
-                if codec is None:
-                    return lax.ppermute(seg, axis, step.perm)
-                wire = codec.compress(seg, use_pallas=use_pallas)
-                wire = jax.tree.map(
-                    lambda leaf: lax.ppermute(leaf, axis, step.perm), wire)
-                return codec.decompress(wire, seg.shape, seg.dtype,
-                                        use_pallas=use_pallas)
-
-            def consume(i, incoming):
-                return comb(tgt[i], incoming.astype(buf.dtype))
-
-            new = _pipelined_exchange(payload, send, consume, k)
-            new = new.reshape(view.shape)
-            if is_dst is not None:
-                new = jnp.where(is_dst, new, view)
-            if off is None:
-                buf = new
-            else:
-                buf = lax.dynamic_update_slice_in_dim(buf, new, off, 0)
-            continue
-
-        if codec is not None:
-            wire = codec.compress(payload, use_pallas=use_pallas)
-            wire = jax.tree.map(
-                lambda leaf: lax.ppermute(leaf, axis, step.perm), wire)
-            incoming = codec.decompress(wire, payload.shape, payload.dtype,
-                                        use_pallas=use_pallas)
-        else:
-            incoming = lax.ppermute(payload, axis, step.perm)
-
-        buf = _place(buf, schedule.chunks, step.recv_sel, rank, s_idx,
-                     incoming, step.op, is_dst, use_pallas)
-        if schedule.relay == "received":
-            last_recv = incoming
-
-    if schedule.post_rotate == "bruck":
-        grp = buf.reshape((schedule.chunks, csize) + buf.shape[1:])
-        grp = jnp.roll(grp[::-1], rank + 1, axis=0)
-        buf = grp.reshape(buf.shape)
-    return buf
+def _chunk_roll(buf, chunks: int, shift, reverse: bool = False):
+    """Local chunk rotation (the Bruck pre/post COPY micro-ops)."""
+    csize = buf.shape[0] // chunks
+    grp = buf.reshape((chunks, csize) + buf.shape[1:])
+    if reverse:
+        grp = grp[::-1]
+    grp = jnp.roll(grp, shift, axis=0)
+    return grp.reshape(buf.shape)
 
 
 # --------------------------------------------------------------------------
-# Looped ring lowerings (the memory-safe hot path)
-#
-# Unrolling a 16-rank ring produces 15 full-buffer dynamic-update-slice
-# chains per collective; XLA's buffer assignment cannot always alias them
-# and the arena explodes. Rolled lax.scan bodies keep ONE live buffer
-# (loop-carried, updated in place) and are reverse-differentiable — the VJP
-# of a scanned ring is another scanned ring.
+# Wire pipeline (SEG_LOOP / COMPRESS / SEND / DECOMPRESS)
 # --------------------------------------------------------------------------
-
-def _maybe_codec(compression):
-    return plugins.get_codec(compression) if compression else None
-
-
-def _ring_send(payload, axis, comm, codec, use_pallas, shape_dtype, shift=1):
-    if codec is None:
-        return lax.ppermute(payload, axis, comm.ring_perm(shift))
-    wire = codec.compress(payload, use_pallas=use_pallas)
-    wire = jax.tree.map(lambda l: lax.ppermute(l, axis, comm.ring_perm(shift)),
-                        wire)
-    return codec.decompress(wire, payload.shape, shape_dtype,
-                            use_pallas=use_pallas)
-
 
 def _fit_segments(seg_len: int, segments) -> int:
-    """Largest k <= segments that divides seg_len (>= 1).
-
-    Segment counts come from the selector as a preference; the data plane
-    clamps to a divisor of the payload length so segments stay equal-sized
-    (halving mirrors the pow2 candidate ladder)."""
-    k = max(1, int(segments or 1))
-    k = min(k, max(1, seg_len))
-    while k > 1 and seg_len % k:
-        k -= 1
-    return k
+    """Largest k <= segments that divides seg_len (>= 1); see
+    `program.fit_segments` (this alias keeps the historical name used by
+    the streaming fusions and tests)."""
+    return fit_segments(seg_len, segments)
 
 
-def _pipelined_exchange(payload, send, consume, segments: int):
+def _split_wire(mid_ops: tuple):
+    """Split the wire micro-ops at the SEND: ([COMPRESS?, SEND], [DECOMPRESS?]).
+
+    The send half runs at transmit time; the decompress half runs at
+    *consume* time, directly feeding the combine plugin. Keeping the
+    dequantize multiply adjacent to the combine add in every context —
+    straight-line k=1, inside the SEG_LOOP scan body, and the pipeline
+    tail — means XLA's FMA contraction fires identically everywhere, so
+    segmented codec wires stay bitwise-equal to unsegmented ones (the
+    per-segment scale-reuse guarantee). It also shrinks the pipeline's
+    in-flight state to the compressed wire format.
+    """
+    for i, op in enumerate(mid_ops):
+        if isinstance(op, Send):
+            return mid_ops[:i + 1], mid_ops[i + 1:]
+    raise ValueError("exchange without a SEND op")
+
+
+def _send_chain(send_ops: tuple, seg, axis: str, use_pallas: bool):
+    """[COMPRESS?] SEND — payload in, (possibly compressed) arrival out."""
+    cur = seg
+    for op in send_ops:
+        if isinstance(op, Compress):
+            cur = plugins.get_codec(op.codec).compress(
+                cur, use_pallas=use_pallas)
+        elif isinstance(op, Send):
+            cur = jax.tree.map(
+                lambda leaf, p=op.perm: lax.ppermute(leaf, axis, p), cur)
+        else:
+            raise ValueError(f"bad send op {op}")
+    return cur
+
+
+def _recv_chain(dec_ops: tuple, wire, shape, dtype, use_pallas: bool):
+    """[DECOMPRESS?] — arrived wire format in, payload-dtype segment out."""
+    cur = wire
+    for op in dec_ops:
+        if isinstance(op, Decompress):
+            cur = plugins.get_codec(op.codec).decompress(
+                cur, shape, dtype, use_pallas=use_pallas)
+        else:
+            raise ValueError(f"bad recv op {op}")
+    return cur
+
+
+def _pipelined_exchange(payload, send, consume, segments: int,
+                        collect_raw: bool = False):
     """Double-buffered segmented exchange: the ACCL+ Rx-buffer pipeline.
 
     Splits `payload` (leading dim divisible by `segments`) into segments,
@@ -250,15 +182,21 @@ def _pipelined_exchange(payload, send, consume, segments: int):
     combines/places the segment already in flight — so the wire and the
     combine plugin run concurrently, exactly the §4.4.3 Tx/Rx pipelining.
 
-    send:    seg -> incoming seg (ppermute, optionally through a codec).
-    consume: (seg_index, incoming seg) -> output seg (must be jax-traceable
-             with a traced index).
-    Returns the concatenated consumed segments, shaped like `payload`'s
-    consume output stacked back to the full step payload.
+    send:    seg -> in-flight seg (the transmit chain; may be a compressed
+             wire-format pytree).
+    consume: (seg_index, in-flight seg) -> output seg when `collect_raw`
+             is False, else (output seg, raw decompressed arrival). Must
+             be jax-traceable with a traced index; decompression happens
+             here so the dequantize feeds the combine directly in every
+             context (see `_split_wire`).
+    Returns (outputs, raw_incomings) stacked back to the full step payload;
+    raw_incomings is None unless `collect_raw` (relay='received' needs the
+    uncombined arrivals as the next step's payload).
     """
     k = int(segments)
     if k <= 1:
-        return consume(0, send(payload))
+        res = consume(0, send(payload))
+        return res if collect_raw else (res, None)
     pay = payload.reshape((k, payload.shape[0] // k) + payload.shape[1:])
     inflight = send(pay[0])
 
@@ -269,161 +207,161 @@ def _pipelined_exchange(payload, send, consume, segments: int):
 
     last, outs = lax.scan(seg_body, inflight, jnp.arange(k - 1))
     tail = consume(k - 1, last)
-    flat = jnp.concatenate(
-        [outs.reshape((-1,) + outs.shape[2:]), tail], axis=0)
-    return flat
+
+    def _stack(stacked, tail_leaf):
+        return jnp.concatenate(
+            [stacked.reshape((-1,) + stacked.shape[2:]), tail_leaf], axis=0)
+
+    if not collect_raw:
+        return _stack(outs, tail), None
+    return _stack(outs[0], tail[0]), _stack(outs[1], tail[1])
 
 
-def ring_reduce_scatter_loop(x2d, axis, comm: Communicator, op="add",
-                             compression=None, use_pallas=False,
-                             segments: int = 1):
-    """x2d: (n, csize); returns rank's fully-reduced row (csize,).
+# --------------------------------------------------------------------------
+# The executor (the DMP): one path for every collective
+# --------------------------------------------------------------------------
 
-    Canonical chunk ownership (rank r ends with row r), one scan. With
-    segments > 1 each ring step's chunk is cut into Rx-buffer-sized
-    segments pipelined through the wire/combine stages."""
-    n = comm.size
+def _codec_block(mid_ops: tuple) -> int:
+    for op in mid_ops:
+        if isinstance(op, Compress):
+            return plugins.get_codec(op.codec).block_elems
+    return 1
+
+
+def _exchange_update(body: tuple, k_req: int, buf, orig, prev, chunks: int,
+                     rank, step, axis: str, use_pallas: bool):
+    """Compute one exchange's region update WITHOUT writing it.
+
+    body = (Copy('load'), [Compress], Send, [Decompress], RecvCombine).
+    Returns (off, mask_idxs, new_val, raw_incoming) — the caller applies
+    the write (immediately for unrolled steps, deferred to iteration end
+    inside a LOOP)."""
+    load, recv = body[0], body[-1]
+    send_ops, dec_ops = _split_wire(body[1:-1])
+    src = {"buffer": buf, "original": orig, "received": prev}[load.source]
+    payload = _select(src, chunks, load.sel, rank, step)
+    view, off, mask_idxs = _recv_region(buf, chunks, recv.sel, rank, step)
+
+    k = 1
+    if k_req > 1 and view.shape[0] == payload.shape[0]:
+        row_elems = max(1, payload.size // max(1, payload.shape[0]))
+        # per-segment scale reuse: segment boundaries never straddle a
+        # codec scale block, so segmented codec wires stay bitwise equal
+        # to unsegmented ones
+        k = fit_segments(payload.shape[0], k_req, row_elems,
+                         _codec_block(send_ops))
+
+    comb = functools.partial(plugins.combine, recv.op,
+                             use_pallas=use_pallas)
+    is_dst = None
+    if recv.dsts is not None:
+        is_dst = jnp.any(rank == jnp.asarray(recv.dsts))
+
+    seg_shape = ((payload.shape[0] // k,) + payload.shape[1:])
+    tgt = view.reshape((k, -1) + view.shape[1:])
+
+    def send(seg):
+        return _send_chain(send_ops, seg, axis, use_pallas)
+
+    def consume(i, wire):
+        inc = _recv_chain(dec_ops, wire, seg_shape, payload.dtype,
+                          use_pallas)
+        out = comb(tgt[i], inc.astype(buf.dtype))
+        return (out, inc) if recv.track_recv else out
+
+    new_val, raw = _pipelined_exchange(payload, send, consume, k,
+                                       collect_raw=recv.track_recv)
+    new_val = new_val.reshape(view.shape)
+    if raw is not None:
+        raw = raw.reshape(payload.shape)
+    if is_dst is not None:
+        new_val = jnp.where(is_dst, new_val, view)
+    return off, mask_idxs, new_val, raw
+
+
+def _exec_loop(loop: Loop, buf, orig, prev, chunks: int, rank, axis: str,
+               use_pallas: bool):
+    """Rolled execution of a uniform step run — ONE lax.scan, one live
+    buffer. Slot payloads and combine targets read the iteration-start
+    buffer (region writes land at iteration end), so the slots' permutes
+    carry no intra-iteration data dependency and XLA schedules them on
+    independent links concurrently (the bidirectional ring)."""
+    track = any(split_exchange(s)[0][-1].track_recv for s in loop.slots)
+    carry0 = (buf, prev) if track else buf
+
+    def body(carry, i):
+        b, pv = carry if track else (carry, prev)
+        writes = []
+        new_prev = pv
+        for slot, seq in enumerate(loop.slots):
+            step = loop.base + i * loop.period + slot
+            ops, k_req = split_exchange(seq)
+            off, mask_idxs, new_val, raw = _exchange_update(
+                ops, k_req, b, orig, pv, chunks, rank, step, axis,
+                use_pallas)
+            writes.append((off, mask_idxs, new_val))
+            if raw is not None:
+                new_prev = raw
+        for off, mask_idxs, new_val in writes:
+            b = _apply_write(b, chunks, off, mask_idxs, new_val)
+        return ((b, new_prev) if track else b), None
+
+    out, _ = lax.scan(body, carry0, jnp.arange(loop.trip))
+    return out if track else (out, prev)
+
+
+def execute_program(prog: Program, buf, axis: str, *,
+                    use_pallas: bool = False):
+    """Execute a compiled micro-op Program on the local shard `buf` inside
+    shard_map. `buf` leading dim must be divisible by prog.chunks; returns
+    the final buffer (meaning depends on the schedule's `result`).
+
+    This is the single data plane: every collective the engine issues —
+    whatever the algorithm, codec, or segment count — runs through here.
+    """
+    if buf.shape[0] % prog.chunks:
+        raise ValueError(
+            f"buffer leading dim {buf.shape[0]} not divisible by "
+            f"{prog.chunks} chunks")
     rank = lax.axis_index(axis)
-    codec = _maybe_codec(compression)
-    segs = _fit_segments(x2d.shape[1], segments)
+    ops = prog.ops
+    i = 0
+    if ops and isinstance(ops[0], Copy) and ops[0].kind == "bruck_pre":
+        buf = _chunk_roll(buf, prog.chunks, -rank)
+        i = 1
+    orig = buf
+    prev = buf  # relay='received': step 0 forwards the original input
 
-    def body(buf, s):
-        send_idx = (rank - s - 1) % n
-        recv_idx = (rank - s - 2) % n
-        payload = buf[send_idx]
-        tgt = buf[recv_idx].reshape((segs, -1) + buf.shape[2:])
-
-        def send(seg):
-            return _ring_send(seg, axis, comm, codec, use_pallas, buf.dtype)
-
-        def consume(i, incoming):
-            return plugins.combine(op, tgt[i], incoming.astype(buf.dtype),
-                                   use_pallas=use_pallas)
-
-        new_val = _pipelined_exchange(payload, send, consume, segs)
-        buf = lax.dynamic_update_index_in_dim(
-            buf, new_val.reshape(buf.shape[1:]), recv_idx, 0)
-        return buf, None
-
-    buf, _ = lax.scan(body, x2d, jnp.arange(n - 1))
-    return buf[rank]
-
-
-def ring_allgather_loop(shard, axis, comm: Communicator, segments: int = 1):
-    """shard: (csize, ...); returns (n, csize, ...) rows in rank order."""
-    n = comm.size
-    rank = lax.axis_index(axis)
-    buf = jnp.zeros((n,) + shard.shape, shard.dtype)
-    buf = lax.dynamic_update_index_in_dim(buf, shard, rank, 0)
-    segs = _fit_segments(shard.shape[0] if shard.ndim else 1, segments)
-
-    def body(buf, s):
-        send_idx = (rank - s) % n
-        recv_idx = (rank - s - 1) % n
-
-        def send(seg):
-            return lax.ppermute(seg, axis, comm.ring_perm(1))
-
-        incoming = _pipelined_exchange(buf[send_idx], send,
-                                       lambda i, seg: seg, segs)
-        buf = lax.dynamic_update_index_in_dim(
-            buf, incoming.reshape(buf.shape[1:]), recv_idx, 0)
-        return buf, None
-
-    buf, _ = lax.scan(body, buf, jnp.arange(n - 1))
+    while i < len(ops):
+        op = ops[i]
+        if isinstance(op, Loop):
+            buf, prev = _exec_loop(op, buf, orig, prev, prog.chunks, rank,
+                                   axis, use_pallas)
+            i += 1
+        elif isinstance(op, Copy) and op.kind == "bruck_post":
+            buf = _chunk_roll(buf, prog.chunks, rank + 1, reverse=True)
+            i += 1
+        elif isinstance(op, SegLoop) or (
+                isinstance(op, Copy) and op.kind == "load"):
+            if isinstance(op, SegLoop):
+                body, k_req = op.body, op.segments
+                i += 1
+            else:
+                j = i
+                while not isinstance(ops[j], RecvCombine):
+                    j += 1
+                body, k_req = ops[i:j + 1], 1
+                i = j + 1
+            step = body[0].step
+            off, mask_idxs, new_val, raw = _exchange_update(
+                body, k_req, buf, orig, prev, prog.chunks, rank, step,
+                axis, use_pallas)
+            buf = _apply_write(buf, prog.chunks, off, mask_idxs, new_val)
+            if raw is not None:
+                prev = raw
+        else:
+            raise ValueError(f"unexpected micro-op {op}")
     return buf
-
-
-def ring_allreduce_loop(x2d, axis, comm: Communicator, op="add",
-                        compression=None, use_pallas=False,
-                        segments: int = 1):
-    """x2d: (n, csize) -> (n, csize) fully reduced (RS loop + AG loop).
-
-    Only the RS phase segments: the AG phase is copy-only, so cutting it
-    up would add per-segment alpha with no combine work to overlap (the
-    same rule Selector.admissible_segments applies to pure allgathers)."""
-    shard = ring_reduce_scatter_loop(x2d, axis, comm, op, compression,
-                                     use_pallas, segments=segments)
-    return ring_allgather_loop(shard, axis, comm, segments=1)
-
-
-def bidi_ring_allreduce_loop(x2d, axis, comm: Communicator, op="add",
-                             compression=None, use_pallas=False,
-                             segments: int = 1):
-    """x2d: (2n, csize): rows [0,n) ride the +1 ring, [n,2n) the -1 ring.
-
-    Both directions advance in the same scan iteration — two independent
-    ppermutes per step use both ICI directions concurrently. With
-    segments > 1 both directions' chunks are additionally cut into
-    pipelined segments (the two directional pipelines stay independent)."""
-    n = comm.size
-    rank = lax.axis_index(axis)
-    codec = _maybe_codec(compression)
-    segs = _fit_segments(x2d.shape[1], segments)
-
-    def _dir_new_row(buf, send_idx, recv_idx, shift, combine_op):
-        """New value for `recv_idx`'s row, read entirely from the pre-step
-        buffer — the two directions' exchanges stay data-independent so
-        XLA schedules their ppermutes on both ICI directions concurrently.
-
-        Copy-only exchanges (the AG phase, combine_op=None) never
-        segment: there is no combine work to overlap."""
-        k = segs if combine_op is not None else 1
-        payload = buf[send_idx]
-        tgt = buf[recv_idx].reshape((k, -1) + buf.shape[2:])
-        # compression applies to the RS phase only (as in the uni ring:
-        # the AG phase relays already-reduced chunks uncompressed)
-        cdc = codec if combine_op is not None else None
-
-        def send(seg):
-            return _ring_send(seg, axis, comm, cdc, use_pallas, buf.dtype,
-                              shift=shift)
-
-        def consume(i, incoming):
-            inc = incoming.astype(buf.dtype)
-            if combine_op is None:
-                return inc
-            return plugins.combine(combine_op, tgt[i], inc,
-                                   use_pallas=use_pallas)
-
-        new_val = _pipelined_exchange(payload, send, consume, k)
-        return new_val.reshape(buf.shape[1:])
-
-    def rs_body(buf, s):
-        cw_send, cw_recv = (rank - s - 1) % n, (rank - s - 2) % n
-        ccw_send, ccw_recv = n + (rank + s + 1) % n, n + (rank + s + 2) % n
-        new_c = _dir_new_row(buf, cw_send, cw_recv, 1, op)
-        new_w = _dir_new_row(buf, ccw_send, ccw_recv, -1, op)
-        buf = lax.dynamic_update_index_in_dim(buf, new_c, cw_recv, 0)
-        buf = lax.dynamic_update_index_in_dim(buf, new_w, ccw_recv, 0)
-        return buf, None
-
-    def ag_body(buf, s):
-        cw_send, cw_recv = (rank - s) % n, (rank - s - 1) % n
-        ccw_send, ccw_recv = n + (rank + s) % n, n + (rank + s + 1) % n
-        new_c = _dir_new_row(buf, cw_send, cw_recv, 1, None)
-        new_w = _dir_new_row(buf, ccw_send, ccw_recv, -1, None)
-        buf = lax.dynamic_update_index_in_dim(buf, new_c, cw_recv, 0)
-        buf = lax.dynamic_update_index_in_dim(buf, new_w, ccw_recv, 0)
-        return buf, None
-
-    buf, _ = lax.scan(rs_body, x2d, jnp.arange(n - 1))
-    buf, _ = lax.scan(ag_body, buf, jnp.arange(n - 1))
-    return buf
-
-
-def linear_alltoall_collect(x2d, axis, comm: Communicator):
-    """x2d: (n, csize): row j -> rank j. No update-slice chains: receives
-    stack into (n-1, csize) and one gather reorders them."""
-    n = comm.size
-    rank = lax.axis_index(axis)
-    received = []
-    for s in range(1, n):
-        payload = x2d[(rank + s) % n]
-        received.append(lax.ppermute(payload, axis, comm.ring_perm(s)))
-    stacked = jnp.stack([x2d[rank]] + received)   # slot s = from rank r-s
-    src_slot = (rank - jnp.arange(n)) % n         # out[j] = from rank j
-    return jnp.take(stacked, src_slot, axis=0)
 
 
 # --------------------------------------------------------------------------
@@ -438,9 +376,20 @@ def _flatten_pad(x, mult: int):
     return flat, x.shape, x.size
 
 
+def _find_generator(collective: str, algorithm: str):
+    gen = GENERATORS.get((collective, algorithm))
+    if gen is None:
+        gen = plugins.custom_generator(collective, algorithm)
+    if gen is None:
+        raise KeyError(
+            f"no generator for ({collective!r}, {algorithm!r}); "
+            f"register one via plugins.register_collective")
+    return gen
+
+
 def _gen_schedule(collective: str, algorithm: str, comm: Communicator,
                   root: int = 0, op: str = "add") -> Schedule:
-    gen = GENERATORS[(collective, algorithm)]
+    gen = _find_generator(collective, algorithm)
     params = inspect.signature(gen).parameters
     kw = {}
     if "root" in params:
@@ -491,16 +440,21 @@ class CollectiveEngine:
 
     def _resolve(self, collective: str, x, axis: str, algorithm: str,
                  root: int = 0, op: str = "add",
-                 segments: Optional[int] = None) -> Schedule:
+                 segments: Optional[int] = None,
+                 compression: Optional[str] = None) -> Schedule:
         """Pick algorithm + segment count; return the (cached) schedule.
 
         The returned schedule carries the chosen segment count in
         `.segments` (caller-supplied `segments` overrides the selector).
+        `compression` feeds the selector's compressed-wire pricing: the
+        beta term shrinks by the codec's wire ratio and the segment sweep
+        prices compressed-segmented variants.
         """
         comm = self.comm(axis)
         if algorithm in (None, "auto"):
             choice = self.selector.choose(
-                collective, x.size * x.dtype.itemsize, comm)
+                collective, x.size * x.dtype.itemsize, comm,
+                codec=compression, elem_bytes=x.dtype.itemsize)
             algorithm = choice.algorithm
             if segments is None:
                 segments = choice.segments
@@ -518,6 +472,12 @@ class CollectiveEngine:
         self.trace_log.append((collective, algorithm, axis,
                                int(x.size * x.dtype.itemsize)))
         return sched
+
+    def _execute(self, sched: Schedule, buf, axis: str,
+                 compression: Optional[str] = None):
+        """Compile (memoized) and run through the one data plane."""
+        prog = sched.compile(codec=compression)
+        return execute_program(prog, buf, axis, use_pallas=self.use_pallas)
 
     def run(self, fn, in_specs, out_specs):
         """shard_map wrapper for standalone (F2F-style) engine programs."""
@@ -540,32 +500,15 @@ class CollectiveEngine:
                 return lax.pmax(x, axis)
             if op == "min":
                 return lax.pmin(x, axis)
-        if compression is not None and segments is None:
-            # codecs quantize per wire payload, so auto-segmenting would
-            # silently change numerics (per-segment scale blocks); only
-            # segment compressed wires when the caller asks for it
-            segments = 1
         sched = self._resolve("allreduce", x, axis, algorithm, op=op,
-                              segments=segments)
-        comm = self.comm(axis)
-        if sched.name in ("ring", "bidi_ring"):
-            # memory-safe rolled-loop lowering. Padding stays a function of
-            # chunks alone so the chunk layout — and hence the elementwise
-            # reduction order — is identical at every segment count
-            # (uncompressed segmented lowerings are bitwise-equal to
-            # unsegmented ones); the loops clamp segments to a divisor of
-            # the chunk size.
-            chunks = n if sched.name == "ring" else 2 * n
-            flat, shape, size = _flatten_pad(x, chunks)
-            x2d = flat.reshape(chunks, -1)
-            fn = ring_allreduce_loop if sched.name == "ring" \
-                else bidi_ring_allreduce_loop
-            out = fn(x2d, axis, comm, op=op, compression=compression,
-                     use_pallas=self.use_pallas, segments=sched.segments)
-            return out.reshape(-1)[:size].reshape(shape)
+                              segments=segments, compression=compression)
+        # Padding stays a function of chunks alone so the chunk layout —
+        # and hence the elementwise reduction order — is identical at
+        # every segment count (uncompressed segmented lowerings are
+        # bitwise-equal to unsegmented ones; compressed ones too, by the
+        # scale-block alignment clamp in the executor).
         flat, shape, size = _flatten_pad(x, sched.chunks)
-        out = interpret_schedule(sched, flat, axis, compression=compression,
-                                 use_pallas=self.use_pallas)
+        out = self._execute(sched, flat, axis, compression)
         return out[:size].reshape(shape)
 
     def reduce_scatter(self, x, axis: str, op: str = "add",
@@ -583,19 +526,10 @@ class CollectiveEngine:
             return lax.psum_scatter(x.reshape(n, -1), axis,
                                     scatter_dimension=0,
                                     tiled=False).reshape(-1)
-        if compression is not None and segments is None:
-            segments = 1  # see allreduce: codecs quantize per wire payload
         sched = self._resolve("reduce_scatter", x, axis, algorithm, op=op,
-                              segments=segments)
-        if sched.name == "ring":
-            return ring_reduce_scatter_loop(
-                x.reshape(n, -1), axis, self.comm(axis), op=op,
-                compression=compression,
-                use_pallas=self.use_pallas,
-                segments=sched.segments).reshape(-1)
+                              segments=segments, compression=compression)
         flat = x.reshape(-1)
-        out = interpret_schedule(sched, flat, axis, compression=compression,
-                                 use_pallas=self.use_pallas)
+        out = self._execute(sched, flat, axis, compression)
         rank = lax.axis_index(axis)
         csize = flat.shape[0] // n
         own = sched.owned_chunk(rank)
@@ -613,34 +547,29 @@ class CollectiveEngine:
                                   tiled=True)
         sched = self._resolve("allgather", x, axis, algorithm,
                               segments=segments)
-        if sched.name == "ring":
-            return ring_allgather_loop(
-                x.reshape(-1), axis, self.comm(axis),
-                segments=sched.segments).reshape(-1)
         flat = x.reshape(-1)
         rank = lax.axis_index(axis)
         buf = jnp.zeros((n * flat.shape[0],), flat.dtype)
         buf = lax.dynamic_update_slice_in_dim(
             buf, flat, rank * flat.shape[0], 0)
-        out = interpret_schedule(sched, buf, axis,
-                                 use_pallas=self.use_pallas)
-        return out
+        return self._execute(sched, buf, axis)
 
-    def bcast(self, x, axis: str, root: int = 0, algorithm: str = "auto"):
+    def bcast(self, x, axis: str, root: int = 0, algorithm: str = "auto",
+              segments: Optional[int] = None):
         n = self.mesh.shape[axis]
         if n == 1:
             return x
         if self.backend == "native" and algorithm in (None, "auto"):
             full = lax.all_gather(x, axis)
             return full[root]
-        sched = self._resolve("bcast", x, axis, algorithm, root=root)
+        sched = self._resolve("bcast", x, axis, algorithm, root=root,
+                              segments=segments)
         flat, shape, size = _flatten_pad(x, sched.chunks)
-        out = interpret_schedule(sched, flat, axis,
-                                 use_pallas=self.use_pallas)
+        out = self._execute(sched, flat, axis)
         return out[:size].reshape(shape)
 
     def reduce(self, x, axis: str, root: int = 0, op: str = "add",
-               algorithm: str = "auto"):
+               algorithm: str = "auto", segments: Optional[int] = None):
         """MPI semantics: result meaningful at `root` only (other ranks may
         hold partial reductions, depending on the algorithm)."""
         n = self.mesh.shape[axis]
@@ -648,10 +577,10 @@ class CollectiveEngine:
             return x
         if self.backend == "native" and algorithm in (None, "auto"):
             return lax.psum(x, axis)
-        sched = self._resolve("reduce", x, axis, algorithm, root=root, op=op)
+        sched = self._resolve("reduce", x, axis, algorithm, root=root,
+                              op=op, segments=segments)
         flat, shape, size = _flatten_pad(x, sched.chunks)
-        out = interpret_schedule(sched, flat, axis,
-                                 use_pallas=self.use_pallas)
+        out = self._execute(sched, flat, axis)
         return out[:size].reshape(shape)
 
     def gather(self, x, axis: str, root: int = 0, algorithm: str = "auto"):
@@ -668,14 +597,14 @@ class CollectiveEngine:
         own_slot = rank if sched.chunk_coords == "absolute" else (rank - root) % n
         buf = lax.dynamic_update_slice_in_dim(
             buf, flat, own_slot * flat.shape[0], 0)
-        out = interpret_schedule(sched, buf, axis,
-                                 use_pallas=self.use_pallas)
+        out = self._execute(sched, buf, axis)
         if sched.chunk_coords == "relative":
             grp = out.reshape((n, flat.shape[0]))
             out = jnp.roll(grp, root, axis=0).reshape(-1)
         return out
 
-    def alltoall(self, x, axis: str, algorithm: str = "auto"):
+    def alltoall(self, x, axis: str, algorithm: str = "auto",
+                 segments: Optional[int] = None):
         """Tiled on leading dim: block j of the output came from rank j."""
         n = self.mesh.shape[axis]
         if n == 1:
@@ -685,13 +614,42 @@ class CollectiveEngine:
         if self.backend == "native" and algorithm in (None, "auto"):
             return lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
                                   tiled=True)
-        sched = self._resolve("alltoall", x, axis, algorithm)
-        if sched.name == "linear":
-            x2d = x.reshape(n, -1)
-            out = linear_alltoall_collect(x2d, axis, self.comm(axis))
-            return out.reshape(x.shape)
-        out = interpret_schedule(sched, x, axis, use_pallas=self.use_pallas)
-        return out
+        sched = self._resolve("alltoall", x, axis, algorithm,
+                              segments=segments)
+        return self._execute(sched, x, axis)
+
+    def collective(self, name: str, x, axis: str, *,
+                   algorithm: str = "auto", root: int = 0, op: str = "add",
+                   compression: Optional[str] = None,
+                   segments: Optional[int] = None):
+        """Run a collective registered via `plugins.register_collective`.
+
+        The paper's "new collectives without re-synthesis" path: an
+        out-of-tree schedule generator lowers through the same selector,
+        compiler, and `execute_program` data plane as the built-ins (see
+        examples/custom_collective.py). Result convention follows the
+        schedule: 'shard' returns this rank's owned chunk, anything else
+        the full (trimmed) buffer.
+        """
+        n = self.mesh.shape[axis]
+        if n == 1:
+            return x
+        sched = self._resolve(name, x, axis, algorithm, root=root, op=op,
+                              segments=segments, compression=compression)
+        if sched.result == "shard" and x.size % sched.chunks:
+            # a shard result returns one raw chunk — padding would hand
+            # some rank silent zeros (reduce_scatter applies the same rule)
+            raise ValueError(
+                f"{name} returns shards: input size {x.size} must be "
+                f"divisible by {sched.chunks} chunks")
+        flat, shape, size = _flatten_pad(x, sched.chunks)
+        out = self._execute(sched, flat, axis, compression)
+        if sched.result == "shard":
+            rank = lax.axis_index(axis)
+            csize = flat.shape[0] // sched.chunks
+            own = sched.owned_chunk(rank)
+            return lax.dynamic_slice_in_dim(out, own * csize, csize, 0)
+        return out[:size].reshape(shape)
 
     def send_recv(self, x, axis: str, shift: int = 1):
         """Neighbour exchange along a ring (the paper's send/recv pair)."""
@@ -716,6 +674,8 @@ class CollectiveEngine:
         RS over axes[0] -> recurse over the rest on 1/n of the bytes -> AG
         back over axes[0]. Across pods this sends only 1/|data| of the
         gradient bytes over DCN — the multi-pod collective optimization.
+        (The pod axis prices its own segment floor: see
+        `HwSpec.dcn_min_segment_bytes`.)
         """
         axes = [a for a in axes if self.mesh.shape[a] > 1]
         if not axes:

@@ -28,6 +28,13 @@ class HwSpec:
     # Latency terms (alpha in the alpha-beta model), seconds.
     ici_hop_latency: float = 1e-6   # per-hop ICI latency
     dcn_hop_latency: float = 10e-6  # pod-to-pod latency
+    # Wire-segmentation floors (Rx-buffer minimums): never cut a step's
+    # payload below this many bytes per segment. The DCN floor is much
+    # higher than the ICI one because the 10 us pod-to-pod alpha makes
+    # tiny segments pure latency (alpha*bw is 250 KB on DCN vs 50 KB on
+    # ICI), so the pod axis prices a different segment optimum.
+    ici_min_segment_bytes: float = 8 * 1024
+    dcn_min_segment_bytes: float = 256 * 1024
     # Eager-protocol modeled staging-copy bandwidth (HBM copy at receiver).
     eager_copy_bw: float = 819e9
     # Rendezvous handshake: one extra round trip before payload.

@@ -16,7 +16,7 @@ each leaf.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +109,12 @@ class Codec(NamedTuple):
     compress: Callable
     decompress: Callable  # (Compressed, shape, dtype) -> array
     wire_bytes_per_elem: float
+    # Scale-block granularity in elements. Wire segmentation only admits
+    # segment sizes that are whole blocks (per-segment scale reuse): every
+    # scale is computed from exactly the elements it would see
+    # unsegmented, so segmented codec wires are bitwise-identical to
+    # unsegmented ones. 1 = elementwise codec, any segmentation is exact.
+    block_elems: int = 1
 
 
 CODECS: dict[str, Codec] = {
@@ -116,12 +122,14 @@ CODECS: dict[str, Codec] = {
         lambda x, use_pallas=False: bf16_compress(x),
         lambda c, shape, dtype, use_pallas=False: bf16_decompress(c, dtype).reshape(shape),
         2.0,
+        1,
     ),
     "int8": Codec(
         int8_compress,
         lambda c, shape, dtype, use_pallas=False: int8_decompress(
             c, shape, dtype, use_pallas),
         1.0 + 4.0 / QUANT_BLOCK,
+        QUANT_BLOCK,
     ),
 }
 
@@ -130,3 +138,69 @@ def get_codec(name: str) -> Codec:
     if name not in CODECS:
         raise ValueError(f"unknown codec {name!r}; have {sorted(CODECS)}")
     return CODECS[name]
+
+
+# --------------------------------------------------------------------------
+# Collective registry — "new collectives without re-synthesis" (§4.2)
+# --------------------------------------------------------------------------
+#
+# In ACCL+ a new collective is new uC firmware: a new microprogram over the
+# fixed DMA/packetizer primitive set, deployed without re-synthesizing the
+# circuit. Here the analogue is a schedule generator registered at runtime:
+# it lowers through the same compiler and `execute_program` data plane as
+# every built-in, gets priced by the selector next to its sibling
+# algorithms, and runs in the numpy simulator for validation. See
+# examples/custom_collective.py for a worked out-of-tree example.
+
+# name -> {algorithm -> (schedule_fn, protocols)}
+CUSTOM_COLLECTIVES: dict[str, dict[str, tuple]] = {}
+# bumped on every registry mutation; Selector choice caches key on it so
+# (un)registering a collective invalidates stale picks
+_REGISTRY_VERSION = 0
+
+
+def registry_version() -> int:
+    return _REGISTRY_VERSION
+
+
+def register_collective(name: str, schedule_fn: Callable,
+                        algorithm: str = "custom",
+                        protocols: tuple = ("rendezvous",)) -> None:
+    """Register an out-of-tree collective.
+
+    schedule_fn(comm, **kwargs) -> Schedule; `root`/`op` keyword
+    parameters are forwarded by the engine when the generator declares
+    them. A generator that cannot serve a communicator (e.g. requires
+    pow2 ranks) should raise ValueError — the selector skips it, like
+    the built-ins' pow2 filter. Multiple algorithms may be registered
+    under one collective name — the selector prices them all (under
+    `protocols`) and `algorithm="auto"` picks the cheapest, exactly like
+    the built-in table.
+    """
+    global _REGISTRY_VERSION
+    if not callable(schedule_fn):
+        raise TypeError(f"schedule_fn for {name!r} must be callable")
+    CUSTOM_COLLECTIVES.setdefault(name, {})[algorithm] = (
+        schedule_fn, tuple(protocols))
+    _REGISTRY_VERSION += 1
+
+
+def unregister_collective(name: str, algorithm: Optional[str] = None) -> None:
+    """Remove a registered collective (all algorithms if none named)."""
+    global _REGISTRY_VERSION
+    if algorithm is None:
+        CUSTOM_COLLECTIVES.pop(name, None)
+    else:
+        CUSTOM_COLLECTIVES.get(name, {}).pop(algorithm, None)
+    _REGISTRY_VERSION += 1
+
+
+def custom_generator(name: str, algorithm: str) -> Optional[Callable]:
+    entry = CUSTOM_COLLECTIVES.get(name, {}).get(algorithm)
+    return entry[0] if entry is not None else None
+
+
+def custom_candidates(name: str):
+    """(algorithm, schedule_fn, protocols) triples registered for `name`."""
+    for algo, (fn, protos) in CUSTOM_COLLECTIVES.get(name, {}).items():
+        yield algo, fn, protos

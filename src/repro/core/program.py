@@ -1,0 +1,321 @@
+"""Micro-op IR — the fixed primitive set of the collective data plane.
+
+ACCL+'s central design point (§4.2–4.4) is that collectives are software-
+defined microprograms executed by ONE fixed engine over a small set of
+DMA/packetizer primitives; new collectives deploy without re-synthesizing
+the circuit. This module is that contract for our reproduction:
+
+  Schedule  (algorithm layer: what moves where, pure data + rank closures)
+     |  compile_schedule()                (the "firmware assembler")
+     v
+  Program   (this module: a linear list of micro-ops)
+     |  engine.execute_program()          (XLA data plane)
+     |  simulator.execute_program()       (numpy bus-functional model)
+
+The primitive set:
+
+  COPY          local DMA move: stage a selected region ("load"), or the
+                Bruck pre/post chunk rotations.
+  COMPRESS      unary streaming plugin: staged payload -> wire format.
+  SEND          the Tx/Rx system crossing: ppermute every wire leaf.
+  DECOMPRESS    wire format -> payload (receiver side of the codec).
+  RECV_COMBINE  binary streaming plugin: combine the arrived payload into
+                the local buffer region named by recv_sel.
+  SEG_LOOP      Rx-buffer pipelining (§4.4.3): run one exchange's ops per
+                wire segment, double-buffered — segment s+1 rides the wire
+                while segment s runs through the combine plugin.
+  LOOP          rolled execution of a uniform run of steps (one lax.scan
+                in the XLA executor). This is what keeps O(n)-step rings
+                at O(1) live buffers: unrolling a 16-rank ring produces 15
+                full-buffer dynamic-update-slice chains whose arenas XLA
+                cannot always alias.
+
+Both executors run the same Program object, so oracle parity in the numpy
+simulator covers the real code path, not a parallel reimplementation.
+
+Per-segment scale reuse (codecs): block codecs (int8) quantize in fixed
+element blocks. `fit_segments` only admits segment counts whose per-
+segment flat length is a whole number of codec blocks, so every scale
+block is computed from exactly the elements it would see unsegmented —
+segmented compressed wires are bitwise-identical to unsegmented ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.schedule import (
+    SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel, Step,
+)
+
+# Payload sources a COPY("load") may read (the schedule's relay modes).
+SRC_BUFFER = "buffer"
+SRC_ORIGINAL = "original"
+SRC_RECEIVED = "received"
+
+
+# --------------------------------------------------------------------------
+# Micro-ops
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Copy:
+    """Local DMA move. kind='load' stages `sel` of `source` as the wire
+    payload; kind='bruck_pre'/'bruck_post' rotate the buffer's chunks."""
+
+    kind: str                      # 'load' | 'bruck_pre' | 'bruck_post'
+    sel: Optional[Sel] = None      # load only
+    source: str = SRC_BUFFER       # load only
+    step: Optional[int] = None     # static step index; None inside a LOOP
+
+
+@dataclasses.dataclass(frozen=True)
+class Compress:
+    codec: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Send:
+    perm: tuple                    # (src, dst) pairs, one collective-permute
+
+
+@dataclasses.dataclass(frozen=True)
+class Decompress:
+    codec: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RecvCombine:
+    op: str
+    sel: Sel
+    step: Optional[int] = None     # static step index; None inside a LOOP
+    dsts: Optional[tuple] = None   # mask_recv: ranks that actually receive
+    track_recv: bool = False       # relay='received': keep the raw arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class SegLoop:
+    """One exchange pipelined over `segments` wire segments.
+
+    body = (Copy('load'), [Compress], Send, [Decompress], RecvCombine).
+    The executor clamps `segments` to a divisor of the payload that keeps
+    codec scale blocks intact (see `fit_segments`) and falls back to a
+    single segment when the recv region cannot mirror the payload.
+    """
+
+    segments: int
+    body: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Loop:
+    """`trip` iterations of `period` interleaved exchange slots.
+
+    Iteration i, slot j executes the exchange for schedule step
+    `base + i * period + j` with a *traced* step index. Semantics: every
+    slot's payload and combine target are read from the iteration-start
+    buffer and all region writes are applied at iteration end — uniform
+    runs must therefore write disjoint regions within one iteration
+    (rings do: each direction owns its chunk half), which is what lets
+    XLA schedule the slots' permutes on independent links concurrently.
+    """
+
+    base: int
+    trip: int
+    period: int
+    slots: tuple                   # tuple[tuple[micro-op, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """A compiled collective: schedule metadata + linear micro-op list."""
+
+    name: str
+    collective: str
+    nranks: int
+    chunks: int
+    relay: str
+    segments: int
+    codec: Optional[str]
+    ops: tuple
+
+    def describe(self) -> str:
+        """One line per op — the firmware disassembly (tests, debugging)."""
+        out = []
+        for op in self.ops:
+            if isinstance(op, Loop):
+                inner = "; ".join(
+                    ",".join(type(o).__name__ for o in slot)
+                    for slot in op.slots)
+                out.append(f"LOOP x{op.trip} period={op.period} [{inner}]")
+            elif isinstance(op, SegLoop):
+                inner = ",".join(type(o).__name__ for o in op.body)
+                out.append(f"SEG_LOOP k={op.segments} [{inner}]")
+            else:
+                out.append(type(op).__name__.upper())
+        return "\n".join(out)
+
+
+# --------------------------------------------------------------------------
+# Segment fitting (shared by both executors)
+# --------------------------------------------------------------------------
+
+def fit_segments(seg_len: int, segments, row_elems: int = 1,
+                 block: int = 1) -> int:
+    """Largest k <= segments that divides seg_len (>= 1), such that each
+    segment's flat element count (seg_len/k * row_elems) is a whole number
+    of codec `block`s.
+
+    Segment counts come from the selector as a preference; the data plane
+    clamps to a divisor of the payload length so segments stay equal-sized
+    (halving mirrors the pow2 candidate ladder). The block constraint is
+    the per-segment scale-reuse rule: a scale block never straddles a
+    segment boundary, so segmented codec numerics == unsegmented.
+    """
+    k = max(1, int(segments or 1))
+    k = min(k, max(1, seg_len))
+    while k > 1 and (seg_len % k
+                     or (seg_len // k * row_elems) % block):
+        k -= 1
+    return k
+
+
+# --------------------------------------------------------------------------
+# Compiler
+# --------------------------------------------------------------------------
+
+def _step_segmentable(step: Step, relay: str) -> bool:
+    if step.segmentable is False:
+        return False
+    send_k, recv_k = step.send_sel.kind, step.recv_sel.kind
+    if SEL_MASK in (send_k, recv_k):
+        # non-contiguous regions segment only when the algorithm asserts
+        # the send/recv masks are identical (Step.segmentable=True): the
+        # gathered payload is then cut into wire segments and the combined
+        # segments scattered back chunk-by-chunk.
+        return bool(step.segmentable) and send_k == recv_k == SEL_MASK
+    return True
+
+
+def _exchange_ops(step: Step, relay: str, step_idx: Optional[int],
+                  k_req: int, codec: Optional[str]) -> tuple:
+    """The micro-op sequence for one schedule step."""
+    ops = [Copy("load", sel=step.send_sel, source=relay, step=step_idx)]
+    if codec is not None and step.op != "copy":
+        # codecs compress the wire of combine exchanges (the RS phase);
+        # copy-only relays ship already-reduced chunks uncompressed, the
+        # same rule the hand-written rings applied.
+        ops.append(Compress(codec))
+        ops.append(Send(tuple(step.perm)))
+        ops.append(Decompress(codec))
+    else:
+        ops.append(Send(tuple(step.perm)))
+    dsts = tuple(sorted(d for (_s, d) in step.perm)) if step.mask_recv \
+        else None
+    ops.append(RecvCombine(op=step.op, sel=step.recv_sel, step=step_idx,
+                           dsts=dsts, track_recv=(relay == SRC_RECEIVED)))
+    seq = tuple(ops)
+    if k_req > 1 and _step_segmentable(step, relay):
+        return (SegLoop(k_req, seq),)
+    return seq
+
+
+def _detect_run(steps: tuple, i: int) -> Optional[tuple]:
+    """Maximal uniform run at `steps[i:]` -> (trip, period) or None.
+
+    A run of trip >= 2 iterations of `period` slots coalesces into a LOOP
+    when every participating step is `uniform` (traceable step-indexed
+    selectors shared across the run), does not mask receivers, and — for
+    period > 1 — writes an offset region (chunk/range) so the deferred
+    per-iteration writes stay well-defined.
+    """
+    for period in (1, 2):
+        if i + 2 * period > len(steps):
+            continue
+        slots = steps[i:i + period]
+        if not all(s.uniform and not s.mask_recv for s in slots):
+            continue
+        if period > 1 and any(s.recv_sel.kind not in (SEL_CHUNK, SEL_RANGE)
+                              for s in slots):
+            continue
+        sigs = [s.signature() for s in slots]
+        trip = 1
+        while True:
+            base = i + trip * period
+            if base + period > len(steps):
+                break
+            if all(steps[base + j].signature() == sigs[j]
+                   for j in range(period)):
+                trip += 1
+            else:
+                break
+        if trip >= 2:
+            return trip, period
+    return None
+
+
+def split_exchange(node) -> tuple:
+    """(body, k_req) of an exchange node — a SegLoop (possibly the sole
+    element of a LOOP slot tuple) or a plain micro-op tuple. The one
+    IR-shape helper both executors use to walk a Program."""
+    if isinstance(node, tuple) and len(node) == 1 \
+            and isinstance(node[0], SegLoop):
+        node = node[0]
+    if isinstance(node, SegLoop):
+        return node.body, node.segments
+    return node, 1
+
+
+# Schedules hash their Sel closures by identity, so freshly generated
+# (structurally identical) schedules never share entries: bound the cache
+# so long-lived processes compiling transient schedules (benchmark loops,
+# simulator harnesses) don't grow it without limit. Steady-state engine
+# use hits via the upstream schedule caches, far below this bound.
+_COMPILE_CACHE: dict = {}
+_COMPILE_CACHE_MAX = 512
+
+
+def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
+                     codec: Optional[str] = None) -> Program:
+    """Lower a Schedule to a Program (memoized — compilation is trace-time
+    control-plane work, like the uC caching assembled microcode)."""
+    k_req = int(segments if segments is not None else schedule.segments)
+    if k_req < 1:
+        raise ValueError(f"segments must be >= 1, got {k_req}")
+    key = (schedule, k_req, codec)
+    hit = _COMPILE_CACHE.get(key)
+    if hit is not None:
+        return hit
+
+    ops: list = []
+    if schedule.pre_rotate == "bruck":
+        ops.append(Copy("bruck_pre"))
+    steps = schedule.steps
+    i = 0
+    while i < len(steps):
+        run = _detect_run(steps, i)
+        if run is not None:
+            trip, period = run
+            slot_ops = tuple(
+                _exchange_ops(steps[i + j], schedule.relay, None, k_req,
+                              codec)
+                for j in range(period))
+            ops.append(Loop(base=i, trip=trip, period=period,
+                            slots=slot_ops))
+            i += trip * period
+        else:
+            ops.extend(_exchange_ops(steps[i], schedule.relay, i, k_req,
+                                     codec))
+            i += 1
+    if schedule.post_rotate == "bruck":
+        ops.append(Copy("bruck_post"))
+
+    prog = Program(
+        name=schedule.name, collective=schedule.collective,
+        nranks=schedule.nranks, chunks=schedule.chunks,
+        relay=schedule.relay, segments=k_req, codec=codec,
+        ops=tuple(ops))
+    if len(_COMPILE_CACHE) >= _COMPILE_CACHE_MAX:
+        _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))  # FIFO eviction
+    _COMPILE_CACHE[key] = prog
+    return prog

@@ -73,6 +73,18 @@ class Step:
     mask_recv: if True, ranks not appearing as a dst keep their old data
                (ppermute delivers zeros to non-destinations; trees need
                the mask, rings where everyone receives do not).
+    uniform:   the selector closures are pure arithmetic in
+               (rank, step_index) — valid under a *traced* step index —
+               and shared (by object identity) across the run of equal
+               steps. The IR compiler rolls such runs into a LOOP micro-op
+               (one lax.scan) instead of unrolling them, keeping O(n)-step
+               rings at O(1) live buffers.
+    segmentable: wire-segmentation eligibility. None = infer from the
+               selector kinds (contiguous all/chunk/range regions segment;
+               mask regions do not). True = force-allow: the algorithm
+               asserts send/recv masks are identical so the gathered
+               payload can be cut into wire segments and scattered back.
+               False = never segment this step.
     """
 
     perm: tuple
@@ -81,10 +93,18 @@ class Step:
     recv_sel: Sel = dataclasses.field(default_factory=Sel.all)
     bytes_frac: float = 1.0
     mask_recv: bool = False
+    uniform: bool = False
+    segmentable: Optional[bool] = None
 
     def __post_init__(self):
         if self.op not in COMBINE_OPS:
             raise ValueError(f"unknown combine op {self.op!r}")
+
+    def signature(self) -> tuple:
+        """Loop-coalescing identity: steps with equal signatures execute
+        the same micro-ops and differ only in the step index."""
+        return (self.perm, self.op, self.send_sel, self.recv_sel,
+                self.mask_recv, self.uniform, self.segmentable)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,7 +151,8 @@ class Schedule:
         return float(msg_bytes) * sum(s.bytes_frac for s in self.steps)
 
     def predict_time(self, msg_bytes: float, hop_latency: float,
-                     link_bw: float, segments: Optional[int] = None) -> float:
+                     link_bw: float, segments: Optional[int] = None,
+                     wire_scale: float = 1.0) -> float:
         """alpha-beta time with wire segmentation.
 
         Unsegmented (k=1): sum over steps of (alpha + step_bytes / bw).
@@ -143,6 +164,12 @@ class Schedule:
         through step i (the classic pipeline fill/drain model; for a
         homogeneous S-step ring this is (S + k - 1) * t). Divided by
         overlap_factor when independent links run concurrently.
+
+        `wire_scale` scales the beta term for compressed wires (codec
+        wire bytes per payload byte — e.g. ~0.25 for fp32→int8), so the
+        selector can price compressed-segmented variants. It applies to
+        combine steps only: the data plane ships copy phases (allgather
+        halves, relays of already-reduced chunks) uncompressed.
 
         This models the CCLO target, where segments stream *across*
         consecutive hops. The XLA lowerings pipeline segments only within
@@ -156,7 +183,9 @@ class Schedule:
             raise ValueError(f"segments must be >= 1, got {k}")
         total, t_max = 0.0, 0.0
         for s in self.steps:
-            t = hop_latency + (msg_bytes * s.bytes_frac) / (k * link_bw)
+            scale = wire_scale if s.op != "copy" else 1.0
+            t = hop_latency + (msg_bytes * s.bytes_frac * scale) / (
+                k * link_bw)
             total += t
             t_max = max(t_max, t)
         return (total + (k - 1) * t_max) / self.overlap_factor
@@ -166,6 +195,18 @@ class Schedule:
         if segments == self.segments:
             return self
         return dataclasses.replace(self, segments=int(segments))
+
+    def compile(self, segments: Optional[int] = None,
+                codec: Optional[str] = None):
+        """Lower this schedule to a micro-op `Program` (core/program.py).
+
+        The program is the single data-plane artifact both executors run:
+        `engine.execute_program` (XLA) and `simulator.execute_program`
+        (numpy). `segments` overrides the schedule's own knob; `codec`
+        names a wire compressor from `plugins.CODECS`.
+        """
+        from repro.core import program as prog  # local: avoid import cycle
+        return prog.compile_schedule(self, segments=segments, codec=codec)
 
     def validate(self) -> None:
         """Structural checks (the 'firmware assembler')."""

@@ -21,6 +21,7 @@ import dataclasses
 from typing import Optional
 
 from repro.core import algorithms as algos
+from repro.core import plugins
 from repro.core.schedule import Schedule
 from repro.core.topology import Communicator
 
@@ -65,6 +66,11 @@ class Choice:
     predicted_s: float
     schedule: Schedule
     segments: int = 1
+    codec: Optional[str] = None  # wire compressor the pricing assumed
+
+    @property
+    def compressed(self) -> bool:
+        return self.codec is not None
 
 
 class Selector:
@@ -88,6 +94,9 @@ class Selector:
         self.segment_candidates = tuple(segment_candidates)
         # Rx-buffer floor: never cut a step's payload below this many bytes
         # (tiny segments are all alpha, and real Rx buffers have a floor).
+        # This is the fallback when no communicator is given; with one, the
+        # per-fabric floor applies (`Communicator.min_segment_bytes`) — the
+        # 10 us DCN alpha prices a far larger floor than the ICI one.
         self.min_segment_bytes = min_segment_bytes
         # (collective, lo_bytes, hi_bytes, nranks_or_None, algorithm, segs)
         self._tuning: list[tuple] = []
@@ -95,20 +104,35 @@ class Selector:
         # generator/memoization telemetry, asserted on in tests
         self.stats = {"choose_calls": 0, "cache_hits": 0, "gen_calls": 0}
 
+    #: set_tuning codec wildcard: the rule applies whatever codec the
+    #: choose is pricing (the pre-codec-aware behaviour).
+    ANY_CODEC = "any"
+
     # -- the paper's runtime configuration parameters ----------------------
     def set_tuning(self, collective: str, algorithm: str,
                    lo_bytes: int = 0, hi_bytes: int = 1 << 62,
                    nranks: Optional[int] = None,
-                   segments: Optional[int] = None) -> None:
+                   segments: Optional[int] = None,
+                   codec: Optional[str] = ANY_CODEC) -> None:
+        """Pin an algorithm (and optionally segment count) for a bucket.
+
+        `codec` scopes the rule: ANY_CODEC (default) matches every
+        choose; None matches only uncompressed chooses; a codec name
+        matches only chooses pricing that codec — so tables measured on
+        compressed wires never leak into uncompressed selection.
+        """
         self._tuning.append((collective, lo_bytes, hi_bytes, nranks,
-                             algorithm, segments))
+                             algorithm, segments, codec))
         self._cache.clear()  # stale choices may no longer honour the table
 
-    def _tuned(self, collective: str, msg_bytes: int,
-               n: int) -> tuple[Optional[str], Optional[int]]:
+    def _tuned(self, collective: str, msg_bytes: int, n: int,
+               codec: Optional[str] = None
+               ) -> tuple[Optional[str], Optional[int]]:
         """Last-set matching rule wins (algorithm, pinned segment count)."""
-        for (c, lo, hi, nr, algo, segs) in reversed(self._tuning):
-            if c == collective and lo <= msg_bytes < hi and (nr is None or nr == n):
+        for (c, lo, hi, nr, algo, segs, cdc) in reversed(self._tuning):
+            if (c == collective and lo <= msg_bytes < hi
+                    and (nr is None or nr == n)
+                    and (cdc == self.ANY_CODEC or cdc == codec)):
                 return algo, segs
         return None, None
 
@@ -121,78 +145,132 @@ class Selector:
             return msg_bytes / comm.hw.eager_copy_bw
         return comm.hw.rendezvous_rtt
 
+    @staticmethod
+    def _wire_scale(codec: Optional[str], elem_bytes: int) -> float:
+        """Wire bytes per payload byte under `codec` (1.0 uncompressed)."""
+        if codec is None:
+            return 1.0
+        return plugins.get_codec(codec).wire_bytes_per_elem / float(
+            elem_bytes)
+
     def price(self, schedule: Schedule, protocol: str, msg_bytes: float,
-              comm: Communicator, segments: int = 1) -> Optional[float]:
+              comm: Communicator, segments: int = 1,
+              codec: Optional[str] = None,
+              elem_bytes: int = 4) -> Optional[float]:
         ov = self._protocol_overhead(protocol, msg_bytes, comm)
         if ov is None:
             return None
-        return schedule.predict_time(msg_bytes, comm.hop_latency,
-                                     comm.link_bw, segments=segments) + ov
+        return schedule.predict_time(
+            msg_bytes, comm.hop_latency, comm.link_bw, segments=segments,
+            wire_scale=self._wire_scale(codec, elem_bytes)) + ov
 
-    def admissible_segments(self, schedule: Schedule,
-                            msg_bytes: float) -> tuple:
+    def admissible_segments(self, schedule: Schedule, msg_bytes: float,
+                            comm: Optional[Communicator] = None,
+                            codec: Optional[str] = None,
+                            elem_bytes: int = 4) -> tuple:
         """Segment counts worth sweeping for this schedule/message.
 
-        A step's per-segment wire payload must stay >= min_segment_bytes;
-        k=1 is always admissible. Copy-only schedules (allgather, bcast,
-        alltoall) are never auto-segmented: the XLA lowering runs each
-        step's segments through a scan with no combine work to overlap,
-        so segmentation only adds per-segment alpha there — unlike the
-        CCLO, which streams copies across hops. (A tuning-table entry can
-        still pin segments explicitly.)
+        A step's per-segment *wire* payload must stay >= the fabric's
+        segment floor (`Communicator.min_segment_bytes`: the DCN floor is
+        far above the ICI one because of its 10 us alpha); k=1 is always
+        admissible. Compressed wires shrink the per-segment bytes by the
+        codec ratio, so they admit fewer segments at equal message size.
+        Copy-only schedules (allgather, bcast, alltoall) are never
+        auto-segmented: the XLA lowering runs each step's segments through
+        a scan with no combine work to overlap, so segmentation only adds
+        per-segment alpha there — unlike the CCLO, which streams copies
+        across hops. (A tuning-table entry can still pin segments
+        explicitly.)
         """
         if not schedule.steps:
             return (1,)
         if all(s.op == "copy" for s in schedule.steps):
             return (1,)
-        step_bytes = max(msg_bytes * s.bytes_frac for s in schedule.steps)
+        floor = (comm.min_segment_bytes if comm is not None
+                 else self.min_segment_bytes)
+        scale = self._wire_scale(codec, elem_bytes)
+        step_bytes = max(msg_bytes * s.bytes_frac * scale
+                         for s in schedule.steps if s.op != "copy")
         out = []
         for k in self.segment_candidates:
-            if k == 1 or step_bytes / k >= self.min_segment_bytes:
+            if k == 1 or step_bytes / k >= floor:
                 out.append(int(k))
         return tuple(out) or (1,)
 
     def candidates(self, collective: str, comm: Communicator):
+        if comm.size < 2:
+            return
         for (coll, algo), gen in algos.GENERATORS.items():
             if coll != collective:
                 continue
             if (coll, algo) in _POW2_ONLY and not comm.is_pow2:
                 continue
-            if comm.size < 2:
-                continue
+            yield algo, gen
+        # out-of-tree collectives (plugins.register_collective) price
+        # through the exact same sweep as the built-in table
+        for algo, gen, _protos in plugins.custom_candidates(collective):
             yield algo, gen
 
-    def choose(self, collective: str, msg_bytes: int,
-               comm: Communicator) -> Choice:
+    def _protocols(self, collective: str, algo: str) -> tuple:
+        protos = ALGO_PROTOCOLS.get((collective, algo))
+        if protos is not None:
+            return protos
+        for c_algo, _gen, c_protos in plugins.custom_candidates(collective):
+            if c_algo == algo:
+                return c_protos
+        return ("rendezvous",)
+
+    def choose(self, collective: str, msg_bytes: int, comm: Communicator,
+               codec: Optional[str] = None, elem_bytes: int = 4) -> Choice:
         self.stats["choose_calls"] += 1
-        key = (collective, int(msg_bytes), comm)
+        # registry_version: (un)registering a custom collective must not
+        # serve picks cached against the old candidate set
+        key = (collective, int(msg_bytes), comm, codec, int(elem_bytes),
+               plugins.registry_version())
         hit = self._cache.get(key)
         if hit is not None:
             self.stats["cache_hits"] += 1
             return hit
-        choice = self._choose_uncached(collective, msg_bytes, comm)
+        choice = self._choose_uncached(collective, msg_bytes, comm, codec,
+                                       elem_bytes)
         self._cache[key] = choice
         return choice
 
     def _choose_uncached(self, collective: str, msg_bytes: int,
-                         comm: Communicator) -> Choice:
-        tuned_algo, tuned_segs = self._tuned(collective, msg_bytes, comm.size)
+                         comm: Communicator, codec: Optional[str] = None,
+                         elem_bytes: int = 4) -> Choice:
+        tuned_algo, tuned_segs = self._tuned(collective, msg_bytes,
+                                             comm.size, codec)
+        custom_algos = {a for a, _g, _p
+                        in plugins.custom_candidates(collective)}
         best: Optional[Choice] = None
         for algo, gen in self.candidates(collective, comm):
             self.stats["gen_calls"] += 1
-            sched = gen(comm)
-            protos = ALGO_PROTOCOLS.get((collective, algo), ("rendezvous",))
+            try:
+                sched = gen(comm)
+            except ValueError:
+                if algo in custom_algos:
+                    # out-of-tree generators declare inapplicability to a
+                    # communicator (e.g. pow2-only) by raising — skip,
+                    # like the built-ins' _POW2_ONLY pre-filter
+                    continue
+                raise  # a built-in raising here is a bug, not a filter
+            protos = self._protocols(collective, algo)
             seg_space = ((tuned_segs,) if tuned_algo == algo
                          and tuned_segs is not None
-                         else self.admissible_segments(sched, msg_bytes))
+                         else self.admissible_segments(
+                             sched, msg_bytes, comm, codec, elem_bytes))
             tuned_best: Optional[Choice] = None
             for proto in protos:
                 for k in seg_space:
-                    t = self.price(sched, proto, msg_bytes, comm, segments=k)
+                    t = self.price(sched, proto, msg_bytes, comm,
+                                   segments=k, codec=codec,
+                                   elem_bytes=elem_bytes)
                     if t is None:
                         continue
                     cand = Choice(collective, algo, proto, t,
-                                  sched.with_segments(k), segments=k)
+                                  sched.with_segments(k), segments=k,
+                                  codec=codec)
                     if tuned_algo == algo:
                         if tuned_best is None or t < tuned_best.predicted_s:
                             tuned_best = cand
@@ -205,7 +283,68 @@ class Selector:
                 f"no applicable algorithm for {collective} over {comm}")
         return best
 
+    # -- tuning-table artifacts (fig12 / EXPERIMENTS round-trips) -----------
+    DEFAULT_TABLE_SIZES = (1 << 10, 1 << 13, 1 << 17, 1 << 20, 1 << 24,
+                           1 << 27)
+
     def table(self, collective: str, comm: Communicator,
-              sizes=(1 << 10, 1 << 13, 1 << 17, 1 << 20, 1 << 24, 1 << 27)):
-        """Selection table — the fig12-style artifact for EXPERIMENTS.md."""
-        return {s: self.choose(collective, s, comm) for s in sizes}
+              sizes=DEFAULT_TABLE_SIZES, codec: Optional[str] = None,
+              elem_bytes: int = 4):
+        """Selection table — the fig12-style artifact for EXPERIMENTS.md.
+
+        Each Choice carries the full tuning state for its size bucket:
+        algorithm, protocol, chosen segment count, and the codec the
+        pricing assumed (`Choice.compressed`) — so benchmark output and
+        tuning-table round-trips are lossless (see `table_rows` /
+        `apply_table`).
+        """
+        return {s: self.choose(collective, s, comm, codec=codec,
+                               elem_bytes=elem_bytes) for s in sizes}
+
+    def table_rows(self, collective: str, comm: Communicator,
+                   sizes=DEFAULT_TABLE_SIZES, codec: Optional[str] = None,
+                   elem_bytes: int = 4) -> list:
+        """`table()` as JSON-ready rows (benchmark / EXPERIMENTS output)."""
+        rows = []
+        for size, c in self.table(collective, comm, sizes, codec,
+                                  elem_bytes).items():
+            rows.append({
+                "collective": collective,
+                "msg_bytes": int(size),
+                "nranks": comm.size,
+                "algorithm": c.algorithm,
+                "protocol": c.protocol,
+                "segments": int(c.segments),
+                "compressed": c.compressed,
+                "codec": c.codec,
+                "predicted_s": float(c.predicted_s),
+            })
+        return rows
+
+    def apply_table(self, rows) -> None:
+        """Pin a `table_rows()` artifact back into the tuning table.
+
+        The inverse of `table_rows`: every row becomes a size-bucketed
+        tuning entry (algorithm AND segment count, scoped to its rank
+        count AND the codec the table was priced under), so a selector
+        seeded from a saved table reproduces the saved choices exactly —
+        the lossless round-trip — without a compressed table leaking into
+        uncompressed selection or vice versa.
+        """
+        # bucket within each (collective, nranks, codec) series — a mixed
+        # artifact (several collectives' tables concatenated) must not
+        # have one series' sizes truncating another's buckets
+        series: dict = {}
+        for r in rows:
+            key = (r["collective"], r.get("nranks"), r.get("codec"))
+            series.setdefault(key, []).append(r)
+        for group in series.values():
+            group = sorted(group, key=lambda r: int(r["msg_bytes"]))
+            for i, r in enumerate(group):
+                hi = (int(group[i + 1]["msg_bytes"]) if i + 1 < len(group)
+                      else 1 << 62)
+                self.set_tuning(r["collective"], r["algorithm"],
+                                lo_bytes=int(r["msg_bytes"]), hi_bytes=hi,
+                                nranks=r.get("nranks"),
+                                segments=int(r["segments"]),
+                                codec=r.get("codec"))

@@ -1,18 +1,30 @@
 """Rank-level numpy simulator — the ACCL+ ZMQ simulation platform analogue.
 
-Executes a `Schedule` functionally over explicit per-rank buffers, with no
-jax involved. Used for:
+Executes the SAME micro-op `Program` the jax engine runs (a `Schedule` is
+first compiled through `core/program.py`), over explicit per-rank buffers,
+with no jax involved. Used for:
   * algorithm validation (tests compare against numpy oracles),
-  * schedule debugging without tracing/compiling,
+  * schedule/IR debugging without tracing/compiling,
   * the latency *model* evaluation in the fig10/fig12 benchmarks.
 
-The semantics here are the reference the jax engine (core/engine.py) must
-match — the simulator is the "bus functional model of the CCLO".
+Because both executors interpret one compiled artifact, oracle parity here
+covers the real engine code path (LOOP coalescing, SEG_LOOP segmentation,
+Bruck rotations) — the simulator is the "bus functional model of the CCLO",
+not a parallel reimplementation of the algorithms.
+
+Wire codecs are jax-side plugins; the simulator executes uncompressed
+programs only (compile with codec=None, the default).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
+from repro.core.program import (
+    Copy, Compress, Decompress, Loop, Program, RecvCombine, SegLoop, Send,
+    compile_schedule, fit_segments, split_exchange,
+)
 from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
 )
@@ -47,29 +59,38 @@ def _select(buf: np.ndarray, chunks: int, sel: Sel, rank: int, step: int):
     raise ValueError(sel.kind)
 
 
-def _place(buf: np.ndarray, chunks: int, sel: Sel, rank: int, step: int,
-           incoming: np.ndarray, op: str) -> None:
-    fn = _COMBINE[op]
-    if sel.kind == SEL_ALL:
-        buf[...] = fn(buf, incoming)
-        return
-    if sel.kind == SEL_CHUNK:
-        view = _chunk_view(buf, chunks, int(sel.fn(rank, step)))
-        view[...] = fn(view, incoming)
-        return
-    if sel.kind == SEL_RANGE:
-        off, length = sel.fn(rank, step)
-        view = _chunk_view(buf, chunks, int(off), int(length))
-        view[...] = fn(view, incoming)
-        return
+def _recv_region(buf: np.ndarray, chunks: int, sel: Sel, rank: int,
+                 step: int):
+    """(view_copy, elem_offset, mask_idxs) mirroring the engine's helper."""
+    csize = buf.shape[0] // chunks
     if sel.kind == SEL_MASK:
-        idxs = sel.fn(rank, step)
+        idxs = tuple(int(j) for j in sel.fn(rank, step))
+        view = np.concatenate(
+            [_chunk_view(buf, chunks, j) for j in idxs], axis=0)
+        return view, None, idxs
+    if sel.kind == SEL_ALL:
+        return buf.copy(), None, None
+    if sel.kind == SEL_CHUNK:
+        off = int(sel.fn(rank, step)) * csize
+        length = csize
+    else:
+        o, ln = sel.fn(rank, step)
+        off, length = int(o) * csize, int(ln) * csize
+    return buf[off:off + length].copy(), off, None
+
+
+def _apply_write(buf: np.ndarray, chunks: int, off, mask_idxs,
+                 new_val: np.ndarray) -> None:
+    if mask_idxs is not None:
         csize = buf.shape[0] // chunks
-        for k, j in enumerate(idxs):
-            view = _chunk_view(buf, chunks, int(j))
-            view[...] = fn(view, incoming[k * csize:(k + 1) * csize])
+        for k, j in enumerate(mask_idxs):
+            buf[j * csize:(j + 1) * csize] = \
+                new_val[k * csize:(k + 1) * csize]
         return
-    raise ValueError(sel.kind)
+    if off is None:
+        buf[...] = new_val
+        return
+    buf[off:off + new_val.shape[0]] = new_val
 
 
 def _bruck_pre(bufs, n):
@@ -95,60 +116,157 @@ def _bruck_post(bufs, n):
     return out
 
 
-def simulate(schedule: Schedule, inputs: list[np.ndarray]) -> list[np.ndarray]:
-    """Run `schedule` over per-rank buffers; returns final per-rank buffers."""
-    n = schedule.nranks
+# --------------------------------------------------------------------------
+# Program execution
+# --------------------------------------------------------------------------
+
+class _State:
+    """Per-run registers: buffers plus the relay sources."""
+
+    def __init__(self, bufs):
+        self.bufs = bufs
+        self.origs = [b.copy() for b in bufs]
+        self.prevs = [b.copy() for b in bufs]  # relay='received' step 0
+
+    def source(self, which: str):
+        return {"buffer": self.bufs, "original": self.origs,
+                "received": self.prevs}[which]
+
+
+def _exchange_writes(body: tuple, k_req: int, state: _State, chunks: int,
+                     step: int, read_bufs) -> list:
+    """One exchange across all ranks, two-phase: every rank's payload and
+    combine target are read from `read_bufs` (the pre-step state), then the
+    region writes are returned for the caller to apply.
+
+    Mirrors the engine's `_exchange_update` + deferred `_apply_write`,
+    including SEG_LOOP's per-segment combine granularity, so numerics
+    match the XLA executor exactly.
+    Returns [(rank, off, mask_idxs, new_val, raw_or_None), ...].
+    """
+    load, recv = body[0], body[-1]
+    for op in body[1:-1]:
+        if isinstance(op, (Compress, Decompress)):
+            raise NotImplementedError(
+                "the numpy simulator executes uncompressed programs only")
+    send_op = next(op for op in body[1:-1] if isinstance(op, Send))
+
+    n = len(state.bufs)
+    srcs = state.source(load.source)
+    payloads = {r: _select(srcs[r] if load.source != "buffer"
+                           else read_bufs[r], chunks, load.sel, r, step)
+                for r in range(n)}
+    wire = {dst: payloads[src] for (src, dst) in send_op.perm}
+
+    if recv.dsts is None:
+        missing = set(range(n)) - set(wire.keys())
+        if missing:
+            raise ValueError(
+                f"step {step}: ranks {missing} receive nothing but "
+                f"mask_recv=False")
+
+    writes = []
+    for dst in range(n):
+        incoming = wire.get(dst)
+        if incoming is None:
+            continue  # masked non-destination keeps its state
+        view, off, mask_idxs = _recv_region(read_bufs[dst], chunks,
+                                            recv.sel, dst, step)
+        comb = _COMBINE[recv.op]
+        k = 1
+        if k_req > 1 and view.shape[0] == payloads[dst].shape[0]:
+            row_elems = max(1, view.size // max(1, view.shape[0]))
+            k = fit_segments(view.shape[0], k_req, row_elems)
+        if k > 1:
+            seg = view.shape[0] // k
+            new_val = np.concatenate(
+                [comb(view[i * seg:(i + 1) * seg],
+                      incoming[i * seg:(i + 1) * seg].astype(view.dtype))
+                 for i in range(k)], axis=0)
+        else:
+            new_val = comb(view, incoming.astype(view.dtype))
+        raw = incoming if recv.track_recv else None
+        writes.append((dst, off, mask_idxs, np.asarray(new_val), raw))
+    return writes
+
+
+def _apply(state: _State, chunks: int, writes: list) -> None:
+    for rank, off, mask_idxs, new_val, raw in writes:
+        _apply_write(state.bufs[rank], chunks, off, mask_idxs, new_val)
+        if raw is not None:
+            state.prevs[rank] = np.array(raw, copy=True)
+
+
+def execute_program(prog: Program, inputs: list) -> list:
+    """Run a compiled Program over per-rank buffers; returns final buffers."""
+    n = prog.nranks
     assert len(inputs) == n, f"need {n} rank buffers"
     for b in inputs:
-        if b.shape[0] % schedule.chunks:
+        if b.shape[0] % prog.chunks:
             raise ValueError(
-                f"leading dim {b.shape[0]} not divisible by {schedule.chunks}")
-    schedule.validate()
+                f"leading dim {b.shape[0]} not divisible by {prog.chunks}")
 
     bufs = [np.array(b, copy=True) for b in inputs]
-    if schedule.pre_rotate == "bruck":
-        bufs = _bruck_pre(bufs, n)
-    originals = [b.copy() for b in bufs]
-    last_recv: list[np.ndarray | None] = [None] * n
+    ops = prog.ops
+    i = 0
+    if ops and isinstance(ops[0], Copy) and ops[0].kind == "bruck_pre":
+        bufs = _bruck_pre(bufs, prog.chunks)
+        i = 1
+    state = _State(bufs)
 
-    for s_idx, step in enumerate(schedule.steps):
-        src_of = {dst: src for (src, dst) in step.perm}
-        # 1. every listed src places its payload on the wire
-        wire = {}
-        for (src, dst) in step.perm:
-            if schedule.relay == "original":
-                payload_src = originals[src]
-            elif schedule.relay == "received" and last_recv[src] is not None:
-                payload_src = last_recv[src]
+    while i < len(ops):
+        op = ops[i]
+        if isinstance(op, Loop):
+            for it in range(op.trip):
+                # two-phase like the engine's LOOP: all slots read the
+                # iteration-start buffers, writes land at iteration end
+                snap = [b.copy() for b in state.bufs]
+                writes = []
+                for slot, seq in enumerate(op.slots):
+                    step = op.base + it * op.period + slot
+                    body, k_req = split_exchange(seq)
+                    writes.extend(_exchange_writes(body, k_req, state,
+                                                   prog.chunks, step, snap))
+                _apply(state, prog.chunks, writes)
+            i += 1
+        elif isinstance(op, Copy) and op.kind == "bruck_post":
+            state.bufs = _bruck_post(state.bufs, prog.chunks)
+            i += 1
+        elif isinstance(op, SegLoop) or (
+                isinstance(op, Copy) and op.kind == "load"):
+            if isinstance(op, SegLoop):
+                body, k_req = op.body, op.segments
+                i += 1
             else:
-                payload_src = bufs[src]
-            wire[dst] = _select(payload_src, schedule.chunks, step.send_sel,
-                                src, s_idx)
-        # 2. destinations combine
-        new_recv = list(last_recv)
-        for dst, payload in wire.items():
-            _place(bufs[dst], schedule.chunks, step.recv_sel, dst, s_idx,
-                   payload, step.op)
-            new_recv[dst] = payload
-        # non-destinations: mask_recv means keep state; rings always receive
-        if not step.mask_recv:
-            missing = set(range(n)) - set(wire.keys())
-            if missing:
-                raise ValueError(
-                    f"step {s_idx}: ranks {missing} receive nothing but "
-                    f"mask_recv=False")
-        last_recv = new_recv
+                j = i
+                while not isinstance(ops[j], RecvCombine):
+                    j += 1
+                body, k_req = ops[i:j + 1], 1
+                i = j + 1
+            step = body[0].step
+            writes = _exchange_writes(body, k_req, state, prog.chunks,
+                                      step, state.bufs)
+            _apply(state, prog.chunks, writes)
+        else:
+            raise ValueError(f"unexpected micro-op {op}")
+    return state.bufs
 
-    if schedule.post_rotate == "bruck":
-        bufs = _bruck_post(bufs, n)
-    return bufs
+
+def simulate(schedule: Schedule, inputs: list,
+             segments: Optional[int] = None) -> list:
+    """Compile `schedule` to its micro-op program and run it over per-rank
+    buffers; returns final per-rank buffers. `segments` overrides the
+    schedule's wire-segmentation knob."""
+    schedule.validate()
+    prog = compile_schedule(schedule, segments=segments)
+    return execute_program(prog, inputs)
 
 
 # ---------------------------------------------------------------------------
 # Numpy oracles (what each collective should produce)
 # ---------------------------------------------------------------------------
 
-def oracle(collective: str, inputs: list[np.ndarray], op: str = "add",
+def oracle(collective: str, inputs: list, op: str = "add",
            root: int = 0):
     """Reference results, rank-indexed. For 'shard' results, returns the
     full reduction; callers slice per owned_chunk."""

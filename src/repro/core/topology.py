@@ -60,6 +60,13 @@ class Communicator:
     def hop_latency(self) -> float:
         return self.hw.dcn_hop_latency if self.is_dcn else self.hw.ici_hop_latency
 
+    @property
+    def min_segment_bytes(self) -> float:
+        """Per-fabric Rx-buffer floor for wire segmentation: the 10 us DCN
+        alpha prices a far larger segment optimum than the ICI one."""
+        return (self.hw.dcn_min_segment_bytes if self.is_dcn
+                else self.hw.ici_min_segment_bytes)
+
     # -- neighbour maps used by schedule generators ------------------------
     def ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
         """src->dst pairs rotating by `step` (bidirectional rings use ±1)."""

@@ -32,12 +32,24 @@ def test_sweep_schema(sweep_results):
                 "segments", "predicted_s", "selected"}
     for entry in sweep:
         assert required <= set(entry)
-    # every (collective, size) curve includes the 1-segment baseline
-    curves = {(e["collective"], e["msg_bytes"]) for e in sweep}
-    for coll, nbytes in curves:
+    # every (schedule, size) curve includes the 1-segment baseline
+    curves = {(e["collective"], e["algorithm"], e["msg_bytes"])
+              for e in sweep}
+    for key in curves:
         ks = {e["segments"] for e in sweep
-              if (e["collective"], e["msg_bytes"]) == (coll, nbytes)}
+              if (e["collective"], e["algorithm"], e["msg_bytes"]) == key}
         assert 1 in ks and len(ks) > 1
+
+
+def test_sweep_covers_newly_segmentable_schedules(sweep_results):
+    """The sweep must track the tree/masked/recursive schedules that the
+    micro-op executor made segmentable, not just the ring family."""
+    _, on_disk = sweep_results
+    algos = {(e["collective"], e["algorithm"])
+             for e in on_disk["segment_sweep"]}
+    assert {("reduce", "binomial_tree"), ("alltoall", "bruck"),
+            ("allreduce", "halving_doubling"),
+            ("reduce", "ring")} <= algos
 
 
 def test_sweep_pipelining_dominates_at_1mib(sweep_results):
@@ -46,12 +58,13 @@ def test_sweep_pipelining_dominates_at_1mib(sweep_results):
     _, on_disk = sweep_results
     curves: dict = {}
     for e in on_disk["segment_sweep"]:
-        curves.setdefault((e["collective"], e["msg_bytes"]), {})[
+        curves.setdefault(
+            (e["collective"], e["algorithm"], e["msg_bytes"]), {})[
             e["segments"]] = e["predicted_s"]
     checked = 0
-    for (coll, nbytes), times in curves.items():
+    for (coll, algo, nbytes), times in curves.items():
         if nbytes < 1 << 20:
             continue
         checked += 1
-        assert min(times.values()) < times[1], (coll, nbytes)
+        assert min(times.values()) < times[1], (coll, algo, nbytes)
     assert checked >= 3  # sweep must actually cover >= 1 MiB messages

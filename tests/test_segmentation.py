@@ -99,16 +99,20 @@ def test_segmented_nonadd_ops(eng8, op):
     np.testing.assert_array_equal(seg, base)
 
 
-def test_compressed_auto_allreduce_never_auto_segments(eng8):
-    """Codecs quantize per wire payload, so the auto path must clamp to
-    segments=1 under compression (per-segment int8 scale blocks would
-    silently change numerics). Observable bitwise: auto == explicit k=1."""
+def test_compressed_auto_allreduce_scale_reuse_parity(eng8):
+    """The selector prices compressed-segmented variants (codec-aware
+    choose) and the data plane guarantees per-segment scale reuse: the
+    executor only admits segment sizes that are whole codec scale blocks,
+    so the auto-segmented compressed wire is BITWISE-identical to the
+    unsegmented codec — auto == explicit (same algorithm, segments=1)."""
     eng, mesh = eng8
     big = np.random.default_rng(9).normal(
         size=(8, 1 << 16)).astype(np.float32)
     nbytes = big[0].nbytes
-    ch = eng.selector.choose("allreduce", nbytes, eng.comm("x"))
-    assert ch.segments > 1  # uncompressed auto would segment this size
+    ch = eng.selector.choose("allreduce", nbytes, eng.comm("x"),
+                             codec="int8")
+    assert ch.segments > 1  # the codec-aware auto pick segments this size
+    assert ch.compressed and ch.codec == "int8"
 
     def call(algorithm, segments):
         g = jax.jit(jax.shard_map(

@@ -1,4 +1,6 @@
 """Algorithm/protocol selector behaviour (paper Table 1 / Fig 12)."""
+import pytest
+
 from repro.core import Communicator, Selector
 
 
@@ -145,3 +147,138 @@ def test_set_tuning_invalidates_choose_cache():
     tuned = sel.choose("allreduce", 1 << 20, comm)
     assert tuned.algorithm == "recursive_doubling"
     assert auto.algorithm != tuned.algorithm
+
+
+# -- per-fabric segmentation floors (ICI vs DCN) ------------------------------
+
+def test_dcn_axis_prices_its_own_segment_floor():
+    """The 10 us DCN alpha + its own min_segment_bytes shift the segment
+    optimum: at equal message size the pod axis admits fewer segments and
+    chooses a smaller count than the ICI axis."""
+    sel = Selector()
+    ici = Communicator(axis="data", size=8, is_dcn=False)
+    dcn = Communicator(axis="pod", size=8, is_dcn=True)
+    assert dcn.min_segment_bytes > ici.min_segment_bytes
+    assert dcn.hop_latency > ici.hop_latency
+
+    from repro.core import algorithms as A
+    sched = A.ring_allreduce(ici)
+    msg = 4 << 20  # per-step chunk = 512 KiB: many ICI segments, few DCN
+    adm_ici = sel.admissible_segments(sched, msg, ici)
+    adm_dcn = sel.admissible_segments(sched, msg, dcn)
+    assert max(adm_ici) > max(adm_dcn)
+
+    c_ici = sel.choose("allreduce", msg, ici)
+    c_dcn = sel.choose("allreduce", msg, dcn)
+    assert c_ici.segments > c_dcn.segments
+
+
+def test_compressed_pricing_admits_fewer_segments():
+    """Codec wires shrink per-segment bytes, so the same message admits
+    fewer segment counts under compression (the Rx floor is on wire
+    bytes)."""
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    from repro.core import algorithms as A
+    sched = A.ring_allreduce(comm)
+    msg = 1 << 20
+    plain = sel.admissible_segments(sched, msg, comm)
+    packed = sel.admissible_segments(sched, msg, comm, codec="int8")
+    assert max(packed) < max(plain)
+    ch = sel.choose("allreduce", msg, comm, codec="int8")
+    assert ch.codec == "int8" and ch.compressed
+
+
+# -- lossless tuning-table round-trip -----------------------------------------
+
+def test_table_reports_segments_and_codec():
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    rows = sel.table_rows("allreduce", comm)
+    assert {r["msg_bytes"] for r in rows} == set(
+        Selector.DEFAULT_TABLE_SIZES)
+    big = next(r for r in rows if r["msg_bytes"] == 1 << 27)
+    assert big["segments"] > 1           # large messages pipeline
+    assert big["compressed"] is False
+    assert all({"algorithm", "protocol", "segments", "codec",
+                "nranks"} <= set(r) for r in rows)
+
+
+@pytest.mark.parametrize("codec", [None, "int8"])
+def test_table_round_trip_is_lossless(codec):
+    """table_rows -> apply_table on a fresh selector reproduces every
+    bucket's (algorithm, segments) exactly — nothing is dropped on the
+    way through benchmark output and back."""
+    src = Selector()
+    comm = Communicator(axis="x", size=8)
+    rows = src.table_rows("allreduce", comm, codec=codec)
+
+    dst = Selector()
+    dst.apply_table(rows)
+    for r in rows:
+        c = dst.choose("allreduce", r["msg_bytes"], comm, codec=codec)
+        assert c.algorithm == r["algorithm"], r
+        assert c.segments == r["segments"], r
+
+
+def test_compressed_table_does_not_leak_into_uncompressed_choose():
+    """Tuning entries carry the codec they were measured under: a table
+    priced on int8 wires must not override uncompressed selection."""
+    comm = Communicator(axis="x", size=8)
+    baseline = Selector().choose("allreduce", 1 << 24, comm)
+    sel = Selector()
+    sel.apply_table(sel.table_rows("allreduce", comm, codec="int8"))
+    plain = sel.choose("allreduce", 1 << 24, comm)
+    assert (plain.algorithm, plain.segments) == \
+        (baseline.algorithm, baseline.segments)
+
+
+# -- custom-collective candidates ---------------------------------------------
+
+def _pow2_only_gen(comm):
+    if not comm.is_pow2:
+        raise ValueError("needs power-of-two ranks")
+    from repro.core import algorithms as A
+    return A.ring_allreduce(comm)
+
+
+def test_inapplicable_custom_generator_is_skipped_not_fatal():
+    """A registered generator that raises for this communicator (e.g.
+    pow2-only) must be skipped by the auto sweep, like the built-ins'
+    pow2 filter — not crash the whole choose()."""
+    from repro.core import plugins
+    from repro.core import algorithms as A
+    plugins.register_collective("myred", _pow2_only_gen, algorithm="pow2")
+    plugins.register_collective(
+        "myred", lambda comm: A.ring_allreduce(comm), algorithm="ring")
+    try:
+        sel = Selector()
+        c = sel.choose("myred", 1 << 20, Communicator(axis="x", size=6))
+        assert c.algorithm == "ring"
+        c8 = sel.choose("myred", 1 << 10, Communicator(axis="x", size=8))
+        assert c8.algorithm in ("pow2", "ring")
+    finally:
+        plugins.unregister_collective("myred")
+
+
+def test_registry_changes_invalidate_choose_cache():
+    """Registering a cheaper algorithm after a choose() must be visible
+    on the next identical choose (no stale registry picks)."""
+    from repro.core import plugins
+    from repro.core import algorithms as A
+    comm = Communicator(axis="x", size=8)
+    sel = Selector()
+    plugins.register_collective(
+        "myred2", lambda comm: A.ring_reduce(comm), algorithm="slow_ring")
+    try:
+        first = sel.choose("myred2", 1 << 20, comm)
+        assert first.algorithm == "slow_ring"
+        plugins.register_collective(
+            "myred2", lambda comm: A.ring_allreduce(comm), algorithm="ring")
+        second = sel.choose("myred2", 1 << 20, comm)
+        assert second.algorithm == "ring"  # cheaper newcomer wins
+        plugins.unregister_collective("myred2", "ring")
+        third = sel.choose("myred2", 1 << 20, comm)
+        assert third.algorithm == "slow_ring"
+    finally:
+        plugins.unregister_collective("myred2")
