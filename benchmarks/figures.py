@@ -30,7 +30,6 @@ def _sharded(fn, mesh, in_specs, out_specs):
 def fig07_sendrecv():
     mesh = _mesh8()
     eng = CollectiveEngine(mesh)
-    comm = Communicator(axis="x", size=8)
     for log2 in (10, 14, 18, 22, 26):
         nbytes = 1 << log2
         x = jnp.zeros((nbytes // 4,), jnp.float32)
@@ -128,8 +127,7 @@ def fig12_scaling():
                 try:
                     from repro.core.engine import _gen_schedule
                     sched = _gen_schedule("reduce", algo, comm)
-                    preds[algo] = sched.predict_time(
-                        nbytes, comm.hop_latency, comm.link_bw) * 1e6
+                    preds[algo] = sched.compile().cost(nbytes, comm) * 1e6
                 except ValueError:
                     pass
             row(f"fig12/reduce/{label}/{n}ranks", preds[c.algorithm],
@@ -162,13 +160,17 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
     latency knob (arXiv 2403.18374 shows it dominating collective latency
     at scale). Sweeps the selector's auto pick for the big three
     collectives plus SEG_SWEEP_NAMED — the tree/masked/recursive
-    schedules the micro-op executor made segmentable. Emits one printed
-    row per (schedule, size) with the best segment count, and one
-    structured record per (schedule, size, segments) into
-    BENCH_collectives.json. Pipelining must strictly dominate the
-    1-segment baseline for every message >= 1 MiB.
+    schedules the micro-op executor made segmentable. Since PR 3 every
+    point is priced by `Program.cost` on the COMPILED program (the same
+    artifact the engine executes, stream-fusion included; `streamed`
+    marks programs that cross-step pipeline). Emits one printed row per
+    (schedule, size) with the best segment count, and one structured
+    record per (schedule, size, segments) into BENCH_collectives.json —
+    the curve `scripts/check_bench.py` gates CI against. Pipelining must
+    strictly dominate the 1-segment baseline for every message >= 1 MiB.
     """
     from repro.core.engine import _gen_schedule
+    from repro.core.program import Stream
     from repro.core.selector import ALGO_PROTOCOLS
 
     if segment_counts is None:
@@ -213,8 +215,8 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
             why_not = "copy-only" if copy_only else "below-floor"
             times = {}
             for k in segment_counts:
-                t = sched.predict_time(nbytes, comm.hop_latency,
-                                       comm.link_bw, segments=k)
+                prog = sched.compile(segments=k)
+                t = prog.cost(nbytes, comm)
                 times[k] = t
                 record_sweep({
                     "collective": coll,
@@ -227,6 +229,8 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
                     "predicted_s": t,
                     "selected": k == chosen_k,
                     "auto_segmentable": auto_ok,
+                    "streamed": any(isinstance(op, Stream)
+                                    for op in prog.ops),
                 })
             best_k = min(times, key=times.get)
             dominated = times[best_k] < times[1]
@@ -292,9 +296,9 @@ def fig16_vecmat():
         # speedup; the model column is what EXPERIMENTS.md quotes.)
         cpu_flops = 50e9
         t_single = 2 * size * size / cpu_flops
-        sched = A.binomial_tree_reduce(Communicator(axis="x", size=8))
-        t_red = sched.predict_time(size * 4, ACCL_CLUSTER.ici_hop_latency,
-                                   ACCL_CLUSTER.ici_link_bw)
+        accl_comm = Communicator(axis="x", size=8, hw=ACCL_CLUSTER)
+        sched = A.binomial_tree_reduce(accl_comm)
+        t_red = sched.compile().cost(size * 4, accl_comm)
         model_speedup = t_single / (t_single / 8 + t_red)
         row(f"fig16/vecmat/{size}", us_dist,
             f"single={us_single:.1f}us measured={us_single/us_dist:.2f}x "

@@ -33,6 +33,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--only", default=None, metavar="NAME",
                     help="run a single benchmark (e.g. fig10_collectives, "
                          "seg_sweep) instead of the full set")
+    ap.add_argument("--quick", action="store_true",
+                    help="run only the deterministic model benchmarks "
+                         "(fig12_scaling + seg_sweep) — the CI bench-gate "
+                         "mode; still writes the JSON results file")
     default_segments = ",".join(
         str(k) for k in _selector_default_segments())
     ap.add_argument("--segments", default=default_segments,
@@ -43,8 +47,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--sweep-ranks", type=int, default=8,
                     help="communicator size for the segment sweep")
     args = ap.parse_args(argv)
+    if args.only and args.quick:
+        ap.error("--only and --quick are mutually exclusive")
     if args.json is None:
-        # a partial run must not clobber the full tracked results file
+        # a partial run must not clobber the full tracked results file;
+        # --quick is the CI gate and always writes (check_bench reads it)
         args.json = "" if args.only else DEFAULT_JSON
 
     from benchmarks import figures
@@ -82,6 +89,10 @@ def main(argv=None) -> dict:
             ap.error(f"unknown benchmark {args.only!r}; "
                      f"have {sorted(benches)}")
         benches = {args.only: benches[args.only]}
+    elif args.quick:
+        # the deterministic (pure cost-model) subset CI gates on
+        benches = {"fig12_scaling": benches["fig12_scaling"],
+                   "seg_sweep": benches["seg_sweep"]}
     for fn in benches.values():
         fn()
 

@@ -62,9 +62,11 @@ def main():
         err = float(jnp.abs(y - y_ref).max())
         assert err < 1e-2, err
         t_single = 2 * size * size / 50e9
-        sched = A.binomial_tree_reduce(Communicator(axis="x", size=8))
-        t_red = sched.predict_time(size * 4, ACCL_CLUSTER.ici_hop_latency,
-                                   ACCL_CLUSTER.ici_link_bw)
+        accl_comm = Communicator(axis="x", size=8, hw=ACCL_CLUSTER)
+        sched = A.binomial_tree_reduce(accl_comm)
+        # program-level pricing: cost the compiled micro-op program, the
+        # same artifact the engine executes (PR 3)
+        t_red = sched.compile().cost(size * 4, accl_comm)
         model = t_single / (t_single / 8 + t_red)
         print(f"{size},{us_single:.1f},{us_dist:.1f},"
               f"{us_single/us_dist:.2f},{model:.2f}")

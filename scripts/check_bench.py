@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""CI perf gate: fail when the predicted-time model drifts from baseline.
+
+Compares the `segment_sweep` records of a fresh benchmark run (the
+deterministic `python -m benchmarks.run --quick` output) against the
+committed baseline in benchmarks/baseline.json. Every (collective,
+algorithm, nranks, msg_bytes, segments) point present in the baseline must
+still exist and its `predicted_s` must be within --tolerance (default 10%)
+of the recorded value — a larger drift means the cost model changed
+without the baseline being refreshed, i.e. a silent perf-model regression.
+
+Refreshing the baseline after an INTENTIONAL model change:
+
+    PYTHONPATH=src python -m benchmarks.run --quick --json /tmp/bench.json
+    PYTHONPATH=src python scripts/check_bench.py /tmp/bench.json \
+        --write-baseline benchmarks/baseline.json
+
+and commit the result alongside the model change (see benchmarks/README).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _key(e: dict) -> tuple:
+    return (e["collective"], e["algorithm"], int(e["nranks"]),
+            int(e["msg_bytes"]), int(e["segments"]))
+
+
+def _sweep(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    sweep = data.get("segment_sweep", [])
+    if not sweep:
+        raise SystemExit(f"{path}: no segment_sweep records — "
+                         f"was the run aborted?")
+    return {_key(e): float(e["predicted_s"]) for e in sweep}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python scripts/check_bench.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("results", nargs="?", default="BENCH_collectives.json",
+                    help="fresh benchmark JSON (default: "
+                         "BENCH_collectives.json)")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json",
+                    help="committed baseline (default: "
+                         "benchmarks/baseline.json)")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="max relative predicted_s drift (default 0.10)")
+    ap.add_argument("--write-baseline", metavar="PATH", default=None,
+                    help="write the results' sweep as a new baseline "
+                         "instead of checking")
+    args = ap.parse_args(argv)
+
+    new = _sweep(args.results)
+    if args.write_baseline:
+        with open(args.results) as f:
+            data = json.load(f)
+        out = {"meta": data.get("meta", {}),
+               "segment_sweep": data["segment_sweep"]}
+        with open(args.write_baseline, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {args.write_baseline}: {len(new)} sweep points")
+        return 0
+
+    base = _sweep(args.baseline)
+    missing = sorted(set(base) - set(new))
+    fails = []
+    for key, b in sorted(base.items()):
+        n = new.get(key)
+        if n is None:
+            continue
+        drift = (n - b) / b
+        if abs(drift) > args.tolerance:
+            fails.append((key, b, n, drift))
+
+    print(f"check_bench: {len(base)} baseline points, "
+          f"{len(new)} fresh points, tolerance {args.tolerance:.0%}")
+    for key in missing:
+        print(f"  MISSING  {key} — baseline point not produced by the run")
+    for key, b, n, drift in fails:
+        print(f"  DRIFT    {key}: {b:.3e}s -> {n:.3e}s ({drift:+.1%})")
+    if missing or fails:
+        print(f"FAIL: {len(missing)} missing, {len(fails)} drifted — "
+              f"refresh benchmarks/baseline.json if the model change is "
+              f"intentional (see --write-baseline)")
+        return 1
+    print("OK: predicted-time model matches the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

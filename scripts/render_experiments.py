@@ -1,6 +1,5 @@
 """Splice generated tables into EXPERIMENTS.md at the placeholder markers."""
 import json
-import glob
 import os
 import sys
 

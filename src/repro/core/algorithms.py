@@ -401,10 +401,11 @@ def linear_alltoall(comm: Communicator) -> Schedule:
     schedule chunk j holds data *from* rank j.
 
     Every step uses a different ring shift, so these steps can never
-    coalesce into a LOOP micro-op — the executor unrolls n-1 chunk
-    writes. At large rank counts prefer bruck (log n steps; the auto
-    selector already does); a stacked-receive peephole for
-    relay='original' copy schedules is a ROADMAP item.
+    coalesce into a LOOP micro-op. The compiler's stacked-receive
+    peephole (`program.fuse_stacked_recv`) instead collapses the run
+    into one STACKED_RECV: all n-1 permutes issue from the immutable
+    original buffer and the arrivals land with a single chunk scatter,
+    not n-1 full-buffer update-slices.
     """
     n = comm.size
     steps = tuple(

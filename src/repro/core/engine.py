@@ -16,7 +16,9 @@ lowers through the same executor; there are no per-algorithm hand-written
 lowerings. That is the paper's property: new collectives are new
 microprograms, not new circuits. Uniform step runs (rings) execute as one
 rolled lax.scan (the LOOP micro-op), keeping O(n)-step schedules at O(1)
-live buffers; O(log n) schedules (trees, hypercubes) unroll.
+live buffers; segmented uniform runs execute as ONE skewed scan over
+segment waves (the STREAM micro-op — the CCLO's hop-to-hop pipelining,
+§4.4.3); O(log n) schedules (trees, hypercubes) unroll.
 
 All MPI-like methods are called *inside* a `shard_map` region (the engine's
 H2H role inside train/serve steps) or via `run()` which wraps one for
@@ -33,15 +35,13 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
-
 from repro.core.compat import shard_map
 
 from repro.core import plugins
 from repro.core.algorithms import GENERATORS
 from repro.core.program import (
     Copy, Compress, Decompress, Loop, Program, RecvCombine, SegLoop, Send,
-    fit_segments, split_exchange,
+    StackedRecv, Stream, fit_segments, split_exchange,
 )
 from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
@@ -310,6 +310,115 @@ def _exec_loop(loop: Loop, buf, orig, prev, chunks: int, rank, axis: str,
     return out if track else (out, prev)
 
 
+def _exec_stream(st: Stream, buf, orig, prev, chunks: int, rank, axis: str,
+                 use_pallas: bool):
+    """Cross-step segment streaming: ONE skewed scan over trip*k waves.
+
+    Wave g holds segment (iteration g//k, segment g%k) in flight for every
+    slot: the wave body first launches wave g+1's payloads (read from the
+    pre-consume carry) and then combines wave g's arrivals — so step s+1's
+    segment 0 rides the wire before step s's tail segment combines, the
+    hop-to-hop pipelining SEG_LOOP's per-step scan barrier cannot reach.
+    Segment g+1's payload depends at most on segment g+1-k's combine
+    (k >= 2 keeps that strictly in the past), and eligible region shapes
+    (see `program._stream_eligible`) make the single out-of-order tail
+    send read only untouched data — the streamed program is bitwise-equal
+    to its unfused form.
+    """
+    csize = buf.shape[0] // chunks
+    parts = []
+    for body in st.slots:
+        load, recv = body[0], body[-1]
+        send_ops, dec_ops = _split_wire(body[1:-1])
+        parts.append((load, send_ops, dec_ops, recv))
+
+    # Static segment fit — the same clamp as the unfused SEG_LOOP path,
+    # applied jointly so every slot streams at one wave rate.
+    k = st.segments
+    pay_len = None
+    for (load, send_ops, _dec, recv) in parts:
+        src0 = {"buffer": buf, "original": orig, "received": prev}[
+            load.source]
+        pay0 = _select(src0, chunks, load.sel, rank, st.base)
+        row_elems = max(1, pay0.size // max(1, pay0.shape[0]))
+        k = min(k, fit_segments(pay0.shape[0], k, row_elems,
+                                _codec_block(send_ops)))
+        if pay_len is None:
+            pay_len = pay0.shape[0]
+        elif pay_len != pay0.shape[0]:
+            k = 1  # slots disagree on the wave size: stream degenerates
+    if k < 2:
+        loop = Loop(base=st.base, trip=st.trip, period=st.period,
+                    slots=tuple((SegLoop(st.segments, b),)
+                                for b in st.slots))
+        return _exec_loop(loop, buf, orig, prev, chunks, rank, axis,
+                          use_pallas)
+    seg_len = pay_len // k
+    dtype = buf.dtype
+
+    def send_wave(m, b, pv, i, j):
+        load, send_ops, _dec, _recv = parts[m]
+        src = {"buffer": b, "original": orig, "received": pv}[load.source]
+        step = st.base + i * st.period + m
+        region = _select(src, chunks, load.sel, rank, step)
+        seg = lax.dynamic_slice_in_dim(region, j * seg_len, seg_len, 0)
+        return _send_chain(send_ops, seg, axis, use_pallas)
+
+    def consume_wave(m, b, pv, wire, i, j):
+        _load, _send, dec_ops, recv = parts[m]
+        step = st.base + i * st.period + m
+        if recv.sel.kind == SEL_ALL:
+            off = j * seg_len
+        else:  # SEL_CHUNK (the only other eligible kind)
+            off = recv.sel.fn(rank, step) * csize + j * seg_len
+        tgt = lax.dynamic_slice_in_dim(b, off, seg_len, 0)
+        inc = _recv_chain(dec_ops, wire, (seg_len,) + b.shape[1:], dtype,
+                          use_pallas)
+        out = plugins.combine(recv.op, tgt, inc.astype(dtype),
+                              use_pallas=use_pallas)
+        b = lax.dynamic_update_slice_in_dim(b, out, off, 0)
+        if recv.track_recv:
+            pv = lax.dynamic_update_slice_in_dim(pv, inc, j * seg_len, 0)
+        return b, pv
+
+    nslots = len(parts)
+    waves = st.trip * k
+    infl0 = tuple(send_wave(m, buf, prev, 0, 0) for m in range(nslots))
+
+    def wave(carry, g):
+        b, pv, infl = carry
+        i, j = g // k, g % k
+        i1, j1 = (g + 1) // k, (g + 1) % k
+        # launch wave g+1 from the pre-consume state, THEN combine wave g
+        nxt = tuple(send_wave(m, b, pv, i1, j1) for m in range(nslots))
+        for m in range(nslots):
+            b, pv = consume_wave(m, b, pv, infl[m], i, j)
+        return (b, pv, nxt), None
+
+    (buf, prev, infl), _ = lax.scan(wave, (buf, prev, infl0),
+                                    jnp.arange(waves - 1))
+    for m in range(nslots):  # drain: the tail segment of the last step
+        buf, prev = consume_wave(m, buf, prev, infl[m], st.trip - 1, k - 1)
+    return buf, prev
+
+
+def _exec_stacked(op: StackedRecv, buf, orig, chunks: int, rank, axis: str):
+    """Stacked-receive peephole: issue every relay='original' permute,
+    stack the arrivals, and write them back with ONE chunk scatter
+    instead of a chain of full-buffer dynamic-update-slices."""
+    csize = buf.shape[0] // chunks
+    arrivals, idxs = [], []
+    for (load, send, recv) in op.bodies:
+        payload = _select(orig, chunks, load.sel, rank, load.step)
+        arrivals.append(lax.ppermute(payload, axis, send.perm))
+        idxs.append(jnp.asarray(recv.sel.fn(rank, recv.step), jnp.int32))
+    stacked = jnp.stack(arrivals, axis=0)
+    pos = jnp.stack(idxs)
+    grp = buf.reshape((chunks, csize) + buf.shape[1:])
+    grp = grp.at[pos].set(stacked.astype(buf.dtype))
+    return grp.reshape(buf.shape)
+
+
 def execute_program(prog: Program, buf, axis: str, *,
                     use_pallas: bool = False):
     """Execute a compiled micro-op Program on the local shard `buf` inside
@@ -337,6 +446,13 @@ def execute_program(prog: Program, buf, axis: str, *,
         if isinstance(op, Loop):
             buf, prev = _exec_loop(op, buf, orig, prev, prog.chunks, rank,
                                    axis, use_pallas)
+            i += 1
+        elif isinstance(op, Stream):
+            buf, prev = _exec_stream(op, buf, orig, prev, prog.chunks,
+                                     rank, axis, use_pallas)
+            i += 1
+        elif isinstance(op, StackedRecv):
+            buf = _exec_stacked(op, buf, orig, prog.chunks, rank, axis)
             i += 1
         elif isinstance(op, Copy) and op.kind == "bruck_post":
             buf = _chunk_roll(buf, prog.chunks, rank + 1, reverse=True)

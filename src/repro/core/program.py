@@ -29,9 +29,25 @@ The primitive set:
                 at O(1) live buffers: unrolling a 16-rank ring produces 15
                 full-buffer dynamic-update-slice chains whose arenas XLA
                 cannot always alias.
+  STREAM        cross-step segment streaming (§4.4.3, the CCLO's hop-to-hop
+                pipelining): a uniform run of segmented exchanges fused
+                into ONE skewed software pipeline — step s+1's segment 0
+                rides the wire before step s's tail segment combines. The
+                `fuse_streams` pass rewrites eligible LOOPs of SEG_LOOP
+                slots into this; it is bitwise-equal to the unfused form.
+  STACKED_RECV  the stacked-receive peephole: a run of relay='original'
+                copy exchanges (explicit linear all-to-all) whose arrivals
+                are written back with ONE chunk scatter instead of n-1
+                full-buffer dynamic-update-slices.
 
 Both executors run the same Program object, so oracle parity in the numpy
 simulator covers the real code path, not a parallel reimplementation.
+
+The Program is also the unit of COST: `Program.cost(msg_bytes, comm)`
+walks the compiled ops (LOOP trip counts, SEG_LOOP/STREAM fill/drain,
+per-op codec wire bytes, per-fabric alpha and Rx segment floors) — so the
+selector prices the exact artifact the engine executes, and the simulator
+returns the same cost it runs. The schedule-walk `predict_time` is retired.
 
 Per-segment scale reuse (codecs): block codecs (int8) quantize in fixed
 element blocks. `fit_segments` only admits segment counts whose per-
@@ -77,6 +93,9 @@ class Compress:
 @dataclasses.dataclass(frozen=True)
 class Send:
     perm: tuple                    # (src, dst) pairs, one collective-permute
+    # fraction of the full message this crossing moves per rank — the
+    # static cost term the alpha-beta walk (`Program.cost`) prices.
+    bytes_frac: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +146,49 @@ class Loop:
 
 
 @dataclasses.dataclass(frozen=True)
+class Stream:
+    """Cross-step segment streaming: a uniform run of `trip` iterations of
+    `period` segmented exchanges fused into one skewed software pipeline.
+
+    Each slot's body is the PLAIN (unsegmented) exchange tuple — the
+    segment count lives on the Stream. Execution order is by segment
+    wave g = iteration * segments + segment: wave g's arrivals combine
+    while wave g+1's payloads are already on the wire, so step s+1's
+    segment 0 crosses the Tx/Rx system before step s's tail combine —
+    the hop-to-hop pipelining of the CCLO (§4.4.3) that SEG_LOOP alone
+    cannot reach (its scan carry is a per-step barrier).
+
+    `fuse_streams` only emits a Stream when the wave order is provably
+    value-identical to the per-step order (chunk-aligned regions, or
+    payloads read from the immutable original / the relay register), so
+    streamed programs are bitwise-equal to their unfused form.
+    """
+
+    base: int
+    trip: int
+    period: int
+    segments: int
+    slots: tuple                   # tuple[tuple[micro-op, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedRecv:
+    """A run of relay='original' copy exchanges with one stacked write.
+
+    Every body is a plain (Copy('load'), Send, RecvCombine) triple whose
+    payload reads the immutable original buffer, so all sends are
+    independent of the receive order: the executor issues every permute,
+    stacks the arrivals, and scatters them into the chunk grid in ONE
+    gather-style update instead of n-1 full-buffer update-slices (the
+    retired hand-written linear all-to-all's trick, now a compiler
+    peephole). The pass verifies the receive chunks are distinct per
+    rank, so the scatter is write-disjoint.
+    """
+
+    bodies: tuple                  # tuple[(Copy, Send, RecvCombine), ...]
+
+
+@dataclasses.dataclass(frozen=True)
 class Program:
     """A compiled collective: schedule metadata + linear micro-op list."""
 
@@ -138,6 +200,9 @@ class Program:
     segments: int
     codec: Optional[str]
     ops: tuple
+    # >1 when uniform slots use independent links concurrently (bidi ring);
+    # carried from the schedule so the cost walk needs no schedule access.
+    overlap_factor: float = 1.0
 
     def describe(self) -> str:
         """One line per op — the firmware disassembly (tests, debugging)."""
@@ -148,12 +213,103 @@ class Program:
                     ",".join(type(o).__name__ for o in slot)
                     for slot in op.slots)
                 out.append(f"LOOP x{op.trip} period={op.period} [{inner}]")
+            elif isinstance(op, Stream):
+                inner = "; ".join(
+                    ",".join(type(o).__name__ for o in slot)
+                    for slot in op.slots)
+                out.append(f"STREAM x{op.trip} k={op.segments} "
+                           f"period={op.period} [{inner}]")
+            elif isinstance(op, StackedRecv):
+                out.append(f"STACKED_RECV m={len(op.bodies)}")
             elif isinstance(op, SegLoop):
                 inner = ",".join(type(o).__name__ for o in op.body)
                 out.append(f"SEG_LOOP k={op.segments} [{inner}]")
             else:
                 out.append(type(op).__name__.upper())
         return "\n".join(out)
+
+    # ---- program-level pricing (the alpha-beta walk) ---------------------
+    def exchange_terms(self):
+        """Yield (multiplicity, segments, body) per wire exchange.
+
+        The one IR-shape walk `cost` prices: LOOP/STREAM slots repeat
+        `trip` times, SEG_LOOP carries its segment count, stacked and
+        unrolled exchanges run once. Bruck pre/post rotations are local
+        DMA and free, matching the retired schedule-walk model.
+        """
+        ops = self.ops
+        i = 0
+        while i < len(ops):
+            op = ops[i]
+            if isinstance(op, Loop):
+                for slot in op.slots:
+                    body, k = split_exchange(slot)
+                    yield op.trip, k, body
+                i += 1
+            elif isinstance(op, Stream):
+                for body in op.slots:
+                    yield op.trip, op.segments, body
+                i += 1
+            elif isinstance(op, StackedRecv):
+                for body in op.bodies:
+                    yield 1, 1, body
+                i += 1
+            elif isinstance(op, SegLoop):
+                yield 1, op.segments, op.body
+                i += 1
+            elif isinstance(op, Copy) and op.kind != "load":
+                i += 1
+            else:
+                j = i
+                while not isinstance(ops[j], RecvCombine):
+                    j += 1
+                yield 1, 1, tuple(ops[i:j + 1])
+                i = j + 1
+
+    def cost(self, msg_bytes: float, comm, elem_bytes: int = 4) -> float:
+        """Predicted seconds for THIS compiled program on `comm`'s fabric.
+
+        The pipeline fill/drain model, priced off the ops that will
+        actually execute: each exchange contributes one per-segment time
+        t_i = alpha + wire_bytes_i / (k_i * bw) (times its LOOP/STREAM
+        trip count), and the segmented pipeline drains in
+        sum_i t_i + (k - 1) * max_i t_i, divided by `overlap_factor`
+        when slots ride independent links. Wire bytes come from each
+        SEND's `bytes_frac`, scaled by the codec ratio when the exchange
+        COMPRESSes (copy phases ship uncompressed — visible directly in
+        the ops, no schedule rule needed). `comm` supplies the per-fabric
+        alpha, bandwidth, and Rx segment floor: a segment count that
+        would cut an exchange's wire payload below the floor is clamped,
+        so sub-floor tuning pins price what the Rx buffers can hold.
+
+        For any program the schedule-walk `predict_time` could price
+        (uniform segmentation, no sub-floor segments), this walk returns
+        the identical number — asserted by the golden pricing-parity
+        property test.
+        """
+        alpha = comm.hop_latency
+        bw = comm.link_bw
+        floor = comm.min_segment_bytes
+        total, t_max, k_pipe = 0.0, 0.0, 1
+        for mult, k, body in self.exchange_terms():
+            scale = 1.0
+            send = None
+            for op in body:
+                if isinstance(op, Compress):
+                    from repro.core import plugins  # lazy: keep IR jax-free
+                    scale = (plugins.get_codec(op.codec).wire_bytes_per_elem
+                             / float(elem_bytes))
+                elif isinstance(op, Send):
+                    send = op
+            wire = float(msg_bytes) * send.bytes_frac * scale
+            k_eff = int(k)
+            while k_eff > 1 and wire / k_eff < floor:
+                k_eff -= 1
+            t = alpha + wire / (k_eff * bw)
+            total += mult * t
+            t_max = max(t_max, t)
+            k_pipe = max(k_pipe, k_eff)
+        return (total + (k_pipe - 1) * t_max) / self.overlap_factor
 
 
 # --------------------------------------------------------------------------
@@ -201,15 +357,16 @@ def _exchange_ops(step: Step, relay: str, step_idx: Optional[int],
                   k_req: int, codec: Optional[str]) -> tuple:
     """The micro-op sequence for one schedule step."""
     ops = [Copy("load", sel=step.send_sel, source=relay, step=step_idx)]
+    send = Send(tuple(step.perm), bytes_frac=step.bytes_frac)
     if codec is not None and step.op != "copy":
         # codecs compress the wire of combine exchanges (the RS phase);
         # copy-only relays ship already-reduced chunks uncompressed, the
         # same rule the hand-written rings applied.
         ops.append(Compress(codec))
-        ops.append(Send(tuple(step.perm)))
+        ops.append(send)
         ops.append(Decompress(codec))
     else:
-        ops.append(Send(tuple(step.perm)))
+        ops.append(send)
     dsts = tuple(sorted(d for (_s, d) in step.perm)) if step.mask_recv \
         else None
     ops.append(RecvCombine(op=step.op, sel=step.recv_sel, step=step_idx,
@@ -266,6 +423,126 @@ def split_exchange(node) -> tuple:
     return node, 1
 
 
+# --------------------------------------------------------------------------
+# Optimization passes
+# --------------------------------------------------------------------------
+
+def _stream_eligible(loop: Loop, k_req: int) -> bool:
+    """Can this uniform run execute as one cross-step segment stream?
+
+    Wave order differs from per-step order in exactly one place: step
+    s+1's segment 0 is sent before step s's tail segment (k-1) combines.
+    That reordering is value-invisible when every payload either
+
+      * reads the immutable original buffer (relay='original'),
+      * reads the relay register (relay='received'), whose segment j was
+        recorded k waves earlier, or
+      * reads whole chunks (SEL_CHUNK send AND recv): chunk regions are
+        equal or disjoint, and equal regions slice into the same k
+        segments — segment 0 never overlaps the missing tail write.
+
+    mask_recv slots never coalesce into LOOPs; track_recv (the relay
+    register) is a single shared register, so it streams only at
+    period 1.
+    """
+    if k_req < 2 or loop.trip < 2:
+        return False
+    track = False
+    for slot in loop.slots:
+        if not (len(slot) == 1 and isinstance(slot[0], SegLoop)):
+            return False
+        seg = slot[0]
+        if seg.segments != k_req:
+            return False
+        load, recv = seg.body[0], seg.body[-1]
+        if recv.dsts is not None:
+            return False
+        track = track or recv.track_recv
+        if recv.sel.kind not in (SEL_CHUNK, SEL_ALL):
+            return False
+        if load.source == SRC_BUFFER:
+            if not (load.sel.kind == SEL_CHUNK
+                    and recv.sel.kind == SEL_CHUNK):
+                return False
+        elif load.source == SRC_RECEIVED:
+            if not (load.sel.kind == SEL_ALL and recv.sel.kind == SEL_ALL):
+                return False
+        # SRC_ORIGINAL payloads never read mutable state: any send sel.
+    if track and loop.period != 1:
+        return False
+    return True
+
+
+def fuse_streams(ops: tuple, k_req: int) -> tuple:
+    """Rewrite eligible LOOPs of SEG_LOOP slots into STREAM micro-ops —
+    the cross-step software pipeline the cost model prices."""
+    out = []
+    for op in ops:
+        if isinstance(op, Loop) and _stream_eligible(op, k_req):
+            out.append(Stream(
+                base=op.base, trip=op.trip, period=op.period,
+                segments=k_req,
+                slots=tuple(slot[0].body for slot in op.slots)))
+        else:
+            out.append(op)
+    return tuple(out)
+
+
+def _stackable(body: tuple) -> bool:
+    """One relay='original' copy exchange the peephole may stack."""
+    if len(body) != 3:
+        return False
+    load, send, recv = body
+    return (isinstance(load, Copy) and load.kind == "load"
+            and load.source == SRC_ORIGINAL
+            and load.sel.kind == SEL_CHUNK
+            and isinstance(send, Send)
+            and isinstance(recv, RecvCombine)
+            and recv.op == "copy" and recv.sel.kind == SEL_CHUNK
+            and recv.dsts is None and not recv.track_recv
+            and load.step is not None)
+
+
+def _distinct_recv_chunks(bodies: tuple, nranks: int) -> bool:
+    """Every rank's receive chunks across the run must be pairwise
+    distinct for the stacked scatter to be write-disjoint. Selector
+    closures are pure (rank, step) arithmetic, so they evaluate on
+    concrete ints at compile time; anything fancier opts out."""
+    try:
+        for r in range(nranks):
+            idxs = [int(b[-1].sel.fn(r, b[-1].step)) for b in bodies]
+            if len(set(idxs)) != len(idxs):
+                return False
+    except Exception:
+        return False
+    return True
+
+
+def fuse_stacked_recv(ops: tuple, nranks: int) -> tuple:
+    """The stacked-receive peephole: collapse runs of >= 2 consecutive
+    relay='original' copy exchanges into one STACKED_RECV (the retired
+    linear all-to-all lowering's one-gather write-back)."""
+    out: list = []
+    i = 0
+    while i < len(ops):
+        op = ops[i]
+        run: list = []
+        j = i
+        while (j + 2 < len(ops) and isinstance(ops[j], Copy)
+               and ops[j].kind == "load"
+               and isinstance(ops[j + 2], RecvCombine)
+               and _stackable(tuple(ops[j:j + 3]))):
+            run.append(tuple(ops[j:j + 3]))
+            j += 3
+        if len(run) >= 2 and _distinct_recv_chunks(tuple(run), nranks):
+            out.append(StackedRecv(bodies=tuple(run)))
+            i = j
+        else:
+            out.append(op)
+            i += 1
+    return tuple(out)
+
+
 # Schedules hash their Sel closures by identity, so freshly generated
 # (structurally identical) schedules never share entries: bound the cache
 # so long-lived processes compiling transient schedules (benchmark loops,
@@ -276,13 +553,24 @@ _COMPILE_CACHE_MAX = 512
 
 
 def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
-                     codec: Optional[str] = None) -> Program:
+                     codec: Optional[str] = None, stream: bool = True,
+                     stacked: bool = True) -> Program:
     """Lower a Schedule to a Program (memoized — compilation is trace-time
-    control-plane work, like the uC caching assembled microcode)."""
+    control-plane work, like the uC caching assembled microcode).
+
+    Two optimization passes run by default; tests disable them to hold
+    the unfused program as a bitwise reference:
+
+      stream   fuse uniform runs of segmented exchanges into cross-step
+               STREAM pipelines (`fuse_streams`) — only at segments > 1.
+      stacked  collapse relay='original' copy runs into one STACKED_RECV
+               scatter (`fuse_stacked_recv`) — only at segments == 1
+               (segmented copy runs keep their SEG_LOOP form).
+    """
     k_req = int(segments if segments is not None else schedule.segments)
     if k_req < 1:
         raise ValueError(f"segments must be >= 1, got {k_req}")
-    key = (schedule, k_req, codec)
+    key = (schedule, k_req, codec, bool(stream), bool(stacked))
     hit = _COMPILE_CACHE.get(key)
     if hit is not None:
         return hit
@@ -310,11 +598,17 @@ def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
     if schedule.post_rotate == "bruck":
         ops.append(Copy("bruck_post"))
 
+    ops = tuple(ops)
+    if stream and k_req > 1:
+        ops = fuse_streams(ops, k_req)
+    if stacked and k_req == 1:
+        ops = fuse_stacked_recv(ops, schedule.nranks)
+
     prog = Program(
         name=schedule.name, collective=schedule.collective,
         nranks=schedule.nranks, chunks=schedule.chunks,
         relay=schedule.relay, segments=k_req, codec=codec,
-        ops=tuple(ops))
+        ops=ops, overlap_factor=schedule.overlap_factor)
     if len(_COMPILE_CACHE) >= _COMPILE_CACHE_MAX:
         _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))  # FIFO eviction
     _COMPILE_CACHE[key] = prog

@@ -150,46 +150,6 @@ class Schedule:
         """Per-rank bytes sent over the whole schedule."""
         return float(msg_bytes) * sum(s.bytes_frac for s in self.steps)
 
-    def predict_time(self, msg_bytes: float, hop_latency: float,
-                     link_bw: float, segments: Optional[int] = None,
-                     wire_scale: float = 1.0) -> float:
-        """alpha-beta time with wire segmentation.
-
-        Unsegmented (k=1): sum over steps of (alpha + step_bytes / bw).
-
-        Segmented (k>1): each step's payload is cut into k segments that
-        stream through the step chain double-buffered, so the pipeline
-        drains in  sum_i t_i + (k-1) * max_i t_i  where
-        t_i = alpha + step_bytes_i / (k * bw)  is one segment's time
-        through step i (the classic pipeline fill/drain model; for a
-        homogeneous S-step ring this is (S + k - 1) * t). Divided by
-        overlap_factor when independent links run concurrently.
-
-        `wire_scale` scales the beta term for compressed wires (codec
-        wire bytes per payload byte — e.g. ~0.25 for fp32→int8), so the
-        selector can price compressed-segmented variants. It applies to
-        combine steps only: the data plane ships copy phases (allgather
-        halves, relays of already-reduced chunks) uncompressed.
-
-        This models the CCLO target, where segments stream *across*
-        consecutive hops. The XLA lowerings pipeline segments only within
-        a step (the scan carry is a per-step barrier), realizing wire/
-        combine overlap but not cross-step streaming — so treat segmented
-        predictions as the hardware roadmap, and pin measured optima via
-        the tuning table (see ROADMAP open items).
-        """
-        k = int(segments if segments is not None else self.segments)
-        if k < 1:
-            raise ValueError(f"segments must be >= 1, got {k}")
-        total, t_max = 0.0, 0.0
-        for s in self.steps:
-            scale = wire_scale if s.op != "copy" else 1.0
-            t = hop_latency + (msg_bytes * s.bytes_frac * scale) / (
-                k * link_bw)
-            total += t
-            t_max = max(t_max, t)
-        return (total + (k - 1) * t_max) / self.overlap_factor
-
     def with_segments(self, segments: int) -> "Schedule":
         """Copy of this schedule with the segmentation knob set."""
         if segments == self.segments:
@@ -197,16 +157,21 @@ class Schedule:
         return dataclasses.replace(self, segments=int(segments))
 
     def compile(self, segments: Optional[int] = None,
-                codec: Optional[str] = None):
+                codec: Optional[str] = None, stream: bool = True,
+                stacked: bool = True):
         """Lower this schedule to a micro-op `Program` (core/program.py).
 
-        The program is the single data-plane artifact both executors run:
+        The program is the single artifact of BOTH execution and cost:
         `engine.execute_program` (XLA) and `simulator.execute_program`
-        (numpy). `segments` overrides the schedule's own knob; `codec`
-        names a wire compressor from `plugins.CODECS`.
+        (numpy) run it, and `Program.cost` prices it (there is no
+        schedule-walk pricing any more). `segments` overrides the
+        schedule's own knob; `codec` names a wire compressor from
+        `plugins.CODECS`; `stream`/`stacked` gate the optimization
+        passes (tests hold the unfused program as a bitwise reference).
         """
         from repro.core import program as prog  # local: avoid import cycle
-        return prog.compile_schedule(self, segments=segments, codec=codec)
+        return prog.compile_schedule(self, segments=segments, codec=codec,
+                                     stream=stream, stacked=stacked)
 
     def validate(self) -> None:
         """Structural checks (the 'firmware assembler')."""

@@ -4,11 +4,13 @@ ACCL+ (§4.4.4): "The tuning of the algorithms for specific collective can be
 done at runtime by setting configuration parameters to the CCLO engine and
 we set these parameters according to our empirical experiment results."
 
-We reproduce that: `Selector.choose()` prices every registered (algorithm,
-protocol) pair for a (collective, message size, communicator) with the
-alpha-beta model and picks the cheapest. A user tuning table overrides the
-model (the paper's "configuration parameters"), so deployments can pin
-choices measured on their fabric — without touching any model code.
+We reproduce that: `Selector.choose()` COMPILES every registered
+(algorithm, protocol, segments) candidate to its micro-op Program and
+prices it with `Program.cost` (the alpha-beta walk over the exact ops the
+engine will execute — stream fusion and peepholes included), picking the
+cheapest. A user tuning table overrides the model (the paper's
+"configuration parameters"), so deployments can pin choices measured on
+their fabric — without touching any model code.
 
 Protocol model (paper §4.4.3, adapted per DESIGN.md §5):
   eager       no handshake; receiver staging copy costs msg/eager_copy_bw.
@@ -22,6 +24,7 @@ from typing import Optional
 
 from repro.core import algorithms as algos
 from repro.core import plugins
+from repro.core.program import Program, Stream
 from repro.core.schedule import Schedule
 from repro.core.topology import Communicator
 
@@ -67,6 +70,9 @@ class Choice:
     schedule: Schedule
     segments: int = 1
     codec: Optional[str] = None  # wire compressor the pricing assumed
+    # the compiled artifact the price was computed FROM — the exact
+    # micro-op program (stream-fused, peepholed) the engine will execute
+    program: Optional[Program] = None
 
     @property
     def compressed(self) -> bool:
@@ -153,16 +159,30 @@ class Selector:
         return plugins.get_codec(codec).wire_bytes_per_elem / float(
             elem_bytes)
 
+    def price_program(self, prog: Program, protocol: str, msg_bytes: float,
+                      comm: Communicator,
+                      elem_bytes: int = 4) -> Optional[float]:
+        """Protocol overhead + `Program.cost` — the hot-path pricer.
+
+        The program IS the costed artifact: LOOP trip counts, SEG_LOOP /
+        STREAM fill-drain, per-op codec wire bytes, and the fabric's
+        alpha/segment floors are all read off the compiled ops, so the
+        selector prices exactly what the engine will execute (the retired
+        `predict_time` priced the schedule instead).
+        """
+        ov = self._protocol_overhead(protocol, msg_bytes, comm)
+        if ov is None:
+            return None
+        return prog.cost(msg_bytes, comm, elem_bytes=elem_bytes) + ov
+
     def price(self, schedule: Schedule, protocol: str, msg_bytes: float,
               comm: Communicator, segments: int = 1,
               codec: Optional[str] = None,
               elem_bytes: int = 4) -> Optional[float]:
-        ov = self._protocol_overhead(protocol, msg_bytes, comm)
-        if ov is None:
-            return None
-        return schedule.predict_time(
-            msg_bytes, comm.hop_latency, comm.link_bw, segments=segments,
-            wire_scale=self._wire_scale(codec, elem_bytes)) + ov
+        """Compile (memoized) then price — see `price_program`."""
+        return self.price_program(
+            schedule.compile(segments=segments, codec=codec), protocol,
+            msg_bytes, comm, elem_bytes=elem_bytes)
 
     def admissible_segments(self, schedule: Schedule, msg_bytes: float,
                             comm: Optional[Communicator] = None,
@@ -175,22 +195,31 @@ class Selector:
         far above the ICI one because of its 10 us alpha); k=1 is always
         admissible. Compressed wires shrink the per-segment bytes by the
         codec ratio, so they admit fewer segments at equal message size.
-        Copy-only schedules (allgather, bcast, alltoall) are never
-        auto-segmented: the XLA lowering runs each step's segments through
-        a scan with no combine work to overlap, so segmentation only adds
-        per-segment alpha there — unlike the CCLO, which streams copies
-        across hops. (A tuning-table entry can still pin segments
-        explicitly.)
+        Copy-only schedules have no combine work for SEG_LOOP to overlap,
+        so they auto-segment only when the compiled program cross-step
+        STREAMs the copies between hops (ring allgather does; bcast trees
+        and linear/bruck all-to-all unroll, so segmentation would only
+        add per-segment alpha there). The probe reads the compiled
+        artifact rather than hard-coding a schedule family. (A
+        tuning-table entry can still pin segments explicitly.)
         """
         if not schedule.steps:
             return (1,)
         if all(s.op == "copy" for s in schedule.steps):
-            return (1,)
+            probe = schedule.compile(segments=2)
+            if not any(isinstance(op, Stream) for op in probe.ops):
+                return (1,)
         floor = (comm.min_segment_bytes if comm is not None
                  else self.min_segment_bytes)
         scale = self._wire_scale(codec, elem_bytes)
-        step_bytes = max(msg_bytes * s.bytes_frac * scale
-                         for s in schedule.steps if s.op != "copy")
+        # the floor applies to the largest wire crossing that segments:
+        # combine steps when present (copy phases ship uncompressed and
+        # ride along), else the copy steps of a streamed copy schedule
+        combine_bytes = [msg_bytes * s.bytes_frac * scale
+                         for s in schedule.steps if s.op != "copy"]
+        step_bytes = (max(combine_bytes) if combine_bytes
+                      else max(msg_bytes * s.bytes_frac
+                               for s in schedule.steps))
         out = []
         for k in self.segment_candidates:
             if k == 1 or step_bytes / k >= floor:
@@ -261,16 +290,21 @@ class Selector:
                          else self.admissible_segments(
                              sched, msg_bytes, comm, codec, elem_bytes))
             tuned_best: Optional[Choice] = None
-            for proto in protos:
-                for k in seg_space:
-                    t = self.price(sched, proto, msg_bytes, comm,
-                                   segments=k, codec=codec,
-                                   elem_bytes=elem_bytes)
+            for k in seg_space:
+                # ONE compiled artifact per candidate: compiling through
+                # the same Schedule instance the Choice carries means the
+                # engine's memoized compile of choice.schedule returns
+                # THIS program object — priced and executed artifacts are
+                # identical, not merely equal
+                sched_k = sched.with_segments(k)
+                prog = sched_k.compile(codec=codec)
+                for proto in protos:
+                    t = self.price_program(prog, proto, msg_bytes, comm,
+                                           elem_bytes=elem_bytes)
                     if t is None:
                         continue
-                    cand = Choice(collective, algo, proto, t,
-                                  sched.with_segments(k), segments=k,
-                                  codec=codec)
+                    cand = Choice(collective, algo, proto, t, sched_k,
+                                  segments=k, codec=codec, program=prog)
                     if tuned_algo == algo:
                         if tuned_best is None or t < tuned_best.predicted_s:
                             tuned_best = cand

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core.program import (
     Copy, Compress, Decompress, Loop, Program, RecvCombine, SegLoop, Send,
-    compile_schedule, fit_segments, split_exchange,
+    StackedRecv, Stream, compile_schedule, fit_segments, split_exchange,
 )
 from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
@@ -216,7 +216,25 @@ def execute_program(prog: Program, inputs: list) -> list:
 
     while i < len(ops):
         op = ops[i]
-        if isinstance(op, Loop):
+        if isinstance(op, Stream):
+            # The stream's wave order is value-identical to the per-step
+            # order by construction (that is exactly what fuse_streams
+            # proves before emitting one) — the bus-functional model
+            # executes the unfused equivalent, segment granularity
+            # included, so streamed programs validate through the same
+            # two-phase path.
+            op = Loop(base=op.base, trip=op.trip, period=op.period,
+                      slots=tuple((SegLoop(op.segments, b),)
+                                  for b in op.slots))
+        if isinstance(op, StackedRecv):
+            # stacked receives are write-disjoint: applying them in step
+            # order reproduces the engine's one-scatter result exactly
+            for body in op.bodies:
+                writes = _exchange_writes(body, 1, state, prog.chunks,
+                                          body[0].step, state.bufs)
+                _apply(state, prog.chunks, writes)
+            i += 1
+        elif isinstance(op, Loop):
             for it in range(op.trip):
                 # two-phase like the engine's LOOP: all slots read the
                 # iteration-start buffers, writes land at iteration end
@@ -260,6 +278,19 @@ def simulate(schedule: Schedule, inputs: list,
     schedule.validate()
     prog = compile_schedule(schedule, segments=segments)
     return execute_program(prog, inputs)
+
+
+def simulate_with_cost(schedule: Schedule, inputs: list, comm,
+                       segments: Optional[int] = None,
+                       elem_bytes: int = 4) -> tuple:
+    """`simulate`, plus the predicted seconds of the SAME compiled program
+    (`Program.cost`) — the simulator returns the cost of exactly what it
+    executed, the fig10/fig12 model-evaluation contract."""
+    schedule.validate()
+    prog = compile_schedule(schedule, segments=segments)
+    bufs = execute_program(prog, inputs)
+    msg_bytes = inputs[0].size * inputs[0].itemsize
+    return bufs, prog.cost(msg_bytes, comm, elem_bytes=elem_bytes)
 
 
 # ---------------------------------------------------------------------------

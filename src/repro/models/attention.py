@@ -395,7 +395,6 @@ def attention_block(params, x, cfg: ArchConfig, ctx: ParCtx,
         k = rope(k, positions, cfg.rope_theta)
 
     # GQA group alignment: local q heads must map onto local kv heads.
-    reps = hl // kv_l if kv_sharded else None
     if not kv_sharded:
         # every rank has all kv heads; local q heads belong to global groups
         # -> bring q to (B,S,KV, hl/KV...) by padding group dim per rank.

@@ -107,9 +107,6 @@ def grad_sync(grads, specs, ctx: ParCtx,
 
     out = {}
     sq = jnp.zeros((), jnp.float32)
-    full_repl = 1
-    for a in mesh_axes:
-        full_repl *= ctx.mesh.shape[a]
     for missing, entries in buckets.items():
         leaves = [l for _, l in entries]
         repl = 1

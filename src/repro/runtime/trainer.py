@@ -19,7 +19,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.checkpoint import CheckpointManager
@@ -151,7 +150,6 @@ class Trainer:
                     self.ckpt.save(step, self._state_tree(params, opt),
                                    self._state_specs())
             # final blocking checkpoint (preemption-safe shutdown)
-            last = start + len(log) - 1 if log else start - 1
             if log:
                 self.ckpt.save(log[-1]["step"],
                                self._state_tree(params, opt),

@@ -7,7 +7,6 @@ bitwise oracles: test_golden_parity.py asserts the compiled-IR execution
 reproduces their outputs exactly. Do not "fix" or modernize this file; its
 value is that it does not change.
 """
-import functools
 
 import jax
 import jax.numpy as jnp

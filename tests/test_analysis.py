@@ -1,7 +1,6 @@
 """HLO static analyzer: loop multiplicity, flops, collective bytes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.topology import make_mesh

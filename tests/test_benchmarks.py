@@ -1,11 +1,23 @@
-"""The benchmark harness's machine-readable output (BENCH_collectives.json).
+"""The benchmark harness's machine-readable output (BENCH_collectives.json)
+and the CI perf gate over it (scripts/check_bench.py).
 
 Runs only the model-based segment sweep (no device timing) so this stays
 fast; the full `python -m benchmarks.run` exercises the same writer.
 """
+import importlib.util
 import json
+import pathlib
 
 import pytest
+
+
+def _load_check_bench():
+    path = (pathlib.Path(__file__).resolve().parent.parent / "scripts"
+            / "check_bench.py")
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 @pytest.fixture(scope="module")
@@ -68,3 +80,72 @@ def test_sweep_pipelining_dominates_at_1mib(sweep_results):
         checked += 1
         assert min(times.values()) < times[1], (coll, algo, nbytes)
     assert checked >= 3  # sweep must actually cover >= 1 MiB messages
+
+
+def test_sweep_marks_streamed_programs(sweep_results):
+    """Sweep points carry whether the compiled program cross-step
+    streams: rings at k > 1 do, unrolled trees never do."""
+    _, on_disk = sweep_results
+    sweep = on_disk["segment_sweep"]
+    assert all("streamed" in e for e in sweep)
+    assert any(e["streamed"] for e in sweep
+               if e["algorithm"] in ("ring", "bidi_ring")
+               and e["segments"] > 1)
+    assert not any(e["streamed"] for e in sweep
+                   if e["algorithm"] == "binomial_tree")
+    assert not any(e["streamed"] for e in sweep if e["segments"] == 1)
+
+
+# -- the CI perf gate (scripts/check_bench.py) --------------------------------
+
+def test_check_bench_passes_against_committed_baseline(sweep_results,
+                                                       tmp_path):
+    """The deterministic sweep must reproduce benchmarks/baseline.json —
+    the exact check the CI bench job runs. If this fails after an
+    intentional cost-model change, refresh the baseline (see
+    benchmarks/README.md)."""
+    _, on_disk = sweep_results
+    results = tmp_path / "fresh.json"
+    results.write_text(json.dumps(on_disk))
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    assert cb.main([str(results), "--baseline", str(baseline)]) == 0
+
+
+def test_check_bench_fails_on_model_drift(sweep_results, tmp_path):
+    """>10% predicted-time drift on any baseline point fails the gate."""
+    _, on_disk = sweep_results
+    drifted = json.loads(json.dumps(on_disk))
+    drifted["segment_sweep"][0]["predicted_s"] *= 1.25
+    results = tmp_path / "drifted.json"
+    results.write_text(json.dumps(drifted))
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    assert cb.main([str(results), "--baseline", str(baseline)]) == 1
+
+
+def test_check_bench_fails_on_missing_points(sweep_results, tmp_path):
+    """A sweep that silently drops baseline coverage fails the gate."""
+    _, on_disk = sweep_results
+    truncated = {"meta": on_disk["meta"],
+                 "segment_sweep": on_disk["segment_sweep"][:10]}
+    results = tmp_path / "truncated.json"
+    results.write_text(json.dumps(truncated))
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    assert cb.main([str(results), "--baseline", str(baseline)]) == 1
+
+
+def test_check_bench_write_baseline_round_trip(sweep_results, tmp_path):
+    """--write-baseline emits a file the checker then passes against —
+    the documented refresh procedure."""
+    _, on_disk = sweep_results
+    results = tmp_path / "fresh.json"
+    results.write_text(json.dumps(on_disk))
+    new_base = tmp_path / "baseline.json"
+    cb = _load_check_bench()
+    assert cb.main([str(results), "--write-baseline", str(new_base)]) == 0
+    assert cb.main([str(results), "--baseline", str(new_base)]) == 0

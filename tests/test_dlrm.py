@@ -22,7 +22,6 @@ def test_dlrm_distributed_matches_reference(rng):
     params = dlrm_mod.dlrm_params(b, cfg, 4)
     specs = dlrm_mod.dlrm_specs(cfg, 4)
     B = 8
-    rows = ((cfg.rows_per_table + 3) // 4) * 4
     idx = rng.integers(0, cfg.rows_per_table, (B, cfg.n_tables)).astype(np.int32)
 
     g = jax.jit(jax.shard_map(

@@ -90,7 +90,6 @@ def test_replicated_param_needs_explicit_psum(setup):
 def test_grad_sync_bucketing(mesh222):
     """grad_sync psums exactly the axes missing from each spec."""
     from repro.configs import get_config, reduced_config
-    from repro.configs.base import ParallelConfig
     from repro.parallel import stages
     from repro.parallel.ops import spec_axes
     cfg = reduced_config(get_config("qwen3-0.6b"))

@@ -1,5 +1,4 @@
 """Model component tests: flash attention, SSD scan, MoE, decode paths."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,185 @@
+"""Program-level pricing: `Program.cost` is the one cost model.
+
+1. Pricing parity: the program walk reproduces the retired schedule-walk
+   `predict_time` (tests/golden_pricing.py) EXACTLY on every registry
+   algorithm x segment count x codec — the pricing refactor moved the
+   model onto the compiled artifact, not the numbers.
+2. The optimization passes (STREAM fusion, stacked receives) realize the
+   overlap the model already priced: they must not change the price.
+3. Per-fabric floors: segment counts that would cut an exchange's wire
+   payload below the Rx floor are clamped in the walk (the schedule walk
+   priced them as if the Rx buffers were infinite).
+4. The selector's hot path prices the compiled program (Choice.program)
+   and `Schedule` has no pricing method left to walk.
+"""
+import inspect
+import math
+
+import pytest
+
+import golden_pricing as GP
+from repro.core import Communicator, Selector
+from repro.core import algorithms as A
+from repro.core import simulator as sim
+from repro.core.schedule import Schedule
+from repro.core.hw_spec import ACCL_CLUSTER
+from repro.core.program import compile_schedule
+
+COMM8 = Communicator(axis="x", size=8)
+COMM6 = Communicator(axis="x", size=6)
+
+ALL_ALGOS = sorted({(c, a) for (c, a) in A.GENERATORS})
+
+
+def _gen(coll, algo, comm):
+    gen = A.GENERATORS[(coll, algo)]
+    kw = {"root": 1} if "root" in inspect.signature(gen).parameters else {}
+    return gen(comm, **kw)
+
+
+def _wire_scale(codec, elem_bytes=4):
+    if codec is None:
+        return 1.0
+    from repro.core import plugins
+    return plugins.get_codec(codec).wire_bytes_per_elem / elem_bytes
+
+
+# -- 1. pricing parity with the retired schedule walk -------------------------
+
+@pytest.mark.parametrize("coll,algo", ALL_ALGOS,
+                         ids=[f"{c}-{a}" for c, a in ALL_ALGOS])
+@pytest.mark.parametrize("codec", [None, "int8"])
+def test_cost_matches_golden_predict_time(coll, algo, codec):
+    """Every algorithm, every admissible segment count, both codecs:
+    program walk == schedule walk, exactly. Message sizes keep every
+    per-segment wire payload above the ICI floor so the (new) floor
+    clamp never fires — the regime the old model priced."""
+    sched = _gen(coll, algo, COMM8)
+    for msg in (4 << 20, 64 << 20):
+        for k in (1, 2, 4, 8):
+            want = GP.predict_time(sched, msg, COMM8.hop_latency,
+                                   COMM8.link_bw, segments=k,
+                                   wire_scale=_wire_scale(codec))
+            got = compile_schedule(sched, segments=k, codec=codec).cost(
+                msg, COMM8)
+            assert math.isclose(want, got, rel_tol=1e-12), (msg, k)
+
+
+@pytest.mark.parametrize("coll,algo",
+                         [("allreduce", "ring"), ("allreduce", "bidi_ring"),
+                          ("reduce", "ring")])
+def test_cost_parity_nonpow2_and_other_fabric(coll, algo):
+    """Parity holds off the 8-rank/TPU happy path too."""
+    accl = Communicator(axis="x", size=6, hw=ACCL_CLUSTER)
+    sched = _gen(coll, algo, accl)
+    for k in (1, 4):
+        want = GP.predict_time(sched, 16 << 20, accl.hop_latency,
+                               accl.link_bw, segments=k)
+        got = compile_schedule(sched, segments=k).cost(16 << 20, accl)
+        assert math.isclose(want, got, rel_tol=1e-12)
+
+
+# -- 2. the passes do not move the price --------------------------------------
+
+@pytest.mark.parametrize("coll,algo",
+                         [("allreduce", "ring"), ("allreduce", "bidi_ring"),
+                          ("reduce", "ring"), ("allgather", "ring")])
+def test_stream_fusion_is_price_neutral(coll, algo):
+    """STREAM realizes the cross-step overlap the fill/drain model was
+    already pricing — fused and unfused programs cost the same."""
+    sched = _gen(coll, algo, COMM8)
+    for k in (2, 8):
+        fused = compile_schedule(sched, segments=k)
+        plain = compile_schedule(sched, segments=k, stream=False)
+        assert fused.ops != plain.ops  # the pass actually fired
+        assert fused.cost(8 << 20, COMM8) == plain.cost(8 << 20, COMM8)
+
+
+def test_stacked_recv_is_price_neutral():
+    sched = A.linear_alltoall(COMM8)
+    stacked = compile_schedule(sched)
+    plain = compile_schedule(sched, stacked=False)
+    assert stacked.ops != plain.ops
+    assert stacked.cost(8 << 20, COMM8) == plain.cost(8 << 20, COMM8)
+
+
+# -- 3. per-fabric segment floors in the walk ---------------------------------
+
+def test_cost_clamps_sub_floor_segments():
+    """A pinned segment count that cuts the wire below the fabric floor
+    prices at the clamped count — the Rx buffers cannot hold thinner
+    segments, so the walk must not credit them. On DCN (256 KiB floor) a
+    1 MiB ring step (128 KiB chunks) admits no segmentation at all."""
+    dcn = Communicator(axis="pod", size=8, is_dcn=True)
+    sched = A.ring_allreduce(dcn)
+    msg = 1 << 20
+    k8 = compile_schedule(sched, segments=8).cost(msg, dcn)
+    k1 = compile_schedule(sched, segments=1).cost(msg, dcn)
+    assert k8 == k1  # clamped all the way back to unsegmented
+    # same program on ICI (8 KiB floor): k=8 keeps its fill/drain credit
+    ici = Communicator(axis="x", size=8)
+    assert compile_schedule(sched, segments=8).cost(msg, ici) < \
+        compile_schedule(sched, segments=1).cost(msg, ici)
+
+
+def test_cost_floor_partial_clamp_monotone():
+    """Between the extremes the clamp is partial: the price of an
+    over-segmented program sits between the admissible optimum and the
+    unsegmented baseline."""
+    dcn = Communicator(axis="pod", size=8, is_dcn=True)
+    sched = A.ring_allreduce(dcn)
+    msg = 16 << 20  # 2 MiB steps: floor admits k <= 8
+    c4 = compile_schedule(sched, segments=4).cost(msg, dcn)
+    c32 = compile_schedule(sched, segments=32).cost(msg, dcn)
+    c8 = compile_schedule(sched, segments=8).cost(msg, dcn)
+    c1 = compile_schedule(sched, segments=1).cost(msg, dcn)
+    assert c8 == c32  # 32 clamps to the floor count, 8
+    assert c4 < c1 and c8 < c1
+
+
+# -- 4. the selector prices the compiled artifact -----------------------------
+
+def test_schedule_has_no_pricing_walk():
+    """The schedule-walk pricer is retired (mirrors the CI grep guard):
+    cost lives on the Program alone."""
+    assert not hasattr(Schedule, "predict_time")
+
+
+def test_choice_carries_the_priced_program():
+    """choose() attaches the exact compiled program it priced, and the
+    price decomposes as program cost + protocol overhead."""
+    sel = Selector()
+    for coll, msg in (("allreduce", 4 << 20), ("reduce", 8 << 10)):
+        c = sel.choose(coll, msg, COMM8)
+        assert c.program is not None
+        assert c.program.segments == c.segments
+        ov = sel._protocol_overhead(c.protocol, msg, COMM8)
+        assert math.isclose(c.predicted_s,
+                            c.program.cost(msg, COMM8) + ov, rel_tol=1e-12)
+
+
+def test_priced_program_is_the_executed_program():
+    """The engine's memoized compile of the chosen schedule returns THE
+    program object the selector priced — one artifact for cost and
+    execution, compiled once."""
+    sel = Selector()
+    c = sel.choose("allreduce", 4 << 20, COMM8)
+    executed = c.schedule.compile(codec=c.codec)
+    assert executed is c.program
+
+
+def test_simulator_returns_the_cost_it_executes():
+    """simulate_with_cost prices the same compiled program it ran."""
+    import numpy as np
+    sched = A.ring_allreduce(COMM8)
+    xs = [np.full((16,), float(r), np.float32) for r in range(8)]
+    bufs, t = sim.simulate_with_cost(sched, xs, COMM8, segments=4)
+    for b in bufs:
+        np.testing.assert_allclose(b, np.full((16,), 28.0), atol=1e-5)
+    assert t == compile_schedule(sched, segments=4).cost(
+        xs[0].nbytes, COMM8)
+
+
+def test_compile_rejects_zero_segments():
+    with pytest.raises(ValueError):
+        compile_schedule(A.ring_reduce_scatter(COMM8), segments=0)

@@ -1,14 +1,12 @@
 """Fault tolerance: failure recovery exactness, elastic reshard,
 checkpoint manager semantics, straggler watchdog."""
 import os
-import shutil
 
 import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ParallelConfig
-from repro.core.topology import make_mesh
 from repro.data import DataConfig, make_loader
 from repro.optim import adamw
 from repro.runtime import FailureInjector, StragglerWatchdog, Trainer, TrainerConfig

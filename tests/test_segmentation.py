@@ -294,42 +294,47 @@ def test_fit_segments_divisor_clamp():
 
 @pytest.mark.parametrize("nbytes", [1 << 20, 16 << 20, 256 << 20])
 def test_pipelining_dominates_unsegmented_at_1mib(nbytes):
-    """Acceptance: for >= 1 MiB some k > 1 strictly beats k = 1."""
+    """Acceptance: for >= 1 MiB some k > 1 strictly beats k = 1 (priced
+    on the compiled, stream-fused programs — `Program.cost`)."""
     comm = Communicator(axis="x", size=8)
     for gen in (A.ring_allreduce, A.ring_reduce_scatter, A.ring_allgather):
         sched = gen(comm)
-        t1 = sched.predict_time(nbytes, comm.hop_latency, comm.link_bw,
-                                segments=1)
-        best = min(sched.predict_time(nbytes, comm.hop_latency,
-                                      comm.link_bw, segments=k)
+        t1 = sched.compile(segments=1).cost(nbytes, comm)
+        best = min(sched.compile(segments=k).cost(nbytes, comm)
                    for k in (2, 4, 8, 16, 32))
         assert best < t1, (gen.__name__, nbytes)
 
 
-def test_predict_time_segment_model_shape():
-    """(S + k - 1) * t_seg for a homogeneous ring; k=1 reduces to legacy."""
+def test_program_cost_segment_model_shape():
+    """(S + k - 1) * t_seg for a homogeneous ring stream; k=1 reduces to
+    the legacy per-step sum. The model moved onto the compiled program
+    (`Program.cost`) but its shape is unchanged — the golden parity test
+    in test_program_cost.py pins the full surface."""
     comm = Communicator(axis="x", size=8)
     sched = A.ring_reduce_scatter(comm)
     S = sched.n_steps()
     B, alpha, bw = 8 << 20, comm.hop_latency, comm.link_bw
     legacy = sum(alpha + B * s.bytes_frac / bw for s in sched.steps)
-    assert sched.predict_time(B, alpha, bw, segments=1) == pytest.approx(legacy)
+    assert sched.compile(segments=1).cost(B, comm) == pytest.approx(legacy)
     k = 4
     t_seg = alpha + (B / 8) / (k * bw)
-    assert sched.predict_time(B, alpha, bw, segments=k) == pytest.approx(
+    assert sched.compile(segments=k).cost(B, comm) == pytest.approx(
         (S + k - 1) * t_seg)
     with pytest.raises(ValueError):
-        sched.predict_time(B, alpha, bw, segments=0)
+        sched.compile(segments=0)
 
 
-def test_copy_only_collectives_never_auto_segment():
-    """allgather/bcast lowerings have no combine work to overlap, so the
-    selector must not auto-segment them (tuning can still pin a count)."""
+def test_unstreamable_copy_collectives_never_auto_segment():
+    """bcast trees and all-to-all unroll — no cross-step stream, so
+    segmentation would only add per-segment alpha and the selector must
+    not pick it. Ring allgather STREAMS now and may auto-segment (see
+    test_stream_fusion); tuning can still pin any count."""
     sel = Selector()
     comm = Communicator(axis="x", size=8)
-    for coll in ("allgather", "bcast", "alltoall"):
+    for coll in ("bcast", "alltoall"):
         c = sel.choose(coll, 64 << 20, comm)
         assert c.segments == 1, (coll, c)
+    assert sel.choose("allgather", 64 << 20, comm).segments > 1
     sel.set_tuning("allgather", "ring", segments=4)
     assert sel.choose("allgather", 64 << 20, comm).segments == 4
 

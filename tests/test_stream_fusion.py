@@ -1,0 +1,237 @@
+"""Cross-step segment streaming + the stacked-receive peephole.
+
+The STREAM micro-op closes the model/execution gap: `SEG_LOOP` pipelines
+within a step (the scan carry is a per-step barrier) while the cost model
+prices hop-to-hop overlap; `fuse_streams` rewrites eligible uniform runs
+into ONE skewed scan that sends step s+1's segment 0 before step s's tail
+combine. Contract: streamed programs are BITWISE-equal to their unfused
+form, across {fp32, int8} x {ring, bidi-ring, relay}, and the selector's
+auto picks carry the streamed program wherever the model predicts a win.
+
+STACKED_RECV is the ROADMAP peephole: relay='original' copy schedules
+(explicit algorithm='linear' all-to-all) collapse n-1 full-buffer
+update-slices into one chunk scatter — also bitwise-equal.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import CollectiveEngine, Communicator, Selector
+from repro.core import algorithms as A
+from repro.core import simulator as sim
+from repro.core.engine import execute_program
+from repro.core.program import (
+    Loop, SegLoop, StackedRecv, Stream, compile_schedule,
+)
+from repro.core.topology import make_mesh
+
+COMM8 = Communicator(axis="x", size=8)
+
+
+@pytest.fixture(scope="module")
+def env():
+    mesh = make_mesh((8,), ("x",))
+    return CollectiveEngine(mesh, backend="microcode"), mesh
+
+
+def _run_prog(mesh, prog, X):
+    g = jax.jit(jax.shard_map(
+        lambda v: execute_program(prog, v[0], "x")[None],
+        mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
+    return np.asarray(g(jnp.asarray(X)))
+
+
+# scale-block-aligned payload: 2048/8 ranks = 256-elem chunks, whole int8
+# scale blocks at every segment count the tests use
+X = np.random.default_rng(3).normal(size=(8, 2048)).astype(np.float32)
+# larger buffer for the bitwise parity cells: every chunk (bidi: 1/16 of
+# the buffer) splits into whole 256-elem int8 scale blocks at k <= 8, so
+# the streams really stream rather than clamping back to k=1
+XL = np.random.default_rng(4).normal(size=(8, 16384)).astype(np.float32)
+
+
+# -- compilation structure ----------------------------------------------------
+
+def test_uniform_segmented_runs_compile_to_streams():
+    """Rings at k>1 stream; at k=1 they stay rolled LOOPs; trees and
+    masked schedules keep their unrolled SEG_LOOP form."""
+    prog = compile_schedule(A.ring_allreduce(COMM8), segments=8)
+    assert [type(op) for op in prog.ops] == [Stream, Stream]  # RS + AG
+    assert all(op.trip == 7 and op.segments == 8 for op in prog.ops)
+
+    prog = compile_schedule(A.bidi_ring_allreduce(COMM8), segments=4)
+    assert [type(op) for op in prog.ops] == [Stream, Stream]
+    assert all(op.period == 2 for op in prog.ops)
+
+    prog = compile_schedule(A.ring_reduce(COMM8), segments=4)
+    assert [type(op) for op in prog.ops] == [Stream]  # relay='received'
+
+    assert not any(
+        isinstance(op, Stream)
+        for op in compile_schedule(A.ring_allreduce(COMM8)).ops)
+    assert not any(
+        isinstance(op, Stream)
+        for op in compile_schedule(A.binomial_tree_reduce(COMM8),
+                                   segments=4).ops)
+    assert not any(
+        isinstance(op, Stream)
+        for op in compile_schedule(A.bruck_alltoall(COMM8),
+                                   segments=4).ops)
+
+
+def test_stream_pass_can_be_disabled():
+    prog = compile_schedule(A.ring_allreduce(COMM8), segments=8,
+                            stream=False)
+    assert [type(op) for op in prog.ops] == [Loop, Loop]
+    assert all(isinstance(slot[0], SegLoop)
+               for op in prog.ops for slot in op.slots)
+
+
+# -- bitwise parity: streamed == unfused --------------------------------------
+
+_PARITY_CELLS = [
+    ("ring", A.ring_allreduce, 4), ("ring", A.ring_allreduce, 8),
+    ("bidi_ring", A.bidi_ring_allreduce, 4),
+    ("relay", A.ring_reduce, 4),
+]
+
+
+@pytest.mark.parametrize("name,gen,k", _PARITY_CELLS,
+                         ids=[f"{n}-k{k}" for n, _g, k in _PARITY_CELLS])
+@pytest.mark.parametrize("codec", [None, "int8"])
+def test_streamed_bitwise_equals_unfused(env, name, gen, k, codec):
+    """{fp32, int8} x {ring, bidi-ring, relay}: the fused pipeline must
+    reproduce the per-step order exactly — streaming reorders the wire,
+    never the numbers."""
+    _eng, mesh = env
+    sched = gen(COMM8)
+    fused = compile_schedule(sched, segments=k, codec=codec)
+    plain = compile_schedule(sched, segments=k, codec=codec, stream=False)
+    assert any(isinstance(op, Stream) for op in fused.ops)
+    assert not any(isinstance(op, Stream) for op in plain.ops)
+    np.testing.assert_array_equal(_run_prog(mesh, fused, XL),
+                                  _run_prog(mesh, plain, XL))
+
+
+def test_streamed_copy_ring_bitwise(env):
+    """The copy family streams too (ring allgather): bitwise vs unfused,
+    and correct against the gathered oracle."""
+    _eng, mesh = env
+    sched = A.ring_allgather(COMM8)
+    fused = compile_schedule(sched, segments=8)
+    plain = compile_schedule(sched, segments=8, stream=False)
+    assert any(isinstance(op, Stream) for op in fused.ops)
+    buf = np.zeros((8, 8 * 256), np.float32)
+    for r in range(8):
+        buf[r, r * 256:(r + 1) * 256] = X[r, :256]
+    a, b = _run_prog(mesh, fused, buf), _run_prog(mesh, plain, buf)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(
+        a[0], np.concatenate([X[r, :256] for r in range(8)]))
+
+
+def test_simulator_executes_streamed_programs(env):
+    """The numpy executor runs the SAME streamed program the engine runs
+    and agrees with it exactly (fp32 sums are order-identical)."""
+    _eng, mesh = env
+    prog = compile_schedule(A.ring_allreduce(COMM8), segments=4)
+    got = sim.execute_program(prog, [x.copy() for x in X])
+    eng_out = _run_prog(mesh, prog, X)
+    for r in range(8):
+        np.testing.assert_array_equal(got[r], eng_out[r])
+
+
+def test_stream_degenerates_safely_on_indivisible_payload(env):
+    """A requested segment count the payload cannot honour clamps at
+    trace time (fit_segments) — down to plain rolled execution when
+    nothing divides."""
+    _eng, mesh = env
+    sched = A.ring_allreduce(COMM8)
+    prog = compile_schedule(sched, segments=8)
+    # chunk size 7 elements: no segment count > 1 divides it
+    Y = np.random.default_rng(5).normal(size=(8, 8 * 7)).astype(np.float32)
+    a = _run_prog(mesh, prog, Y)
+    b = _run_prog(mesh, compile_schedule(sched, segments=1), Y)
+    np.testing.assert_array_equal(a, b)
+    for r in range(8):
+        np.testing.assert_allclose(a[r], Y.sum(0), atol=1e-4)
+
+
+# -- the selector picks the streamed program ----------------------------------
+
+def test_selector_auto_pick_streams_at_1mib():
+    """Acceptance: wherever the cost model predicts a segmented win at
+    >= 1 MiB, the chosen program actually cross-step streams."""
+    sel = Selector()
+    for coll in ("allreduce", "reduce_scatter"):
+        c = sel.choose(coll, 4 << 20, COMM8)
+        assert c.segments > 1
+        assert any(isinstance(op, Stream) for op in c.program.ops), coll
+
+
+def test_copy_collectives_auto_segment_only_when_streamed():
+    """Streaming unlocked copy-only segmentation where it is real: ring
+    allgather (a uniform run) now auto-segments, while bcast trees and
+    all-to-all (unrolled — nothing streams) still pick k=1."""
+    sel = Selector()
+    ag = sel.choose("allgather", 64 << 20, COMM8)
+    assert ag.segments > 1
+    assert any(isinstance(op, Stream) for op in ag.program.ops)
+    for coll in ("bcast", "alltoall"):
+        c = sel.choose(coll, 64 << 20, COMM8)
+        assert c.segments == 1, (coll, c.algorithm)
+        assert not any(isinstance(op, Stream) for op in c.program.ops)
+
+
+def test_engine_auto_allreduce_executes_streamed(env):
+    """End to end through the engine API: a large auto allreduce lowers
+    through the streamed program and still matches the oracle."""
+    eng, mesh = env
+    big = np.random.default_rng(9).normal(
+        size=(8, 1 << 18)).astype(np.float32)  # 1 MiB message per rank
+    choice = eng.selector.choose("allreduce", big[0].nbytes,
+                                 eng.comm("x"))
+    assert choice.segments > 1
+    assert any(isinstance(op, Stream) for op in choice.program.ops)
+    g = jax.jit(jax.shard_map(
+        lambda v: eng.allreduce(v[0], "x", algorithm="auto")[None],
+        mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
+    out = np.asarray(g(jnp.asarray(big)))
+    np.testing.assert_allclose(out[0], big.sum(0), atol=1e-3)
+
+
+# -- stacked-receive peephole -------------------------------------------------
+
+def test_linear_alltoall_compiles_to_one_stacked_recv():
+    prog = compile_schedule(A.linear_alltoall(COMM8))
+    assert [type(op) for op in prog.ops] == [StackedRecv]
+    assert len(prog.ops[0].bodies) == 7  # n-1 stacked exchanges
+    # the peephole leaves segmented compilations alone
+    seg = compile_schedule(A.linear_alltoall(COMM8), segments=4)
+    assert not any(isinstance(op, StackedRecv) for op in seg.ops)
+
+
+def test_stacked_recv_bitwise_equals_unrolled(env):
+    _eng, mesh = env
+    sched = A.linear_alltoall(COMM8)
+    stacked = compile_schedule(sched)
+    plain = compile_schedule(sched, stacked=False)
+    np.testing.assert_array_equal(_run_prog(mesh, stacked, X),
+                                  _run_prog(mesh, plain, X))
+
+
+def test_stacked_recv_simulator_matches_oracle():
+    prog = compile_schedule(A.linear_alltoall(COMM8))
+    got = sim.execute_program(prog, [x.copy() for x in X])
+    refs = sim.oracle("alltoall", list(X))
+    for r in range(8):
+        np.testing.assert_array_equal(got[r], refs[r])
+
+
+def test_stacked_recv_not_applied_to_masked_runs():
+    """all_to_one gather masks receivers (single pair per step): the
+    peephole must leave it alone — non-destinations keep their data."""
+    prog = compile_schedule(A.all_to_one_gather(COMM8))
+    assert not any(isinstance(op, StackedRecv) for op in prog.ops)

@@ -4,7 +4,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.configs import get_config, reduced_config
