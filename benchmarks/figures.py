@@ -160,17 +160,21 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
     latency knob (arXiv 2403.18374 shows it dominating collective latency
     at scale). Sweeps the selector's auto pick for the big three
     collectives plus SEG_SWEEP_NAMED — the tree/masked/recursive
-    schedules the micro-op executor made segmentable. Since PR 3 every
-    point is priced by `Program.cost` on the COMPILED program (the same
-    artifact the engine executes, stream-fusion included; `streamed`
-    marks programs that cross-step pipeline). Emits one printed row per
-    (schedule, size) with the best segment count, and one structured
-    record per (schedule, size, segments) into BENCH_collectives.json —
-    the curve `scripts/check_bench.py` gates CI against. Pipelining must
-    strictly dominate the 1-segment baseline for every message >= 1 MiB.
+    schedules the micro-op executor made segmentable. Every point is
+    priced by `Program.cost` on the COMPILED program (the same artifact
+    the engine executes, stream/chain fusion included; `streamed` marks
+    programs that cross-step pipeline). Under the split pricing model,
+    segmentation pays ONLY where the program streams: streamed curves
+    must strictly dominate their 1-segment baseline for messages
+    >= 1 MiB, while SEG_LOOP-only curves are serialized and their best
+    count is k=1 — both facts are gated by tests/test_benchmarks.py.
+    Emits one printed row per (schedule, size) with the best segment
+    count, and one structured record per (schedule, size, segments) into
+    BENCH_collectives.json — the curve `scripts/check_bench.py` gates CI
+    against.
     """
     from repro.core.engine import _gen_schedule
-    from repro.core.program import Stream
+    from repro.core.program import Stream, StreamChain
     from repro.core.selector import ALGO_PROTOCOLS
 
     if segment_counts is None:
@@ -229,7 +233,7 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
                     "predicted_s": t,
                     "selected": k == chosen_k,
                     "auto_segmentable": auto_ok,
-                    "streamed": any(isinstance(op, Stream)
+                    "streamed": any(isinstance(op, (Stream, StreamChain))
                                     for op in prog.ops),
                 })
             best_k = min(times, key=times.get)

@@ -3,11 +3,22 @@
 
 Compares the `segment_sweep` records of a fresh benchmark run (the
 deterministic `python -m benchmarks.run --quick` output) against the
-committed baseline in benchmarks/baseline.json. Every (collective,
-algorithm, nranks, msg_bytes, segments) point present in the baseline must
-still exist and its `predicted_s` must be within --tolerance (default 10%)
-of the recorded value — a larger drift means the cost model changed
-without the baseline being refreshed, i.e. a silent perf-model regression.
+committed baseline in benchmarks/baseline.json. The gate is symmetric:
+
+  * every baseline point must still exist (MISSING fails — coverage must
+    not silently shrink),
+  * every fresh point must exist in the baseline (EXTRA fails — coverage
+    must not silently grow past what was reviewed),
+  * every shared point's `predicted_s` must be within --tolerance
+    (default 10%) of the recorded value, with the relative drift computed
+    against max(|baseline|, --epsilon) so a zero/near-zero baseline point
+    cannot divide the gate away.
+
+A failure means the cost model changed without the baseline being
+refreshed — a silent perf-model regression. On failure the worst
+offenders print first; --top N truncates the list to the N largest
+absolute drifts (the CI bench job uses --top 10, so baseline-refresh PRs
+show the biggest movements at the top of the workflow log).
 
 Refreshing the baseline after an INTENTIONAL model change:
 
@@ -51,6 +62,13 @@ def main(argv=None) -> int:
                          "benchmarks/baseline.json)")
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="max relative predicted_s drift (default 0.10)")
+    ap.add_argument("--epsilon", type=float, default=1e-12,
+                    help="absolute floor (seconds) for the drift "
+                         "denominator, so zero/near-zero baseline points "
+                         "still gate (default 1e-12)")
+    ap.add_argument("--top", type=int, default=None, metavar="N",
+                    help="on failure, print only the N worst-drifting "
+                         "sweep points (default: all)")
     ap.add_argument("--write-baseline", metavar="PATH", default=None,
                     help="write the results' sweep as a new baseline "
                          "instead of checking")
@@ -69,25 +87,34 @@ def main(argv=None) -> int:
 
     base = _sweep(args.baseline)
     missing = sorted(set(base) - set(new))
+    extra = sorted(set(new) - set(base))
     fails = []
     for key, b in sorted(base.items()):
         n = new.get(key)
         if n is None:
             continue
-        drift = (n - b) / b
+        drift = (n - b) / max(abs(b), args.epsilon)
         if abs(drift) > args.tolerance:
             fails.append((key, b, n, drift))
+    fails.sort(key=lambda f: abs(f[3]), reverse=True)
 
     print(f"check_bench: {len(base)} baseline points, "
           f"{len(new)} fresh points, tolerance {args.tolerance:.0%}")
     for key in missing:
         print(f"  MISSING  {key} — baseline point not produced by the run")
-    for key, b, n, drift in fails:
+    for key in extra:
+        print(f"  EXTRA    {key} — new sweep point absent from the "
+              f"baseline")
+    shown = fails if args.top is None else fails[:max(args.top, 0)]
+    for key, b, n, drift in shown:
         print(f"  DRIFT    {key}: {b:.3e}s -> {n:.3e}s ({drift:+.1%})")
-    if missing or fails:
-        print(f"FAIL: {len(missing)} missing, {len(fails)} drifted — "
-              f"refresh benchmarks/baseline.json if the model change is "
-              f"intentional (see --write-baseline)")
+    if len(shown) < len(fails):
+        print(f"  ... and {len(fails) - len(shown)} more drifted points "
+              f"(re-run without --top for the full list)")
+    if missing or extra or fails:
+        print(f"FAIL: {len(missing)} missing, {len(extra)} extra, "
+              f"{len(fails)} drifted — refresh benchmarks/baseline.json "
+              f"if the model change is intentional (see --write-baseline)")
         return 1
     print("OK: predicted-time model matches the committed baseline")
     return 0

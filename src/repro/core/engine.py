@@ -40,8 +40,9 @@ from repro.core.compat import shard_map
 from repro.core import plugins
 from repro.core.algorithms import GENERATORS
 from repro.core.program import (
-    Copy, Compress, Decompress, Loop, Program, RecvCombine, SegLoop, Send,
-    StackedRecv, Stream, fit_segments, split_exchange,
+    SRC_BUFFER, SRC_ORIGINAL, Copy, Compress, Decompress, Loop, Program,
+    RecvCombine, SegLoop, Send, StackedRecv, Stream, StreamChain,
+    _overlaps, _regions_stream_safe, fit_segments, split_exchange,
 )
 from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
@@ -310,8 +311,8 @@ def _exec_loop(loop: Loop, buf, orig, prev, chunks: int, rank, axis: str,
     return out if track else (out, prev)
 
 
-def _exec_stream(st: Stream, buf, orig, prev, chunks: int, rank, axis: str,
-                 use_pallas: bool):
+def _exec_stream(st: Stream, buf, orig, prev, chunks: int, nranks: int,
+                 rank, axis: str, use_pallas: bool):
     """Cross-step segment streaming: ONE skewed scan over trip*k waves.
 
     Wave g holds segment (iteration g//k, segment g%k) in flight for every
@@ -347,6 +348,19 @@ def _exec_stream(st: Stream, buf, orig, prev, chunks: int, rank, axis: str,
             pay_len = pay0.shape[0]
         elif pay_len != pay0.shape[0]:
             k = 1  # slots disagree on the wave size: stream degenerates
+    if k >= 2 and k != st.segments and any(
+            SEL_RANGE in (b[0].sel.kind, b[-1].sel.kind)
+            for b in st.slots):
+        # SEL_RANGE eligibility was PROVEN at the requested segment
+        # count, and the proof is k-dependent (the head segment grows as
+        # k shrinks): a trace-time clamp must re-run it at the admitted
+        # count — the chunk/original/received rules hold at any k >= 2
+        # and need no re-proof. Range runs are period-1 by eligibility.
+        load0, recv0 = st.slots[0][0], st.slots[0][-1]
+        seq = [(load0.sel, recv0.sel, load0.source, st.base + i)
+               for i in range(st.trip)]
+        if not _regions_stream_safe(seq, k, nranks):
+            k = 1  # unproven at the clamped count: drop to rolled form
     if k < 2:
         loop = Loop(base=st.base, trip=st.trip, period=st.period,
                     slots=tuple((SegLoop(st.segments, b),)
@@ -369,8 +383,10 @@ def _exec_stream(st: Stream, buf, orig, prev, chunks: int, rank, axis: str,
         step = st.base + i * st.period + m
         if recv.sel.kind == SEL_ALL:
             off = j * seg_len
-        else:  # SEL_CHUNK (the only other eligible kind)
+        elif recv.sel.kind == SEL_CHUNK:
             off = recv.sel.fn(rank, step) * csize + j * seg_len
+        else:  # SEL_RANGE (proven by _regions_stream_safe)
+            off = recv.sel.fn(rank, step)[0] * csize + j * seg_len
         tgt = lax.dynamic_slice_in_dim(b, off, seg_len, 0)
         inc = _recv_chain(dec_ops, wire, (seg_len,) + b.shape[1:], dtype,
                           use_pallas)
@@ -400,6 +416,115 @@ def _exec_stream(st: Stream, buf, orig, prev, chunks: int, rank, axis: str,
     for m in range(nslots):  # drain: the tail segment of the last step
         buf, prev = consume_wave(m, buf, prev, infl[m], st.trip - 1, k - 1)
     return buf, prev
+
+
+def _chain_elem_off(sel: Sel, r, step, csize: int):
+    """Element offset of a contiguous (chunk/range) selector region."""
+    if sel.kind == SEL_CHUNK:
+        return sel.fn(r, step) * csize
+    return sel.fn(r, step)[0] * csize
+
+
+def _chain_clamp_safe(plan, csize: int, nranks: int) -> bool:
+    """Re-verify the region-overlap proof at the segment counts the
+    payloads ACTUALLY admit (element units, per concrete rank).
+
+    `fuse_chains` proved the chain at the requested segment count;
+    `fit_segments` may have clamped a step's count down at trace time
+    (indivisible payload, codec scale blocks), which changes the wave
+    schedule — e.g. a clamp to k=2 re-creates the head/tail overlap the
+    compile-time proof excluded. Payloads read from the immutable
+    original buffer skip the read-side checks, as in the compiler pass.
+    """
+    try:
+        for r in range(nranks):
+            regions = []
+            for (load, _s_ops, _d_ops, recv, pay, k) in plan:
+                step = load.step
+                s_off = int(_chain_elem_off(load.sel, r, step, csize))
+                r_off = int(_chain_elem_off(recv.sel, r, step, csize))
+                if load.source == SRC_BUFFER and _overlaps(
+                        s_off, s_off + pay, r_off, r_off + pay):
+                    return False
+                regions.append((load.source, s_off, pay, k, r_off))
+            for i in range(1, len(regions)):
+                source, s_off, pay, k, _r_off = regions[i]
+                if source != SRC_BUFFER:
+                    continue
+                _src0, _so0, pay0, k0, r_off0 = regions[i - 1]
+                if _overlaps(s_off, s_off + pay // k,
+                             r_off0 + pay0 - pay0 // k0, r_off0 + pay0):
+                    return False
+    except Exception:
+        return False
+    return True
+
+
+def _exec_chain(ch: StreamChain, buf, orig, prev, chunks: int, nranks: int,
+                rank, axis: str, use_pallas: bool):
+    """Cross-step segment streaming over distinct unrolled steps: the
+    wave sequence [(step, segment)] executed with a skew of one — wave
+    w+1's payload goes on the wire (read from the pre-combine buffer)
+    before wave w's arrival runs through the combine plugin, so step
+    s+1's head segment crosses the Tx/Rx system during step s's tail
+    combine. Unrolled (log-step runs are short); each step keeps its own
+    admitted segment count, and if trace-time clamping invalidates the
+    compile-time region proof the chain falls back to per-step SEG_LOOP
+    execution — bitwise-equal either way.
+    """
+    csize = buf.shape[0] // chunks
+    row_elems = 1
+    for d in buf.shape[1:]:
+        row_elems *= int(d)
+    plan = []
+    for body in ch.bodies:
+        load, recv = body[0], body[-1]
+        send_ops, dec_ops = _split_wire(body[1:-1])
+        ln = 1 if load.sel.kind == SEL_CHUNK \
+            else int(load.sel.fn(0, load.step)[1])
+        pay = ln * csize
+        k = fit_segments(pay, ch.segments, row_elems,
+                         _codec_block(send_ops))
+        plan.append((load, send_ops, dec_ops, recv, pay, k))
+
+    if not _chain_clamp_safe(plan, csize, nranks):
+        for body in ch.bodies:  # per-step fallback: plain SEG_LOOP order
+            off, mask_idxs, new_val, _raw = _exchange_update(
+                body, ch.segments, buf, orig, prev, chunks, rank,
+                body[0].step, axis, use_pallas)
+            buf = _apply_write(buf, chunks, off, mask_idxs, new_val)
+        return buf
+
+    dtype = buf.dtype
+    waves = [(s, j) for s in range(len(plan))
+             for j in range(plan[s][5])]
+
+    def send_wave(b, s, j):
+        load, send_ops, _dec, _recv, pay, k = plan[s]
+        src = orig if load.source == SRC_ORIGINAL else b
+        off = _chain_elem_off(load.sel, rank, load.step, csize)
+        seg = lax.dynamic_slice_in_dim(src, off + j * (pay // k),
+                                       pay // k, 0)
+        return _send_chain(send_ops, seg, axis, use_pallas)
+
+    def consume_wave(b, wire, s, j):
+        _load, _send, dec_ops, recv, pay, k = plan[s]
+        seg = pay // k
+        off = _chain_elem_off(recv.sel, rank, recv.step, csize) + j * seg
+        tgt = lax.dynamic_slice_in_dim(b, off, seg, 0)
+        inc = _recv_chain(dec_ops, wire, (seg,) + b.shape[1:], dtype,
+                          use_pallas)
+        out = plugins.combine(recv.op, tgt, inc.astype(dtype),
+                              use_pallas=use_pallas)
+        return lax.dynamic_update_slice_in_dim(b, out, off, 0)
+
+    inflight = send_wave(buf, *waves[0])
+    for w, (s, j) in enumerate(waves):
+        # launch wave w+1 from the pre-consume buffer, THEN combine w
+        nxt = send_wave(buf, *waves[w + 1]) if w + 1 < len(waves) else None
+        buf = consume_wave(buf, inflight, s, j)
+        inflight = nxt
+    return buf
 
 
 def _exec_stacked(op: StackedRecv, buf, orig, chunks: int, rank, axis: str):
@@ -449,7 +574,11 @@ def execute_program(prog: Program, buf, axis: str, *,
             i += 1
         elif isinstance(op, Stream):
             buf, prev = _exec_stream(op, buf, orig, prev, prog.chunks,
-                                     rank, axis, use_pallas)
+                                     prog.nranks, rank, axis, use_pallas)
+            i += 1
+        elif isinstance(op, StreamChain):
+            buf = _exec_chain(op, buf, orig, prev, prog.chunks,
+                              prog.nranks, rank, axis, use_pallas)
             i += 1
         elif isinstance(op, StackedRecv):
             buf = _exec_stacked(op, buf, orig, prog.chunks, rank, axis)

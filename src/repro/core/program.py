@@ -35,6 +35,14 @@ The primitive set:
                 rides the wire before step s's tail segment combines. The
                 `fuse_streams` pass rewrites eligible LOOPs of SEG_LOOP
                 slots into this; it is bitwise-equal to the unfused form.
+  STREAM_CHAIN  the same hop-to-hop pipeline over a run of DISTINCT
+                unrolled segmented steps (recursive halving/doubling,
+                linear all-to-all): the `fuse_chains` pass proves, per
+                rank and per step boundary, that the out-of-order head
+                segment never reads a region the previous step's missing
+                tail write would have changed (the SEL_RANGE region-
+                overlap proof), then chains the steps into one wave
+                pipeline — also bitwise-equal to the unfused form.
   STACKED_RECV  the stacked-receive peephole: a run of relay='original'
                 copy exchanges (explicit linear all-to-all) whose arrivals
                 are written back with ONE chunk scatter instead of n-1
@@ -44,10 +52,22 @@ Both executors run the same Program object, so oracle parity in the numpy
 simulator covers the real code path, not a parallel reimplementation.
 
 The Program is also the unit of COST: `Program.cost(msg_bytes, comm)`
-walks the compiled ops (LOOP trip counts, SEG_LOOP/STREAM fill/drain,
-per-op codec wire bytes, per-fabric alpha and Rx segment floors) — so the
-selector prices the exact artifact the engine executes, and the simulator
-returns the same cost it runs. The schedule-walk `predict_time` is retired.
+walks the compiled ops (LOOP trip counts, per-op codec wire bytes,
+per-fabric alpha and Rx segment floors) under a SPLIT pipelining model:
+
+  * exchanges inside a STREAM / STREAM_CHAIN region earn the cross-step
+    fill/drain credit — per region, sum_i t_i + (k - 1) * max_i t_i with
+    t_i = alpha + wire_i / (k * bw) — because the executor really does
+    send step s+1's head segment before step s's tail combine there;
+  * every other exchange (SEG_LOOP, rolled-but-unstreamed LOOP slots,
+    unrolled steps) pipelines only WITHIN its step — the SEG_LOOP scan
+    carry is a per-step barrier — so it is priced serialized:
+    k * t_seg = k * alpha + wire / bw per step, never cheaper than
+    unsegmented.
+
+The selector therefore stops auto-picking segmentation where execution
+cannot cash the overlap; the credit is earned exactly where a fusion pass
+proved the reorder safe. The schedule-walk `predict_time` is retired.
 
 Per-segment scale reuse (codecs): block codecs (int8) quantize in fixed
 element blocks. `fit_segments` only admits segment counts whose per-
@@ -172,6 +192,36 @@ class Stream:
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamChain:
+    """Cross-step segment streaming over a run of DISTINCT unrolled steps.
+
+    Where STREAM fuses a *uniform* run (one slot body, a traced step
+    index), STREAM_CHAIN fuses a run of unrolled segmented exchanges that
+    differ per step — recursive halving/doubling's shrinking/growing
+    SEL_RANGE windows, linear all-to-all's per-step ring shifts. Each
+    body is the PLAIN (unsegmented) exchange tuple with its static step
+    index; the segment count lives on the chain. Execution order is the
+    wave sequence [(step, segment)] in step-major order with a skew of
+    one: wave w+1's payload goes on the wire before wave w's combine, so
+    step s+1's segment 0 crosses the Tx/Rx system while step s's tail
+    segment is still in the combine plugin.
+
+    `fuse_chains` only emits a chain when the compile-time region-overlap
+    proof holds for EVERY rank: each step's payload region is disjoint
+    from its own combine region, and the head segment of step s+1's
+    payload is disjoint from the tail segment of step s's combine region
+    (the only write the skew leaves unapplied). The executor re-verifies
+    the proof at trace time against the segment counts the payload
+    actually admits and falls back to per-step execution when clamping
+    invalidated it — streamed chains are bitwise-equal to their unfused
+    form.
+    """
+
+    segments: int
+    bodies: tuple                  # tuple[tuple[micro-op, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
 class StackedRecv:
     """A run of relay='original' copy exchanges with one stacked write.
 
@@ -219,6 +269,9 @@ class Program:
                     for slot in op.slots)
                 out.append(f"STREAM x{op.trip} k={op.segments} "
                            f"period={op.period} [{inner}]")
+            elif isinstance(op, StreamChain):
+                out.append(f"STREAM_CHAIN k={op.segments} "
+                           f"m={len(op.bodies)}")
             elif isinstance(op, StackedRecv):
                 out.append(f"STACKED_RECV m={len(op.bodies)}")
             elif isinstance(op, SegLoop):
@@ -230,12 +283,16 @@ class Program:
 
     # ---- program-level pricing (the alpha-beta walk) ---------------------
     def exchange_terms(self):
-        """Yield (multiplicity, segments, body) per wire exchange.
+        """Yield (multiplicity, segments, body, region) per wire exchange.
 
         The one IR-shape walk `cost` prices: LOOP/STREAM slots repeat
         `trip` times, SEG_LOOP carries its segment count, stacked and
-        unrolled exchanges run once. Bruck pre/post rotations are local
-        DMA and free, matching the retired schedule-walk model.
+        unrolled exchanges run once. `region` identifies the cross-step
+        pipelining region the exchange belongs to — the index of its
+        STREAM / STREAM_CHAIN op, or None for exchanges whose pipeline
+        has a per-step barrier (SEG_LOOP, unstreamed LOOP slots, unrolled
+        and stacked exchanges). Bruck pre/post rotations are local DMA
+        and free, matching the retired schedule-walk model.
         """
         ops = self.ops
         i = 0
@@ -244,18 +301,22 @@ class Program:
             if isinstance(op, Loop):
                 for slot in op.slots:
                     body, k = split_exchange(slot)
-                    yield op.trip, k, body
+                    yield op.trip, k, body, None
                 i += 1
             elif isinstance(op, Stream):
                 for body in op.slots:
-                    yield op.trip, op.segments, body
+                    yield op.trip, op.segments, body, i
+                i += 1
+            elif isinstance(op, StreamChain):
+                for body in op.bodies:
+                    yield 1, op.segments, body, i
                 i += 1
             elif isinstance(op, StackedRecv):
                 for body in op.bodies:
-                    yield 1, 1, body
+                    yield 1, 1, body, None
                 i += 1
             elif isinstance(op, SegLoop):
-                yield 1, op.segments, op.body
+                yield 1, op.segments, op.body, None
                 i += 1
             elif isinstance(op, Copy) and op.kind != "load":
                 i += 1
@@ -263,35 +324,48 @@ class Program:
                 j = i
                 while not isinstance(ops[j], RecvCombine):
                     j += 1
-                yield 1, 1, tuple(ops[i:j + 1])
+                yield 1, 1, tuple(ops[i:j + 1]), None
                 i = j + 1
 
     def cost(self, msg_bytes: float, comm, elem_bytes: int = 4) -> float:
         """Predicted seconds for THIS compiled program on `comm`'s fabric.
 
-        The pipeline fill/drain model, priced off the ops that will
-        actually execute: each exchange contributes one per-segment time
-        t_i = alpha + wire_bytes_i / (k_i * bw) (times its LOOP/STREAM
-        trip count), and the segmented pipeline drains in
-        sum_i t_i + (k - 1) * max_i t_i, divided by `overlap_factor`
-        when slots ride independent links. Wire bytes come from each
-        SEND's `bytes_frac`, scaled by the codec ratio when the exchange
-        COMPRESSes (copy phases ship uncompressed — visible directly in
-        the ops, no schedule rule needed). `comm` supplies the per-fabric
-        alpha, bandwidth, and Rx segment floor: a segment count that
-        would cut an exchange's wire payload below the floor is clamped,
-        so sub-floor tuning pins price what the Rx buffers can hold.
+        The SPLIT pipelining model, priced off the ops that will actually
+        execute. Every exchange's per-segment time is
+        t = alpha + wire_bytes / (k_eff * bw); then
 
-        For any program the schedule-walk `predict_time` could price
-        (uniform segmentation, no sub-floor segments), this walk returns
-        the identical number — asserted by the golden pricing-parity
-        property test.
+          * exchanges inside a STREAM / STREAM_CHAIN region contribute
+            mult * t and the region drains once in (k - 1) * max t over
+            its exchanges — the cross-step fill/drain credit, earned
+            because the executor keeps the wire busy across step
+            boundaries there;
+          * every other exchange pipelines only within its own step (the
+            SEG_LOOP scan carry is a per-step barrier), so it contributes
+            the serialized mult * k_eff * t = mult * (k_eff * alpha +
+            wire / bw) — at k > 1 that is never cheaper than unsegmented,
+            so the selector cannot be lured into segmentation the data
+            plane cannot cash.
+
+        The total divides by `overlap_factor` when slots ride independent
+        links. Wire bytes come from each SEND's `bytes_frac`, scaled by
+        the codec ratio when the exchange COMPRESSes (copy phases ship
+        uncompressed — visible directly in the ops). `comm` supplies the
+        per-fabric alpha, bandwidth, and Rx segment floor: a segment
+        count that would cut an exchange's wire payload below the floor
+        is clamped, so sub-floor tuning pins price what the Rx buffers
+        can hold.
+
+        For a k=1 program, and for any k>1 program that fuses into a
+        single cross-step region, this walk returns the identical number
+        to the retired schedule-walk `predict_time` — asserted (with the
+        intentional divergences) by the golden pricing tests.
         """
         alpha = comm.hop_latency
         bw = comm.link_bw
         floor = comm.min_segment_bytes
-        total, t_max, k_pipe = 0.0, 0.0, 1
-        for mult, k, body in self.exchange_terms():
+        total = 0.0
+        drains: dict = {}          # region id -> [k_max, t_max]
+        for mult, k, body, region in self.exchange_terms():
             scale = 1.0
             send = None
             for op in body:
@@ -306,10 +380,15 @@ class Program:
             while k_eff > 1 and wire / k_eff < floor:
                 k_eff -= 1
             t = alpha + wire / (k_eff * bw)
-            total += mult * t
-            t_max = max(t_max, t)
-            k_pipe = max(k_pipe, k_eff)
-        return (total + (k_pipe - 1) * t_max) / self.overlap_factor
+            if region is not None:
+                total += mult * t
+                d = drains.setdefault(region, [1, 0.0])
+                d[0] = max(d[0], k_eff)
+                d[1] = max(d[1], t)
+            else:
+                total += mult * k_eff * t
+        total += sum((k_r - 1) * t_r for k_r, t_r in drains.values())
+        return total / self.overlap_factor
 
 
 # --------------------------------------------------------------------------
@@ -427,7 +506,77 @@ def split_exchange(node) -> tuple:
 # Optimization passes
 # --------------------------------------------------------------------------
 
-def _stream_eligible(loop: Loop, k_req: int) -> bool:
+def _sel_region(sel: Sel, r: int, step: int):
+    """Concrete (offset, length) in chunk units for a contiguous selector
+    evaluated at a concrete rank/step. Selector closures are pure
+    (rank, step) arithmetic, so they evaluate on plain ints at compile
+    time; anything fancier raises and the caller opts out."""
+    if sel.kind == SEL_CHUNK:
+        return int(sel.fn(r, step)), 1
+    if sel.kind == SEL_RANGE:
+        off, length = sel.fn(r, step)
+        return int(off), int(length)
+    raise ValueError(f"non-contiguous selector {sel.kind}")
+
+
+def _overlaps(a0, a1, b0, b1) -> bool:
+    return max(a0, b0) < min(a1, b1)
+
+
+def _regions_stream_safe(seq, k: int, nranks: int) -> bool:
+    """The SEL_RANGE/SEL_CHUNK region-overlap proof for a step sequence.
+
+    `seq` is [(send_sel, recv_sel, source, step), ...] in execution
+    order. The skewed wave order differs from the per-step order in
+    exactly one read: the HEAD segment of step s+1's payload is fetched
+    while step s's TAIL segment is still uncombined (every earlier wave
+    has landed, every later one has not happened). The reorder is
+    value-invisible — hence streamable — iff for EVERY rank:
+
+      1. each step's payload region is disjoint from its own combine
+         region and of equal length (payloads never observe their own
+         step's writes — the unfused executor reads the payload at step
+         start), and
+      2. the first 1/k of step s+1's payload region is disjoint from the
+         last 1/k of step s's combine region (the one missing write).
+
+    Payloads reading the immutable original buffer skip both read-side
+    checks. Segment boundaries are exact rationals of the chunk grid
+    (`Fraction`), so the proof never rounds. Recursive halving/doubling
+    pass for k >= 3 and genuinely fail at k = 2, where the half-range
+    head segment really does reach into the missing tail write.
+    """
+    from fractions import Fraction
+    try:
+        for r in range(nranks):
+            regions = []
+            for send_sel, recv_sel, source, step in seq:
+                s_off, s_len = _sel_region(send_sel, r, step)
+                r_off, r_len = _sel_region(recv_sel, r, step)
+                if s_len != r_len:
+                    # the executor mirrors the payload segmentation onto
+                    # the combine region; unequal lengths cannot stream
+                    return False
+                if source == SRC_BUFFER and _overlaps(
+                        s_off, s_off + s_len, r_off, r_off + r_len):
+                    return False
+                regions.append((source, s_off, s_len, r_off, r_len))
+            for i in range(1, len(regions)):
+                source, s_off, s_len, _ro, _rl = regions[i]
+                if source != SRC_BUFFER:
+                    continue  # immutable payload: no read-side hazard
+                _src0, _so0, _sl0, r_off, r_len = regions[i - 1]
+                head_end = s_off + Fraction(s_len, k)
+                tail_start = r_off + Fraction(r_len * (k - 1), k)
+                if _overlaps(Fraction(s_off), head_end,
+                             tail_start, Fraction(r_off + r_len)):
+                    return False
+    except Exception:
+        return False  # non-arithmetic closure: cannot prove, do not fuse
+    return True
+
+
+def _stream_eligible(loop: Loop, k_req: int, nranks: int) -> bool:
     """Can this uniform run execute as one cross-step segment stream?
 
     Wave order differs from per-step order in exactly one place: step
@@ -436,10 +585,13 @@ def _stream_eligible(loop: Loop, k_req: int) -> bool:
 
       * reads the immutable original buffer (relay='original'),
       * reads the relay register (relay='received'), whose segment j was
-        recorded k waves earlier, or
+        recorded k waves earlier,
       * reads whole chunks (SEL_CHUNK send AND recv): chunk regions are
         equal or disjoint, and equal regions slice into the same k
-        segments — segment 0 never overlaps the missing tail write.
+        segments — segment 0 never overlaps the missing tail write, or
+      * reads contiguous chunk ranges (SEL_RANGE, period-1 runs only)
+        whose concrete per-rank regions pass the region-overlap proof
+        (`_regions_stream_safe`) across the whole run.
 
     mask_recv slots never coalesce into LOOPs; track_recv (the relay
     register) is a single shared register, so it streams only at
@@ -448,6 +600,7 @@ def _stream_eligible(loop: Loop, k_req: int) -> bool:
     if k_req < 2 or loop.trip < 2:
         return False
     track = False
+    needs_proof = False
     for slot in loop.slots:
         if not (len(slot) == 1 and isinstance(slot[0], SegLoop)):
             return False
@@ -458,33 +611,104 @@ def _stream_eligible(loop: Loop, k_req: int) -> bool:
         if recv.dsts is not None:
             return False
         track = track or recv.track_recv
-        if recv.sel.kind not in (SEL_CHUNK, SEL_ALL):
+        if recv.sel.kind not in (SEL_CHUNK, SEL_ALL, SEL_RANGE):
             return False
         if load.source == SRC_BUFFER:
-            if not (load.sel.kind == SEL_CHUNK
-                    and recv.sel.kind == SEL_CHUNK):
+            if not (load.sel.kind in (SEL_CHUNK, SEL_RANGE)
+                    and recv.sel.kind in (SEL_CHUNK, SEL_RANGE)):
                 return False
+            if SEL_RANGE in (load.sel.kind, recv.sel.kind):
+                needs_proof = True
         elif load.source == SRC_RECEIVED:
             if not (load.sel.kind == SEL_ALL and recv.sel.kind == SEL_ALL):
                 return False
-        # SRC_ORIGINAL payloads never read mutable state: any send sel.
+        else:  # SRC_ORIGINAL payloads never read mutable state
+            if recv.sel.kind == SEL_RANGE:
+                needs_proof = True
     if track and loop.period != 1:
         return False
+    if needs_proof:
+        if loop.period != 1 or track:
+            return False  # multi-slot range interleavings are unproven
+        body = loop.slots[0][0].body
+        load, recv = body[0], body[-1]
+        seq = [(load.sel, recv.sel, load.source, loop.base + i)
+               for i in range(loop.trip)]
+        return _regions_stream_safe(seq, k_req, nranks)
     return True
 
 
-def fuse_streams(ops: tuple, k_req: int) -> tuple:
+def fuse_streams(ops: tuple, k_req: int, nranks: int) -> tuple:
     """Rewrite eligible LOOPs of SEG_LOOP slots into STREAM micro-ops —
-    the cross-step software pipeline the cost model prices."""
+    the cross-step software pipeline the cost model credits."""
     out = []
     for op in ops:
-        if isinstance(op, Loop) and _stream_eligible(op, k_req):
+        if isinstance(op, Loop) and _stream_eligible(op, k_req, nranks):
             out.append(Stream(
                 base=op.base, trip=op.trip, period=op.period,
                 segments=k_req,
                 slots=tuple(slot[0].body for slot in op.slots)))
         else:
             out.append(op)
+    return tuple(out)
+
+
+def _chain_body_eligible(op, k_req: int) -> bool:
+    """One unrolled segmented exchange `fuse_chains` may chain: static
+    step index, contiguous send/recv regions, unmasked receivers, no
+    relay register, payload from the buffer or the immutable original."""
+    if not isinstance(op, SegLoop) or op.segments != k_req:
+        return False
+    load, recv = op.body[0], op.body[-1]
+    return (isinstance(load, Copy) and load.kind == "load"
+            and load.step is not None
+            and load.source in (SRC_BUFFER, SRC_ORIGINAL)
+            and load.sel.kind in (SEL_CHUNK, SEL_RANGE)
+            and recv.sel.kind in (SEL_CHUNK, SEL_RANGE)
+            and recv.dsts is None and not recv.track_recv)
+
+
+def fuse_chains(ops: tuple, k_req: int, nranks: int) -> tuple:
+    """Rewrite runs of >= 2 consecutive unrolled segmented exchanges into
+    STREAM_CHAIN micro-ops when the region-overlap proof holds.
+
+    This is what lets the non-uniform log-step schedules — recursive
+    halving/doubling, whose windows shrink or grow each step and so never
+    coalesce into LOOPs — earn the cross-step credit for real. A run is
+    split at any step boundary the proof rejects (recursive halving at
+    k = 2, where the head segment reaches into the missing tail write);
+    sub-runs shorter than 2 keep their SEG_LOOP form.
+    """
+    def seq_of(body) -> tuple:
+        load, recv = body[0], body[-1]
+        return (load.sel, recv.sel, load.source, load.step)
+
+    out: list = []
+    i = 0
+    while i < len(ops):
+        if not _chain_body_eligible(ops[i], k_req):
+            out.append(ops[i])
+            i += 1
+            continue
+        # extend pairwise: each call proves both bodies' within-step
+        # condition and the boundary between them, so an accepted run of
+        # length >= 2 is fully proven — no whole-run re-check needed
+        # (condition 2 only ever relates consecutive steps)
+        run = [ops[i]]
+        j = i + 1
+        while (j < len(ops) and _chain_body_eligible(ops[j], k_req)
+               and _regions_stream_safe(
+                   [seq_of(run[-1].body), seq_of(ops[j].body)],
+                   k_req, nranks)):
+            run.append(ops[j])
+            j += 1
+        if len(run) >= 2:
+            out.append(StreamChain(
+                segments=k_req, bodies=tuple(op.body for op in run)))
+            i = j
+        else:
+            out.append(run[0])
+            i += 1
     return tuple(out)
 
 
@@ -562,10 +786,12 @@ def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
     the unfused program as a bitwise reference:
 
       stream   fuse uniform runs of segmented exchanges into cross-step
-               STREAM pipelines (`fuse_streams`) — only at segments > 1.
+               STREAM pipelines (`fuse_streams`) and proven runs of
+               unrolled segmented exchanges into STREAM_CHAINs
+               (`fuse_chains`) — only at segments > 1.
       stacked  collapse relay='original' copy runs into one STACKED_RECV
                scatter (`fuse_stacked_recv`) — only at segments == 1
-               (segmented copy runs keep their SEG_LOOP form).
+               (segmented copy runs stream through `fuse_chains`).
     """
     k_req = int(segments if segments is not None else schedule.segments)
     if k_req < 1:
@@ -600,7 +826,8 @@ def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
 
     ops = tuple(ops)
     if stream and k_req > 1:
-        ops = fuse_streams(ops, k_req)
+        ops = fuse_streams(ops, k_req, schedule.nranks)
+        ops = fuse_chains(ops, k_req, schedule.nranks)
     if stacked and k_req == 1:
         ops = fuse_stacked_recv(ops, schedule.nranks)
 

@@ -24,7 +24,7 @@ from typing import Optional
 
 from repro.core import algorithms as algos
 from repro.core import plugins
-from repro.core.program import Program, Stream
+from repro.core.program import Program, Stream, StreamChain
 from repro.core.schedule import Schedule
 from repro.core.topology import Communicator
 
@@ -196,19 +196,21 @@ class Selector:
         admissible. Compressed wires shrink the per-segment bytes by the
         codec ratio, so they admit fewer segments at equal message size.
         Copy-only schedules have no combine work for SEG_LOOP to overlap,
-        so they auto-segment only when the compiled program cross-step
-        STREAMs the copies between hops (ring allgather does; bcast trees
-        and linear/bruck all-to-all unroll, so segmentation would only
-        add per-segment alpha there). The probe reads the compiled
-        artifact rather than hard-coding a schedule family. (A
-        tuning-table entry can still pin segments explicitly.)
+        so a segment count is admissible for them only when the program
+        compiled AT THAT COUNT cross-step streams the copies between hops
+        (ring allgather's STREAM, linear all-to-all's and recursive
+        doubling's STREAM_CHAIN; bcast trees never stream, so
+        segmentation would only add per-segment alpha there). The probe
+        is per count because stream eligibility is: recursive doubling's
+        region-overlap proof admits k >= 3 but rejects k = 2. It reads
+        the compiled artifact rather than hard-coding a schedule family.
+        (A tuning-table entry can still pin segments explicitly. Combine
+        schedules keep their full floor-admissible ladder: the split cost
+        model already prices their non-streaming counts as serialized, so
+        the sweep never picks one.)
         """
         if not schedule.steps:
             return (1,)
-        if all(s.op == "copy" for s in schedule.steps):
-            probe = schedule.compile(segments=2)
-            if not any(isinstance(op, Stream) for op in probe.ops):
-                return (1,)
         floor = (comm.min_segment_bytes if comm is not None
                  else self.min_segment_bytes)
         scale = self._wire_scale(codec, elem_bytes)
@@ -220,10 +222,13 @@ class Selector:
         step_bytes = (max(combine_bytes) if combine_bytes
                       else max(msg_bytes * s.bytes_frac
                                for s in schedule.steps))
-        out = []
-        for k in self.segment_candidates:
-            if k == 1 or step_bytes / k >= floor:
-                out.append(int(k))
+        out = [int(k) for k in self.segment_candidates
+               if k == 1 or step_bytes / k >= floor]
+        if all(s.op == "copy" for s in schedule.steps):
+            out = [k for k in out
+                   if k == 1 or any(
+                       isinstance(op, (Stream, StreamChain))
+                       for op in schedule.compile(segments=k).ops)]
         return tuple(out) or (1,)
 
     def candidates(self, collective: str, comm: Communicator):

@@ -23,7 +23,8 @@ import numpy as np
 
 from repro.core.program import (
     Copy, Compress, Decompress, Loop, Program, RecvCombine, SegLoop, Send,
-    StackedRecv, Stream, compile_schedule, fit_segments, split_exchange,
+    StackedRecv, Stream, StreamChain, compile_schedule, fit_segments,
+    split_exchange,
 )
 from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
@@ -226,6 +227,19 @@ def execute_program(prog: Program, inputs: list) -> list:
             op = Loop(base=op.base, trip=op.trip, period=op.period,
                       slots=tuple((SegLoop(op.segments, b),)
                                   for b in op.slots))
+        if isinstance(op, StreamChain):
+            # the chain's wave order is value-identical to the per-step
+            # order — that is exactly what fuse_chains' region-overlap
+            # proof establishes — so the bus-functional model executes
+            # the unfused per-step equivalent, segment granularity
+            # included.
+            for body in op.bodies:
+                writes = _exchange_writes(body, op.segments, state,
+                                          prog.chunks, body[0].step,
+                                          state.bufs)
+                _apply(state, prog.chunks, writes)
+            i += 1
+            continue
         if isinstance(op, StackedRecv):
             # stacked receives are write-disjoint: applying them in step
             # order reproduces the engine's one-scatter result exactly
@@ -271,23 +285,31 @@ def execute_program(prog: Program, inputs: list) -> list:
 
 
 def simulate(schedule: Schedule, inputs: list,
-             segments: Optional[int] = None) -> list:
+             segments: Optional[int] = None, stream: bool = True,
+             stacked: bool = True) -> list:
     """Compile `schedule` to its micro-op program and run it over per-rank
     buffers; returns final per-rank buffers. `segments` overrides the
-    schedule's wire-segmentation knob."""
+    schedule's wire-segmentation knob; `stream`/`stacked` gate the
+    optimization passes exactly as in `Schedule.compile`."""
     schedule.validate()
-    prog = compile_schedule(schedule, segments=segments)
+    prog = compile_schedule(schedule, segments=segments, stream=stream,
+                            stacked=stacked)
     return execute_program(prog, inputs)
 
 
 def simulate_with_cost(schedule: Schedule, inputs: list, comm,
                        segments: Optional[int] = None,
-                       elem_bytes: int = 4) -> tuple:
+                       elem_bytes: int = 4, stream: bool = True,
+                       stacked: bool = True) -> tuple:
     """`simulate`, plus the predicted seconds of the SAME compiled program
-    (`Program.cost`) — the simulator returns the cost of exactly what it
-    executed, the fig10/fig12 model-evaluation contract."""
+    (`Program.cost`) — the simulator returns the split-model cost of
+    exactly the program it executed, the fig10/fig12 model-evaluation
+    contract. A streamed compile and a `stream=False` compile of the same
+    schedule execute to identical buffers but price differently: only the
+    streamed program earns the cross-step fill/drain credit."""
     schedule.validate()
-    prog = compile_schedule(schedule, segments=segments)
+    prog = compile_schedule(schedule, segments=segments, stream=stream,
+                            stacked=stacked)
     bufs = execute_program(prog, inputs)
     msg_bytes = inputs[0].size * inputs[0].itemsize
     return bufs, prog.cost(msg_bytes, comm, elem_bytes=elem_bytes)

@@ -64,33 +64,49 @@ def test_sweep_covers_newly_segmentable_schedules(sweep_results):
             ("reduce", "ring")} <= algos
 
 
-def test_sweep_pipelining_dominates_at_1mib(sweep_results):
-    """Acceptance: predicted time strictly dominates the 1-segment
-    baseline for every message >= 1 MiB."""
+def test_sweep_pipelining_dominates_at_1mib_iff_streamed(sweep_results):
+    """Acceptance, split-model form: for every message >= 1 MiB,
+    predicted time strictly dominates the 1-segment baseline EXACTLY on
+    the curves whose program cross-step streams; SEG_LOOP-only curves
+    are serialized and their best count is the unsegmented baseline."""
     _, on_disk = sweep_results
     curves: dict = {}
+    streamed: dict = {}
     for e in on_disk["segment_sweep"]:
-        curves.setdefault(
-            (e["collective"], e["algorithm"], e["msg_bytes"]), {})[
-            e["segments"]] = e["predicted_s"]
-    checked = 0
+        key = (e["collective"], e["algorithm"], e["msg_bytes"])
+        curves.setdefault(key, {})[e["segments"]] = e["predicted_s"]
+        streamed[key] = streamed.get(key, False) or e["streamed"]
+    dominating, serialized = 0, 0
     for (coll, algo, nbytes), times in curves.items():
         if nbytes < 1 << 20:
             continue
-        checked += 1
-        assert min(times.values()) < times[1], (coll, algo, nbytes)
-    assert checked >= 3  # sweep must actually cover >= 1 MiB messages
+        if streamed[(coll, algo, nbytes)]:
+            dominating += 1
+            assert min(times.values()) < times[1], (coll, algo, nbytes)
+        else:
+            serialized += 1
+            assert min(times.values()) == times[1], (coll, algo, nbytes)
+    assert dominating >= 3  # sweep must cover streamed >= 1 MiB curves
+    assert serialized >= 1  # ... and the honestly-serialized ones
 
 
 def test_sweep_marks_streamed_programs(sweep_results):
     """Sweep points carry whether the compiled program cross-step
-    streams: rings at k > 1 do, unrolled trees never do."""
+    streams: rings at k > 1 do, recursive halving/doubling now does via
+    the SEL_RANGE chain (the acceptance bit: previously non-streamable
+    schedules showing streamed=true), unrolled trees never do."""
     _, on_disk = sweep_results
     sweep = on_disk["segment_sweep"]
     assert all("streamed" in e for e in sweep)
     assert any(e["streamed"] for e in sweep
                if e["algorithm"] in ("ring", "bidi_ring")
                and e["segments"] > 1)
+    assert any(e["streamed"] for e in sweep
+               if e["algorithm"] == "halving_doubling"
+               and e["segments"] >= 4)
+    assert any(e["streamed"] for e in sweep
+               if e["algorithm"] == "recursive_halving"
+               and e["segments"] >= 4)
     assert not any(e["streamed"] for e in sweep
                    if e["algorithm"] == "binomial_tree")
     assert not any(e["streamed"] for e in sweep if e["segments"] == 1)
@@ -137,6 +153,65 @@ def test_check_bench_fails_on_missing_points(sweep_results, tmp_path):
                 / "benchmarks" / "baseline.json")
     cb = _load_check_bench()
     assert cb.main([str(results), "--baseline", str(baseline)]) == 1
+
+
+def test_check_bench_fails_on_extra_points(sweep_results, tmp_path):
+    """Both directions gate: a sweep that silently GROWS coverage (new
+    keys absent from the reviewed baseline) fails too — new curves must
+    land via an explicit baseline refresh."""
+    _, on_disk = sweep_results
+    grown = json.loads(json.dumps(on_disk))
+    novel = dict(grown["segment_sweep"][0])
+    novel["collective"] = "never_reviewed"
+    grown["segment_sweep"].append(novel)
+    results = tmp_path / "grown.json"
+    results.write_text(json.dumps(grown))
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    assert cb.main([str(results), "--baseline", str(baseline)]) == 1
+
+
+def test_check_bench_zero_baseline_point_still_gates(sweep_results,
+                                                     tmp_path, capsys):
+    """A zero/near-zero baseline predicted_s must not blow up (or pass
+    via division weirdness): the epsilon floor turns it into a huge
+    finite drift that fails the gate."""
+    _, on_disk = sweep_results
+    zeroed = json.loads(json.dumps(on_disk))
+    zeroed["segment_sweep"][0]["predicted_s"] = 0.0
+    baseline = tmp_path / "zero_base.json"
+    baseline.write_text(json.dumps(
+        {"meta": {}, "segment_sweep": zeroed["segment_sweep"]}))
+    results = tmp_path / "fresh.json"
+    results.write_text(json.dumps(on_disk))
+    cb = _load_check_bench()
+    assert cb.main([str(results), "--baseline", str(baseline)]) == 1
+    out = capsys.readouterr().out
+    assert "DRIFT" in out and "nan" not in out and "inf" not in out
+
+
+def test_check_bench_top_truncates_drift_list(sweep_results, tmp_path,
+                                              capsys):
+    """--top N prints only the N worst-drifting points (largest |drift|
+    first) plus a count of the rest — the CI log summary."""
+    _, on_disk = sweep_results
+    drifted = json.loads(json.dumps(on_disk))
+    for i, e in enumerate(drifted["segment_sweep"][:5]):
+        e["predicted_s"] *= 2.0 + i  # ascending drifts, worst last
+    results = tmp_path / "drifted.json"
+    results.write_text(json.dumps(drifted))
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    assert cb.main([str(results), "--baseline", str(baseline),
+                    "--top", "2"]) == 1
+    out = capsys.readouterr().out
+    assert out.count("DRIFT") == 2
+    assert "3 more drifted points" in out
+    # the worst drift (6x -> +500.0%) leads the truncated list
+    head = out.split("DRIFT")[1]
+    assert "(+500.0%)" in head
 
 
 def test_check_bench_write_baseline_round_trip(sweep_results, tmp_path):

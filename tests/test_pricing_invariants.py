@@ -1,0 +1,160 @@
+"""Invariants of the split pricing model (PR 4), swept property-style.
+
+(a) No SEG_LOOP-only compiled program ever receives the cross-step
+    (k-1)*max fill/drain term: its price is EXACTLY the serialized
+    per-step golden model (`golden_pricing.predict_time_segloop`),
+    floor clamps included.
+(b) For non-streamable programs, segmentation never pays: cost at k > 1
+    is >= cost at k = 1 at every message size, including sub-segment-
+    floor sizes where the Rx clamp fires (equality once fully clamped).
+(c) SEL_RANGE streamed programs are bitwise-equal to their unfused form
+    across {range-selector ring, recursive halving} x {fp32, int8} —
+    the credit the model grants them is a wire reorder, not a numeric
+    change.
+"""
+import inspect
+import math
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import golden_pricing as GP
+from repro.core import CollectiveEngine, Communicator
+from repro.core import algorithms as A
+from repro.core.engine import execute_program
+from repro.core.program import Stream, StreamChain, compile_schedule
+from repro.core.schedule import Schedule, Sel, Step
+from repro.core.topology import make_mesh
+
+COMM8 = Communicator(axis="x", size=8)
+DCN8 = Communicator(axis="pod", size=8, is_dcn=True)
+
+ALL_ALGOS = sorted({(c, a) for (c, a) in A.GENERATORS})
+
+#: sizes straddling the fabric floors: 64 KiB ring chunks sit BELOW the
+#: 8 KiB-per-segment ICI floor at k >= 2, 64 MiB sits far above it
+SIZES = (64 << 10, 1 << 20, 64 << 20)
+SEGMENTS = (2, 4, 8, 32)
+
+
+def _gen(coll, algo, comm=COMM8):
+    gen = A.GENERATORS[(coll, algo)]
+    kw = {"root": 1} if "root" in inspect.signature(gen).parameters else {}
+    return gen(comm, **kw)
+
+
+def _streams(prog):
+    return [op for op in prog.ops if isinstance(op, (Stream, StreamChain))]
+
+
+# -- (a) SEG_LOOP-only programs never get the cross-step credit ---------------
+
+@pytest.mark.parametrize("coll,algo", ALL_ALGOS,
+                         ids=[f"{c}-{a}" for c, a in ALL_ALGOS])
+@pytest.mark.parametrize("comm", [COMM8, DCN8], ids=["ici", "dcn"])
+def test_segloop_only_programs_price_serialized(coll, algo, comm):
+    """Wherever no fusion pass fired, the price is the serialized
+    within-step model — bit-exactly, so no residue of the old global
+    (k-1)*max term can hide in the walk."""
+    sched = _gen(coll, algo)
+    for msg in SIZES:
+        for k in SEGMENTS:
+            prog = compile_schedule(sched, segments=k)
+            if _streams(prog):
+                continue
+            want = GP.predict_time_segloop(
+                sched, msg, comm.hop_latency, comm.link_bw, segments=k,
+                min_segment_bytes=comm.min_segment_bytes)
+            assert math.isclose(prog.cost(msg, comm), want,
+                                rel_tol=1e-12), (coll, algo, msg, k)
+
+
+def test_forced_unfused_programs_price_serialized():
+    """stream=False makes EVERY program SEG_LOOP-only — including the
+    rings — and the serialized invariant must hold there too."""
+    for coll, algo in ALL_ALGOS:
+        sched = _gen(coll, algo)
+        for k in (2, 8):
+            prog = compile_schedule(sched, segments=k, stream=False)
+            assert not _streams(prog)
+            want = GP.predict_time_segloop(
+                sched, 4 << 20, COMM8.hop_latency, COMM8.link_bw,
+                segments=k, min_segment_bytes=COMM8.min_segment_bytes)
+            assert math.isclose(prog.cost(4 << 20, COMM8), want,
+                                rel_tol=1e-12), (coll, algo, k)
+
+
+# -- (b) segmentation never pays without streaming ----------------------------
+
+@pytest.mark.parametrize("coll,algo", ALL_ALGOS,
+                         ids=[f"{c}-{a}" for c, a in ALL_ALGOS])
+def test_non_streamable_k_gt_1_never_beats_k1(coll, algo):
+    """k > 1 only adds per-segment alpha when execution cannot overlap
+    across steps; sub-floor sizes clamp back toward k = 1 (equality),
+    never below it. Swept on the unfused compile so the invariant also
+    covers the algorithms whose fused form streams."""
+    sched = _gen(coll, algo)
+    for comm in (COMM8, DCN8):
+        for msg in (1 << 10, 8 << 10) + SIZES:  # incl. sub-floor sizes
+            base = compile_schedule(sched, segments=1).cost(msg, comm)
+            for k in SEGMENTS:
+                prog = compile_schedule(sched, segments=k, stream=False)
+                assert prog.cost(msg, comm) >= base, (coll, algo, msg, k)
+            fused = compile_schedule(sched, segments=8)
+            if not _streams(fused):
+                assert fused.cost(msg, comm) >= base, (coll, algo, msg)
+
+
+# -- (c) SEL_RANGE streamed programs are bitwise-equal to unfused -------------
+
+def _range_ring_reduce_scatter(comm):
+    """The chunk ring written with SEL_RANGE selectors — streams through
+    the region proof as a uniform RANGE run."""
+    n = comm.size
+    perm = tuple(comm.ring_perm(1))
+    send = Sel.range(lambda r, s: ((r - s - 1) % n, 1))
+    recv = Sel.range(lambda r, s: ((r - s - 2) % n, 1))
+    steps = tuple(
+        Step(perm=perm, op="add", send_sel=send, recv_sel=recv,
+             bytes_frac=1.0 / n, uniform=True)
+        for _ in range(n - 1))
+    return Schedule(name="range_ring", collective="reduce_scatter",
+                    nranks=n, steps=steps, chunks=n, result="shard",
+                    owned_chunk=lambda r: r)
+
+
+@pytest.fixture(scope="module")
+def env():
+    mesh = make_mesh((8,), ("x",))
+    return CollectiveEngine(mesh, backend="microcode"), mesh
+
+
+def _run_prog(mesh, prog, X):
+    g = jax.jit(jax.shard_map(
+        lambda v: execute_program(prog, v[0], "x")[None],
+        mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
+    return np.asarray(g(jax.numpy.asarray(X)))
+
+
+# chunk size 2048: whole int8 scale blocks at every k used here
+XR = np.random.default_rng(17).normal(size=(8, 16384)).astype(np.float32)
+
+
+@pytest.mark.parametrize("name,gen", [
+    ("range_ring", _range_ring_reduce_scatter),
+    ("recursive_halving", A.recursive_halving_reduce_scatter),
+])
+@pytest.mark.parametrize("codec", [None, "int8"])
+def test_sel_range_streamed_bitwise_equals_unfused(env, name, gen, codec):
+    _eng, mesh = env
+    sched = gen(COMM8)
+    for k in (4, 8):
+        fused = compile_schedule(sched, segments=k, codec=codec)
+        plain = compile_schedule(sched, segments=k, codec=codec,
+                                 stream=False)
+        assert _streams(fused), (name, k)
+        assert not _streams(plain)
+        np.testing.assert_array_equal(_run_prog(mesh, fused, XR),
+                                      _run_prog(mesh, plain, XR))

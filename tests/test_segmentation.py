@@ -106,8 +106,11 @@ def test_compressed_auto_allreduce_scale_reuse_parity(eng8):
     so the auto-segmented compressed wire is BITWISE-identical to the
     unsegmented codec — auto == explicit (same algorithm, segments=1)."""
     eng, mesh = eng8
+    # 4 MiB: large enough that the codec-aware auto pick segments a
+    # STREAMED algorithm under the split model (smaller compressed
+    # messages now honestly prefer the unsegmented hypercube)
     big = np.random.default_rng(9).normal(
-        size=(8, 1 << 16)).astype(np.float32)
+        size=(8, 1 << 20)).astype(np.float32)
     nbytes = big[0].nbytes
     ch = eng.selector.choose("allreduce", nbytes, eng.comm("x"),
                              codec="int8")
@@ -325,15 +328,16 @@ def test_program_cost_segment_model_shape():
 
 
 def test_unstreamable_copy_collectives_never_auto_segment():
-    """bcast trees and all-to-all unroll — no cross-step stream, so
+    """bcast trees mask receivers — no cross-step stream, so
     segmentation would only add per-segment alpha and the selector must
-    not pick it. Ring allgather STREAMS now and may auto-segment (see
-    test_stream_fusion); tuning can still pin any count."""
+    not pick it. Ring allgather STREAMS and linear all-to-all CHAINS
+    (immutable relay='original' payloads), so both may auto-segment
+    (see test_stream_fusion); tuning can still pin any count."""
     sel = Selector()
     comm = Communicator(axis="x", size=8)
-    for coll in ("bcast", "alltoall"):
-        c = sel.choose(coll, 64 << 20, comm)
-        assert c.segments == 1, (coll, c)
+    c = sel.choose("bcast", 64 << 20, comm)
+    assert c.segments == 1, c
+    assert sel.choose("alltoall", 64 << 20, comm).segments > 1
     assert sel.choose("allgather", 64 << 20, comm).segments > 1
     sel.set_tuning("allgather", "ring", segments=4)
     assert sel.choose("allgather", 64 << 20, comm).segments == 4

@@ -139,6 +139,22 @@ def test_choose_is_memoized_zero_generator_calls():
     assert sel.stats["gen_calls"] > gens_after_first
 
 
+def test_choose_cache_keys_on_elem_bytes():
+    """Codec pricing depends on the element width (wire bytes per elem /
+    elem_bytes): a choose() at a different elem_bytes must not be served
+    a stale memoized Choice priced for another width."""
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    c4 = sel.choose("allreduce", 4 << 20, comm, codec="int8", elem_bytes=4)
+    c2 = sel.choose("allreduce", 4 << 20, comm, codec="int8", elem_bytes=2)
+    assert sel.stats["cache_hits"] == 0  # different width, different entry
+    assert c2.predicted_s != c4.predicted_s  # 2-byte wires compress 2x less
+    again = sel.choose("allreduce", 4 << 20, comm, codec="int8",
+                       elem_bytes=4)
+    assert again is c4  # same width still hits the cache
+    assert sel.stats["cache_hits"] == 1
+
+
 def test_set_tuning_invalidates_choose_cache():
     sel = Selector()
     comm = Communicator(axis="x", size=8)

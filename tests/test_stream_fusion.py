@@ -23,8 +23,9 @@ from repro.core import algorithms as A
 from repro.core import simulator as sim
 from repro.core.engine import execute_program
 from repro.core.program import (
-    Loop, SegLoop, StackedRecv, Stream, compile_schedule,
+    Loop, SegLoop, StackedRecv, Stream, StreamChain, compile_schedule,
 )
+from repro.core.schedule import Schedule, Sel, Step
 from repro.core.topology import make_mesh
 
 COMM8 = Communicator(axis="x", size=8)
@@ -172,17 +173,22 @@ def test_selector_auto_pick_streams_at_1mib():
 
 
 def test_copy_collectives_auto_segment_only_when_streamed():
-    """Streaming unlocked copy-only segmentation where it is real: ring
-    allgather (a uniform run) now auto-segments, while bcast trees and
-    all-to-all (unrolled — nothing streams) still pick k=1."""
+    """Copy-only segmentation follows the compiled artifact: ring
+    allgather streams (uniform run) and linear all-to-all now chains
+    (relay='original' payloads are immutable, so the region proof is
+    trivial) — both auto-segment; bcast trees mask receivers, nothing
+    streams, and the selector keeps k=1."""
     sel = Selector()
     ag = sel.choose("allgather", 64 << 20, COMM8)
     assert ag.segments > 1
     assert any(isinstance(op, Stream) for op in ag.program.ops)
-    for coll in ("bcast", "alltoall"):
-        c = sel.choose(coll, 64 << 20, COMM8)
-        assert c.segments == 1, (coll, c.algorithm)
-        assert not any(isinstance(op, Stream) for op in c.program.ops)
+    a2a = sel.choose("alltoall", 64 << 20, COMM8)
+    assert a2a.algorithm == "linear" and a2a.segments > 1
+    assert any(isinstance(op, StreamChain) for op in a2a.program.ops)
+    c = sel.choose("bcast", 64 << 20, COMM8)
+    assert c.segments == 1, c.algorithm
+    assert not any(isinstance(op, (Stream, StreamChain))
+                   for op in c.program.ops)
 
 
 def test_engine_auto_allreduce_executes_streamed(env):
@@ -200,6 +206,188 @@ def test_engine_auto_allreduce_executes_streamed(env):
         mesh=mesh, in_specs=P("x"), out_specs=P("x"), check_vma=False))
     out = np.asarray(g(jnp.asarray(big)))
     np.testing.assert_allclose(out[0], big.sum(0), atol=1e-3)
+
+
+# -- STREAM_CHAIN: the SEL_RANGE region-overlap proof -------------------------
+
+def test_recursive_schedules_compile_to_chains():
+    """Non-uniform log-step schedules chain when (and only when) the
+    per-rank region proof holds: recursive halving/doubling at k >= 3,
+    the full Rabenseifner allreduce as ONE chain across its RS/AG
+    boundary, linear all-to-all at any k (immutable payloads). The
+    SEL_ALL hypercube allreduce overlaps send/recv and must never
+    chain, and k = 2 halving genuinely fails the proof."""
+    for gen, m in ((A.recursive_halving_reduce_scatter, 3),
+                   (A.recursive_doubling_allgather, 3),
+                   (A.halving_doubling_allreduce, 6)):
+        prog = compile_schedule(gen(COMM8), segments=4)
+        assert [type(op) for op in prog.ops] == [StreamChain], gen
+        assert len(prog.ops[0].bodies) == m
+    prog = compile_schedule(A.linear_alltoall(COMM8), segments=2)
+    assert [type(op) for op in prog.ops] == [StreamChain]
+    assert len(prog.ops[0].bodies) == 7
+
+    # k=2: halving's upper-half head segment reaches into the missing
+    # tail write — the proof rejects, the program stays SEG_LOOP-only
+    k2 = compile_schedule(A.recursive_halving_reduce_scatter(COMM8),
+                          segments=2)
+    assert not any(isinstance(op, StreamChain) for op in k2.ops)
+    # full-buffer hypercube steps read what the previous step wrote
+    rd = compile_schedule(A.recursive_doubling_allreduce(COMM8),
+                          segments=4)
+    assert not any(isinstance(op, (Stream, StreamChain)) for op in rd.ops)
+
+
+def test_chain_pass_can_be_disabled():
+    prog = compile_schedule(A.recursive_halving_reduce_scatter(COMM8),
+                            segments=4, stream=False)
+    assert all(isinstance(op, SegLoop) for op in prog.ops)
+
+
+_CHAIN_CELLS = [
+    ("recursive_halving", A.recursive_halving_reduce_scatter, 4),
+    ("recursive_halving", A.recursive_halving_reduce_scatter, 8),
+    ("halving_doubling", A.halving_doubling_allreduce, 4),
+    ("recursive_doubling_ag", A.recursive_doubling_allgather, 4),
+]
+
+
+@pytest.mark.parametrize("name,gen,k", _CHAIN_CELLS,
+                         ids=[f"{n}-k{k}" for n, _g, k in _CHAIN_CELLS])
+@pytest.mark.parametrize("codec", [None, "int8"])
+def test_chained_bitwise_equals_unfused(env, name, gen, k, codec):
+    """{fp32, int8} x {recursive halving, Rabenseifner, recursive
+    doubling}: the chained pipeline must reproduce the per-step order
+    exactly — the SEL_RANGE proof licenses a wire reorder, never a
+    numeric change."""
+    _eng, mesh = env
+    sched = gen(COMM8)
+    if codec is not None and all(s.op == "copy" for s in sched.steps):
+        pytest.skip("codecs compress combine wires only")
+    fused = compile_schedule(sched, segments=k, codec=codec)
+    plain = compile_schedule(sched, segments=k, codec=codec, stream=False)
+    assert any(isinstance(op, StreamChain) for op in fused.ops)
+    assert not any(isinstance(op, StreamChain) for op in plain.ops)
+    np.testing.assert_array_equal(_run_prog(mesh, fused, XL),
+                                  _run_prog(mesh, plain, XL))
+
+
+def test_chained_alltoall_bitwise(env):
+    _eng, mesh = env
+    sched = A.linear_alltoall(COMM8)
+    fused = compile_schedule(sched, segments=4)
+    plain = compile_schedule(sched, segments=4, stream=False)
+    assert any(isinstance(op, StreamChain) for op in fused.ops)
+    np.testing.assert_array_equal(_run_prog(mesh, fused, X),
+                                  _run_prog(mesh, plain, X))
+    refs = sim.oracle("alltoall", list(X))
+    got = _run_prog(mesh, fused, X)
+    for r in range(8):
+        np.testing.assert_array_equal(got[r], refs[r])
+
+
+def test_simulator_executes_chained_programs(env):
+    """The numpy executor runs the SAME chained program the engine runs
+    and agrees with it exactly."""
+    _eng, mesh = env
+    prog = compile_schedule(A.halving_doubling_allreduce(COMM8),
+                            segments=4)
+    assert any(isinstance(op, StreamChain) for op in prog.ops)
+    got = sim.execute_program(prog, [x.copy() for x in X])
+    eng_out = _run_prog(mesh, prog, X)
+    for r in range(8):
+        np.testing.assert_array_equal(got[r], eng_out[r])
+
+
+def test_chain_clamp_falls_back_bitwise(env):
+    """A payload that forces trace-time segment clamping can invalidate
+    the compile-time proof (recursive halving's last steps clamp toward
+    k=2/k=1 on tiny chunks): the executor re-verifies and falls back to
+    per-step execution — still bitwise-equal, never wrong."""
+    _eng, mesh = env
+    sched = A.recursive_halving_reduce_scatter(COMM8)
+    prog = compile_schedule(sched, segments=4)
+    assert any(isinstance(op, StreamChain) for op in prog.ops)
+    Y = np.random.default_rng(11).normal(size=(8, 8)).astype(np.float32)
+    a = _run_prog(mesh, prog, Y)  # csize=1: every step clamps
+    b = _run_prog(mesh, compile_schedule(sched, segments=1), Y)
+    np.testing.assert_array_equal(a, b)
+
+
+def _range_ring_reduce_scatter(comm):
+    """The chunk ring expressed through SEL_RANGE selectors — a uniform
+    SEL_RANGE run, the shape the ROADMAP said could not stream before
+    the region proof existed."""
+    n = comm.size
+    perm = tuple(comm.ring_perm(1))
+    send = Sel.range(lambda r, s: ((r - s - 1) % n, 1))
+    recv = Sel.range(lambda r, s: ((r - s - 2) % n, 1))
+    steps = tuple(
+        Step(perm=perm, op="add", send_sel=send, recv_sel=recv,
+             bytes_frac=1.0 / n, uniform=True)
+        for _ in range(n - 1))
+    return Schedule(name="range_ring", collective="reduce_scatter",
+                    nranks=n, steps=steps, chunks=n, result="shard",
+                    owned_chunk=lambda r: r)
+
+
+def test_uniform_sel_range_run_streams(env):
+    """A uniform SEL_RANGE run coalesces into a LOOP and now streams via
+    the region proof (previously only chunk/chunk and relay-register
+    payloads were eligible) — bitwise-equal to the unfused form and to
+    the chunk-selector ring."""
+    _eng, mesh = env
+    sched = _range_ring_reduce_scatter(COMM8)
+    fused = compile_schedule(sched, segments=4)
+    assert [type(op) for op in fused.ops] == [Stream]
+    plain = compile_schedule(sched, segments=4, stream=False)
+    a, b = _run_prog(mesh, fused, X), _run_prog(mesh, plain, X)
+    np.testing.assert_array_equal(a, b)
+    chunk_ring = _run_prog(
+        mesh, compile_schedule(A.ring_reduce_scatter(COMM8), segments=4),
+        X)
+    np.testing.assert_array_equal(a, chunk_ring)
+
+
+def _k_sensitive_range_run(comm):
+    """Uniform SEL_RANGE run whose region proof PASSES at k=4 but FAILS
+    at k=2: step s+1's payload starts 2 chunks into step s's 4-chunk
+    combine region, so the head segment is 1 chunk at k=4 (disjoint from
+    the 1-chunk tail) but 2 chunks at k=2 (covering the missing tail
+    write)."""
+    n = comm.size
+    perm = tuple(comm.ring_perm(1))
+    send = Sel.range(lambda r, s: (6 * s, 4))
+    recv = Sel.range(lambda r, s: (6 * s + 4, 4))
+    steps = tuple(
+        Step(perm=perm, op="add", send_sel=send, recv_sel=recv,
+             bytes_frac=4.0 / 16, uniform=True)
+        for _ in range(2))
+    return Schedule(name="krange", collective="custom", nranks=n,
+                    steps=steps, chunks=16, result="full")
+
+
+def test_stream_clamp_reruns_range_proof(env):
+    """A SEL_RANGE stream proven at the requested k must re-prove itself
+    when trace-time clamping admits a smaller count (the proof is
+    k-dependent). Here the int8 scale-block constraint clamps k=4 to
+    k=2 — exactly the count the proof rejects — and the executor must
+    drop to the rolled per-step form instead of executing the unproven
+    wave order."""
+    _eng, mesh = env
+    sched = _k_sensitive_range_run(COMM8)
+    fused = compile_schedule(sched, segments=4, codec="int8")
+    assert any(isinstance(op, Stream) for op in fused.ops)  # k=4 proven
+    assert not any(isinstance(op, Stream)
+                   for op in compile_schedule(sched, segments=2,
+                                              codec="int8").ops)
+    plain = compile_schedule(sched, segments=4, codec="int8", stream=False)
+    # chunk size 128 elems: 4-chunk payload = 512, whole 256-elem scale
+    # blocks only at k=2 — fit_segments clamps the proven k=4 down
+    Y = (np.random.default_rng(3).normal(size=(8, 16 * 128)) * 20
+         ).astype(np.float32)
+    np.testing.assert_array_equal(_run_prog(mesh, fused, Y),
+                                  _run_prog(mesh, plain, Y))
 
 
 # -- stacked-receive peephole -------------------------------------------------
