@@ -27,10 +27,10 @@ def timeit(fn, *args, warmup=2, iters=10):
 
 
 # Machine-readable mirror of everything row() prints, plus structured
-# records benchmarks attach directly (segment sweeps). run.py serializes
-# this into BENCH_collectives.json so the perf trajectory is diffable
-# across PRs.
-RESULTS = {"rows": [], "segment_sweep": []}
+# records benchmarks attach directly (segment sweeps, queue sweeps).
+# run.py serializes this into BENCH_collectives.json so the perf
+# trajectory is diffable across PRs.
+RESULTS = {"rows": [], "segment_sweep": [], "queue_sweep": []}
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -45,9 +45,15 @@ def record_sweep(entry: dict):
     RESULTS["segment_sweep"].append(entry)
 
 
+def record_queue(entry: dict):
+    """Attach one structured queue-sweep record (see figures.queue_sweep)."""
+    RESULTS["queue_sweep"].append(entry)
+
+
 def reset_results():
     RESULTS["rows"].clear()
     RESULTS["segment_sweep"].clear()
+    RESULTS["queue_sweep"].clear()
 
 
 def header():

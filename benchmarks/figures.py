@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import record_sweep, row, timeit
+from benchmarks.common import record_queue, record_sweep, row, timeit
 from repro.core import CollectiveEngine, Communicator, Selector
 from repro.core.hw_spec import ACCL_CLUSTER, TPU_V5E
 from repro.core.topology import make_mesh
@@ -245,6 +245,58 @@ def seg_sweep(segment_counts=None, nranks: int = 8,
                 f"speedup={times[1]/times[best_k]:.2f}x "
                 f"dominates={dominated}"
                 + ("" if auto_ok else f" auto=1seg({why_not})"))
+
+
+# -- Queue sweep: the offload request queue's makespan model ------------------
+
+def queue_sweep(request_counts=(1, 2, 4, 8), nranks: int = 8,
+                sizes=(1 << 12, 1 << 16, 1 << 20, 1 << 24)):
+    """Queue makespan vs serial-blocking cost, per request count and size.
+
+    Pure model (no device timing): a queue of `m` INDEPENDENT same-axis
+    allreduces is issued into a `Sequencer` and priced two ways —
+    `Sequencer.makespan` (the queue-level pipelining model: wire
+    occupancy serializes across the drain, queued requests' per-hop
+    alpha hides behind the request in flight, dependency chains — none
+    here — serialize in full) and `Sequencer.serial_cost` (the sum of
+    blocking `Program.cost`s, what m back-to-back blocking calls would
+    price). Small sizes additionally coalesce into ONE bucketed program
+    (the paper's offload win for many tiny CPU-side calls — `coalesced`
+    marks those points). Every point lands in BENCH_collectives.json's
+    `queue_sweep` section, which `scripts/check_bench.py` gates next to
+    the segment sweep.
+    """
+    from repro.core.sequencer import Sequencer
+
+    mesh = make_mesh((nranks,), ("x",))
+    eng = CollectiveEngine(mesh)
+    comm = Communicator(axis="x", size=nranks)
+    for nbytes in sizes:
+        for m in request_counts:
+            seq = Sequencer(eng)
+            for _ in range(m):
+                # distinct buffers: the requests are independent (no
+                # conflict edges), the overlap-credit case
+                seq.issue("allreduce",
+                          np.zeros((nbytes // 4,), np.float32), "x")
+            plan = seq.plan("x")
+            makespan = seq.makespan("x", comm=comm)
+            serial = seq.serial_cost("x", comm=comm)
+            coalesced = any(it.coalesced for it in plan)
+            record_queue({
+                "collective": "allreduce",
+                "nranks": nranks,
+                "msg_bytes": int(nbytes),
+                "requests": int(m),
+                "makespan_s": makespan,
+                "serial_s": serial,
+                "coalesced": coalesced,
+            })
+            row(f"queuesweep/allreduce/{m}req/{nbytes>>10}KB/"
+                f"{nranks}ranks", makespan * 1e6,
+                f"serial={serial*1e6:.1f}us "
+                f"speedup={serial/makespan:.2f}x "
+                f"items={len(plan)} coalesced={coalesced}")
 
 
 # -- Fig 13: engine vs baseline (ACCL+ vs ACCL vs MPI analogue) ---------------

@@ -35,8 +35,9 @@ def main(argv=None) -> dict:
                          "seg_sweep) instead of the full set")
     ap.add_argument("--quick", action="store_true",
                     help="run only the deterministic model benchmarks "
-                         "(fig12_scaling + seg_sweep) — the CI bench-gate "
-                         "mode; still writes the JSON results file")
+                         "(fig12_scaling + seg_sweep + queue_sweep) — "
+                         "the CI bench-gate mode; still writes the JSON "
+                         "results file")
     default_segments = ",".join(
         str(k) for k in _selector_default_segments())
     ap.add_argument("--segments", default=default_segments,
@@ -80,6 +81,7 @@ def main(argv=None) -> dict:
         "fig12_scaling": figures.fig12_scaling,
         "fig13_backend_compare": figures.fig13_backend_compare,
         "seg_sweep": seg_sweep,
+        "queue_sweep": figures.queue_sweep,
         "fig16_vecmat": figures.fig16_vecmat,
         "fig17_dlrm": figures.fig17_dlrm,
         "table3_resources": figures.table3_resources,
@@ -92,7 +94,8 @@ def main(argv=None) -> dict:
     elif args.quick:
         # the deterministic (pure cost-model) subset CI gates on
         benches = {"fig12_scaling": benches["fig12_scaling"],
-                   "seg_sweep": benches["seg_sweep"]}
+                   "seg_sweep": benches["seg_sweep"],
+                   "queue_sweep": benches["queue_sweep"]}
     for fn in benches.values():
         fn()
 
@@ -100,12 +103,14 @@ def main(argv=None) -> dict:
         "meta": _meta(),
         "rows": list(RESULTS["rows"]),
         "segment_sweep": list(RESULTS["segment_sweep"]),
+        "queue_sweep": list(RESULTS["queue_sweep"]),
     }
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1)
         print(f"# wrote {args.json}: {len(results['rows'])} rows, "
-              f"{len(results['segment_sweep'])} sweep points")
+              f"{len(results['segment_sweep'])} sweep points, "
+              f"{len(results['queue_sweep'])} queue points")
     return results
 
 

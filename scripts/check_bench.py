@@ -1,9 +1,12 @@
 #!/usr/bin/env python
 """CI perf gate: fail when the predicted-time model drifts from baseline.
 
-Compares the `segment_sweep` records of a fresh benchmark run (the
-deterministic `python -m benchmarks.run --quick` output) against the
-committed baseline in benchmarks/baseline.json. The gate is symmetric:
+Compares the `segment_sweep` AND `queue_sweep` records of a fresh
+benchmark run (the deterministic `python -m benchmarks.run --quick`
+output) against the committed baseline in benchmarks/baseline.json —
+sweep points gate `predicted_s`, queue points gate BOTH `makespan_s`
+(the sequencer's queue-level overlap model) and `serial_s` (the
+blocking reference it is measured against). The gate is symmetric:
 
   * every baseline point must still exist (MISSING fails — coverage must
     not silently shrink),
@@ -40,14 +43,27 @@ def _key(e: dict) -> tuple:
             int(e["msg_bytes"]), int(e["segments"]))
 
 
+def _queue_key(e: dict) -> tuple:
+    return (e["collective"], int(e["nranks"]), int(e["msg_bytes"]),
+            int(e["requests"]))
+
+
 def _sweep(path: str) -> dict:
+    """Every gated point of a results file, one flat dict: segment-sweep
+    points keyed ('seg', ...) -> predicted_s, queue-sweep points keyed
+    ('queue', ..., metric) with one entry per gated metric."""
     with open(path) as f:
         data = json.load(f)
     sweep = data.get("segment_sweep", [])
     if not sweep:
         raise SystemExit(f"{path}: no segment_sweep records — "
                          f"was the run aborted?")
-    return {_key(e): float(e["predicted_s"]) for e in sweep}
+    pts = {("seg",) + _key(e): float(e["predicted_s"]) for e in sweep}
+    for e in data.get("queue_sweep", []):
+        base = ("queue",) + _queue_key(e)
+        pts[base + ("makespan_s",)] = float(e["makespan_s"])
+        pts[base + ("serial_s",)] = float(e["serial_s"])
+    return pts
 
 
 def main(argv=None) -> int:
@@ -79,7 +95,8 @@ def main(argv=None) -> int:
         with open(args.results) as f:
             data = json.load(f)
         out = {"meta": data.get("meta", {}),
-               "segment_sweep": data["segment_sweep"]}
+               "segment_sweep": data["segment_sweep"],
+               "queue_sweep": data.get("queue_sweep", [])}
         with open(args.write_baseline, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.write_baseline}: {len(new)} sweep points")

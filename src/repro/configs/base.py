@@ -169,6 +169,13 @@ class ParallelConfig:
     # symmetric quantization — the paper's unary streaming plugin applied
     # to cache storage; beyond-paper decode-memory optimization)
     kv_cache_dtype: str = "param"
+    # gradient sync through the engine's request queue: every bucket's
+    # allreduce is ISSUED non-blocking (engine.itree_allreduce) before
+    # any is waited, so buckets across sync groups sit in the CCLO-style
+    # command queue together — small same-dtype buckets coalesce and the
+    # drain overlaps independent buckets' latency (bitwise-identical to
+    # the blocking path by the queue's coalescing eligibility rule).
+    async_grad_sync: bool = True
 
 
 ASSIGNED_ARCHS = (

@@ -7,6 +7,7 @@ Public API:
     Communicator         rank group over a mesh axis
     Schedule/Step/Sel    microcode IR (compiles to a Program)
     Program              the micro-op IR (core/program.py)
+    Sequencer/Request    the collective offload queue (engine.issue(...))
     register_collective  out-of-tree collectives, no engine changes needed
 """
 from repro.core import compat  # installs the jax.shard_map polyfill first
@@ -14,15 +15,17 @@ from repro.core.engine import CollectiveEngine, execute_program
 from repro.core.program import Program, compile_schedule
 from repro.core.plugins import register_collective, unregister_collective
 from repro.core.selector import Selector, Choice
+from repro.core.sequencer import Request, Sequencer
 from repro.core.topology import Communicator, axis_comm, make_mesh
 from repro.core.schedule import Schedule, Step, Sel
 from repro.core.hw_spec import HwSpec, TPU_V5E, ACCL_CLUSTER
-from repro.core import algorithms, plugins, program, simulator
+from repro.core import algorithms, plugins, program, sequencer, simulator
 
 __all__ = [
     "CollectiveEngine", "execute_program", "Program", "compile_schedule",
     "register_collective", "unregister_collective", "Selector", "Choice",
+    "Request", "Sequencer",
     "Communicator", "axis_comm", "make_mesh", "Schedule", "Step", "Sel",
     "HwSpec", "TPU_V5E", "ACCL_CLUSTER", "algorithms", "plugins", "program",
-    "simulator", "compat",
+    "sequencer", "simulator", "compat",
 ]

@@ -613,6 +613,59 @@ def execute_program(prog: Program, buf, axis: str, *,
 # Engine
 # --------------------------------------------------------------------------
 
+def _bucket_leaves(leaves, cap: int) -> list:
+    """dtype-grouped, size-capped buckets over leaf indices — the ONE
+    bucketing rule both `tree_allreduce` and `itree_allreduce` apply
+    (grad_sync asserts the two paths bitwise-identical, so the rule must
+    not fork)."""
+    groups: dict = {}
+    for i, leaf in enumerate(leaves):
+        groups.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+    buckets: list[list[int]] = []
+    for dtype, idxs in groups.items():
+        cur, cur_bytes = [], 0
+        for i in idxs:
+            nbytes = leaves[i].size * dtype.itemsize
+            if cur and cur_bytes + nbytes > cap:
+                buckets.append(cur)
+                cur, cur_bytes = [], 0
+            cur.append(i)
+            cur_bytes += nbytes
+        if cur:
+            buckets.append(cur)
+    return buckets
+
+
+def _fuse_bucket(leaves, idxs):
+    return (leaves[idxs[0]].reshape(-1) if len(idxs) == 1
+            else jnp.concatenate([leaves[i].reshape(-1) for i in idxs]))
+
+
+def _scatter_bucket(leaves, idxs, buf, out) -> None:
+    off = 0
+    for i in idxs:
+        leaf = leaves[i]
+        out[i] = buf[off:off + leaf.size].reshape(leaf.shape)
+        off += leaf.size
+
+
+@dataclasses.dataclass
+class _TreeTicket:
+    """Handle for an in-flight `itree_allreduce`: the bucket requests
+    sit in the engine's queue until `wait()` drains them and scatters
+    the fused buffers back into the tree."""
+
+    treedef: object
+    leaves: list
+    plan: list                      # [(leaf indices, Request), ...]
+
+    def wait(self):
+        out: list = [None] * len(self.leaves)
+        for idxs, req in self.plan:
+            _scatter_bucket(self.leaves, idxs, req.wait(), out)
+        return jax.tree.unflatten(self.treedef, out)
+
+
 def _flatten_pad(x, mult: int):
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % mult
@@ -666,10 +719,21 @@ class CollectiveEngine:
     # control-plane telemetry, asserted on by tests
     stats: dict = dataclasses.field(
         default_factory=lambda: {"gen_calls": 0, "sched_cache_hits": 0})
+    # lazily created request queue (core/sequencer.py) — the CCLO's
+    # offload command queue behind the non-blocking `issue` API
+    _queue: object = dataclasses.field(default=None, repr=False)
 
     # -- infrastructure ------------------------------------------------------
     def comm(self, axis: str) -> Communicator:
         return axis_comm(self.mesh, axis, self.hw)
+
+    @property
+    def queue(self):
+        """The engine's `Sequencer` (created on first use)."""
+        if self._queue is None:
+            from repro.core.sequencer import Sequencer
+            self._queue = Sequencer(self)
+        return self._queue
 
     def _cached_schedule(self, collective: str, algorithm: str,
                          comm: Communicator, root: int, op: str) -> Schedule:
@@ -910,6 +974,51 @@ class CollectiveEngine:
         """Engine invocation NOP (fig8 latency benchmark)."""
         return jnp.zeros((), jnp.int32)
 
+    # -- non-blocking request API (the collective offload queue) -------------
+    def issue(self, collective: str, x, axis: str, *, after=None,
+              **kwargs):
+        """Enqueue a collective without executing it; returns a `Request`
+        handle immediately (the CCLO request-queue contract — paper use
+        case 1). `x` may be an array or another `Request` (a dependency
+        edge: this call consumes that request's result). Materialize
+        with `Request.wait()` or `engine.queue.drain()`; the queue keeps
+        per-communicator FIFO order, infers conflict edges from buffer
+        identity (override with `after=`), and coalesces consecutive
+        small same-(op, dtype) reductions into one bucketed program —
+        see `core/sequencer.py`. Keywords are those of the blocking
+        method (`op`, `root`, `algorithm`, `compression`, `segments`).
+        """
+        return self.queue.issue(collective, x, axis, after=after,
+                                **kwargs)
+
+    def iallreduce(self, x, axis: str, **kwargs):
+        """Non-blocking `allreduce` (MPI_Iallreduce analogue)."""
+        return self.issue("allreduce", x, axis, **kwargs)
+
+    def ireduce_scatter(self, x, axis: str, **kwargs):
+        """Non-blocking `reduce_scatter`."""
+        return self.issue("reduce_scatter", x, axis, **kwargs)
+
+    def iallgather(self, x, axis: str, **kwargs):
+        """Non-blocking `allgather`."""
+        return self.issue("allgather", x, axis, **kwargs)
+
+    def ibcast(self, x, axis: str, **kwargs):
+        """Non-blocking `bcast`."""
+        return self.issue("bcast", x, axis, **kwargs)
+
+    def ireduce(self, x, axis: str, **kwargs):
+        """Non-blocking `reduce`."""
+        return self.issue("reduce", x, axis, **kwargs)
+
+    def ialltoall(self, x, axis: str, **kwargs):
+        """Non-blocking `alltoall`."""
+        return self.issue("alltoall", x, axis, **kwargs)
+
+    def icollective(self, name: str, x, axis: str, **kwargs):
+        """Non-blocking plugin-registered collective (`collective`)."""
+        return self.issue(name, x, axis, **kwargs)
+
     # -- hierarchical multi-axis collectives (multi-pod path) ----------------
     def allreduce_multi(self, x, axes: Sequence[str], op: str = "add",
                         algorithm: str = "auto",
@@ -1123,35 +1232,35 @@ class CollectiveEngine:
         if not leaves:
             return tree
         cap = bucket_bytes if bucket_bytes is not None else self.BUCKET_BYTES
-
-        # dtype-grouped, size-capped buckets over leaf indices
-        groups: dict = {}
-        for i, leaf in enumerate(leaves):
-            groups.setdefault(jnp.dtype(leaf.dtype), []).append(i)
-        buckets: list[list[int]] = []
-        for dtype, idxs in groups.items():
-            cur, cur_bytes = [], 0
-            for i in idxs:
-                nbytes = leaves[i].size * dtype.itemsize
-                if cur and cur_bytes + nbytes > cap:
-                    buckets.append(cur)
-                    cur, cur_bytes = [], 0
-                cur.append(i)
-                cur_bytes += nbytes
-            if cur:
-                buckets.append(cur)
-
         out: list = [None] * len(leaves)
-        for idxs in buckets:
-            buf = (leaves[idxs[0]].reshape(-1) if len(idxs) == 1
-                   else jnp.concatenate([leaves[i].reshape(-1)
-                                         for i in idxs]))
-            buf = self.allreduce_multi(buf, axes, op=op,
-                                       algorithm=algorithm,
+        for idxs in _bucket_leaves(leaves, cap):
+            buf = self.allreduce_multi(_fuse_bucket(leaves, idxs), axes,
+                                       op=op, algorithm=algorithm,
                                        compression=compression)
-            off = 0
-            for i in idxs:
-                leaf = leaves[i]
-                out[i] = buf[off:off + leaf.size].reshape(leaf.shape)
-                off += leaf.size
+            _scatter_bucket(leaves, idxs, buf, out)
         return jax.tree.unflatten(treedef, out)
+
+    def itree_allreduce(self, tree, axes: Sequence[str], op: str = "add",
+                        compression: Optional[str] = None,
+                        algorithm: str = "auto",
+                        bucket_bytes: Optional[int] = None):
+        """Non-blocking `tree_allreduce`: every bucket's hierarchical
+        allreduce is ISSUED into the request queue up front and a ticket
+        is returned; `ticket.wait()` drains the requests and rebuilds
+        the tree. Because a caller can collect several tickets before
+        waiting any (the trainer's gradient sync does exactly this), all
+        buckets across all calls sit in the queue together — small
+        same-dtype buckets coalesce into one program and the makespan
+        model prices their drain as one overlapped queue instead of a
+        blocking sequence."""
+        leaves, treedef = jax.tree.flatten(tree)
+        if not leaves:
+            return _TreeTicket(treedef=treedef, leaves=[], plan=[])
+        cap = bucket_bytes if bucket_bytes is not None else self.BUCKET_BYTES
+        plan = []
+        for idxs in _bucket_leaves(leaves, cap):
+            req = self.queue.issue_multi(_fuse_bucket(leaves, idxs), axes,
+                                         op=op, algorithm=algorithm,
+                                         compression=compression)
+            plan.append((idxs, req))
+        return _TreeTicket(treedef=treedef, leaves=leaves, plan=plan)

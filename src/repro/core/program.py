@@ -360,11 +360,37 @@ class Program:
         to the retired schedule-walk `predict_time` — asserted (with the
         intentional divergences) by the golden pricing tests.
         """
+        return self._cost_walk(msg_bytes, comm, elem_bytes)[0] \
+            / self.overlap_factor
+
+    def cost_terms(self, msg_bytes: float, comm,
+                   elem_bytes: int = 4) -> tuple:
+        """`cost` decomposed as (latency_s, wire_s).
+
+        latency_s collects every per-hop alpha term of the walk; wire_s
+        collects the bandwidth-occupancy terms (bytes / bw). Their sum is
+        `cost` up to summation rounding (the same multiplicities, floors,
+        and region drains apply to both halves, each already divided by
+        `overlap_factor`). The queue-level makespan model
+        (`core/sequencer.py`) composes these: wire occupancy of requests
+        sharing one communicator's links serializes, while the alpha
+        half of a QUEUED request hides behind the wire time of the one
+        in flight.
+        """
+        _total, lat, wire = self._cost_walk(msg_bytes, comm, elem_bytes)
+        return lat / self.overlap_factor, wire / self.overlap_factor
+
+    def _cost_walk(self, msg_bytes: float, comm, elem_bytes: int) -> tuple:
+        """(total, latency, wire) over the ops. `total` accumulates in
+        the exact historical order (golden parity is asserted bitwise);
+        the split halves accumulate alongside it."""
         alpha = comm.hop_latency
         bw = comm.link_bw
         floor = comm.min_segment_bytes
         total = 0.0
-        drains: dict = {}          # region id -> [k_max, t_max]
+        lat = 0.0
+        wir = 0.0
+        drains: dict = {}          # region id -> [k_max, t_max, a_max, b_max]
         for mult, k, body, region in self.exchange_terms():
             scale = 1.0
             send = None
@@ -379,16 +405,24 @@ class Program:
             k_eff = int(k)
             while k_eff > 1 and wire / k_eff < floor:
                 k_eff -= 1
-            t = alpha + wire / (k_eff * bw)
+            b = wire / (k_eff * bw)
+            t = alpha + b
             if region is not None:
                 total += mult * t
-                d = drains.setdefault(region, [1, 0.0])
+                lat += mult * alpha
+                wir += mult * b
+                d = drains.setdefault(region, [1, 0.0, 0.0, 0.0])
                 d[0] = max(d[0], k_eff)
-                d[1] = max(d[1], t)
+                if t > d[1]:
+                    d[1], d[2], d[3] = t, alpha, b
             else:
                 total += mult * k_eff * t
-        total += sum((k_r - 1) * t_r for k_r, t_r in drains.values())
-        return total / self.overlap_factor
+                lat += mult * k_eff * alpha
+                wir += mult * k_eff * b
+        total += sum((k_r - 1) * t_r for k_r, t_r, _a, _b in drains.values())
+        lat += sum((k_r - 1) * a_r for k_r, _t, a_r, _b in drains.values())
+        wir += sum((k_r - 1) * b_r for k_r, _t, _a, b_r in drains.values())
+        return total, lat, wir
 
 
 # --------------------------------------------------------------------------

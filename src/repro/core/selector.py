@@ -24,7 +24,7 @@ from typing import Optional
 
 from repro.core import algorithms as algos
 from repro.core import plugins
-from repro.core.program import Program, Stream, StreamChain
+from repro.core.program import Program, Stream, StreamChain, fit_segments
 from repro.core.schedule import Schedule
 from repro.core.topology import Communicator
 
@@ -231,6 +231,47 @@ class Selector:
                        for op in schedule.compile(segments=k).ops)]
         return tuple(out) or (1,)
 
+    def fit_candidate_segments(self, schedule: Schedule, msg_bytes: int,
+                               seg_space, codec: Optional[str] = None,
+                               elem_bytes: int = 4) -> tuple:
+        """Clamp candidate segment counts to what the executor will admit.
+
+        The data plane clamps every requested count through
+        `fit_segments` at trace time (divisor of the payload, whole codec
+        scale blocks). Pricing a count the executor will then shrink
+        would make `Choice.segments` a fiction — the engine would run
+        fewer segments than were priced (the old ROADMAP "prices
+        requested k" item). The engine flattens and pads the message to
+        a multiple of `schedule.chunks`, so every contiguous payload is
+        a whole multiple of the chunk size: a count that divides the
+        chunk size divides every step's payload, and the executor admits
+        it unchanged. Clamping here (duplicates dropped, order kept)
+        makes the priced k and the executed k agree by construction.
+
+        Known remainder: `alltoall` keeps its caller's 2-D shape, so its
+        payload grid is leading-dim rows rather than the flat element
+        grid priced here — an indivisible leading dim can still clamp at
+        trace time (see ROADMAP open items).
+        """
+        elems = max(1, int(msg_bytes) // max(1, int(elem_bytes)))
+        if schedule.collective in ("allgather", "gather"):
+            # gathers price the per-rank SHARD (`msg_bytes`) but execute
+            # on the nranks*shard buffer, whose chunk IS one shard — the
+            # executable grid is the shard itself, not shard/chunks
+            csize = elems
+        else:
+            csize = (elems + (-elems) % schedule.chunks) // schedule.chunks
+        block = 1
+        if codec is not None:
+            block = plugins.get_codec(codec).block_elems
+        out, seen = [], set()
+        for k in seg_space:
+            kf = fit_segments(csize, int(k), 1, block)
+            if kf not in seen:
+                seen.add(kf)
+                out.append(kf)
+        return tuple(out)
+
     def candidates(self, collective: str, comm: Communicator):
         if comm.size < 2:
             return
@@ -294,6 +335,10 @@ class Selector:
                          and tuned_segs is not None
                          else self.admissible_segments(
                              sched, msg_bytes, comm, codec, elem_bytes))
+            # price only counts the executor will actually run (the
+            # trace-time fit_segments clamp, applied before pricing)
+            seg_space = self.fit_candidate_segments(
+                sched, msg_bytes, seg_space, codec, elem_bytes)
             tuned_best: Optional[Choice] = None
             for k in seg_space:
                 # ONE compiled artifact per candidate: compiling through

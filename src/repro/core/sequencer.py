@@ -1,0 +1,615 @@
+"""Collective offload sequencer — the CCLO request queue (§5, use case 1).
+
+ACCL+'s second headline role is the *collective offload engine*: a CPU
+application enqueues non-blocking collective calls into the CCLO's
+request queue and overlaps its own compute while the engine drains the
+outstanding operations (the distributed vector-matrix use case). This
+module is that queue for our reproduction:
+
+  CollectiveEngine.issue(...) -> Request     enqueue, return immediately
+  Request.wait() / Sequencer.drain()         materialize results
+  Sequencer.makespan(axis)                   queue-level pricing
+
+The `Sequencer` tracks outstanding requests per communicator (mesh axis)
+with FIFO ordering — the CCLO pops its command queue in order — plus
+cross-request dependency edges: two requests naming the same buffer
+object conflict (the queue must not reorder them), a request whose
+operand IS another `Request` depends on that request's result, and
+`after=` overrides the inference. Materializing a request materializes
+its FIFO prefix on the same communicator and the dependency closure
+across communicators, so conflicting requests never reorder.
+
+Coalescing (the paper's offload win for many tiny CPU-side calls):
+consecutive queued small same-(axis, op, dtype) reductions collapse into
+ONE bucketed program before compile — one alpha, one selector choice,
+one wire crossing for the whole bucket. Coalescing is bitwise-neutral
+by construction: a bucket forms only when every member AND the combined
+bucket resolve to an algorithm whose elementwise combine order is
+independent of element position and message size (`ORDER_SAFE` — the
+SEL_ALL pairwise hypercube exchanges: every element is reduced by the
+identical sequence of adds wherever it sits), so slicing the bucketed
+result reproduces the unbucketed bits exactly.
+
+Queue-level pricing (`makespan`) composes the per-program split cost
+(`Program.cost_terms`) the same way the data plane's fill/drain model
+prices segments: requests sharing one communicator serialize their WIRE
+occupancy (one set of links), while the per-hop alpha/handshake half of
+a *queued* request hides behind the wire time of the one in flight —
+non-blocking issue keeps the queue primed, so the control plane never
+re-enters the loop between requests. Nothing hides along a dependency
+chain: dependent requests serialize their full costs, and the longest
+chain lower-bounds the makespan:
+
+    makespan = max( max over dependency chains of sum(full_i),
+                    sum_i wire_i + max_i latency_i )
+
+For a queue of independent requests this sits strictly below the sum of
+blocking `Program.cost`s (all but one request's alpha is hidden); for a
+fully serial chain it degenerates to exactly that sum — no credit the
+drain cannot cash, mirroring the split segment-pricing model.
+
+The numpy simulator executes drained queues over per-rank buffers
+(`simulate_drain`) through the SAME compiled programs the pricing walks
+(`simulator.run_collective`), so makespan and execution are validated
+against one artifact. A sequencer drains either through its engine
+(inside a trace) or through the simulator — not both.
+
+Trace-time contract: requests issued inside a traced function hold
+tracers and MUST be waited/drained before the trace ends (the engine's
+MPI-like calls are trace-time too; the queue only defers them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+
+def _size_of(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def _result_shape(collective: str, shape: tuple, nranks: int) -> tuple:
+    """Static result shape of an engine collective (engine.py wrappers).
+
+    Custom (plugin-registered) collectives are priced/chained at their
+    operand shape — good enough for the queue model; their materialized
+    result follows the schedule's own convention."""
+    size = _size_of(shape)
+    if collective == "reduce_scatter":
+        return (size // nranks,)
+    if collective in ("allgather", "gather"):
+        return (size * nranks,)
+    return tuple(shape)
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    """Handle for one queued collective — the CCLO request-queue entry.
+
+    `operand` is the issuing array (or another Request, a dependency
+    edge); `kwargs` are the engine-call keywords (op, root, algorithm,
+    compression, segments). `shape`/`dtype` are the STATIC result
+    signature — known at issue time, so the queue prices and chains
+    requests without materializing anything.
+    """
+
+    rid: int
+    collective: str
+    axis: str
+    operand: object
+    kwargs: dict
+    shape: tuple
+    dtype: object
+    deps: tuple = ()
+    _seq: object = dataclasses.field(default=None, repr=False)
+    _pre: object = dataclasses.field(default=None, repr=False)
+    _post: object = dataclasses.field(default=None, repr=False)
+    _done: bool = dataclasses.field(default=False, repr=False)
+    _result: object = dataclasses.field(default=None, repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def msg_bytes(self) -> int:
+        """Bytes of the ISSUED payload (the wire-pricing size). Works
+        for array and Request operands alike — both carry a static
+        shape."""
+        return _size_of(self.operand.shape) * np.dtype(self.dtype).itemsize
+
+    @property
+    def result(self):
+        if not self._done:
+            raise ValueError(f"request {self.rid} not materialized; "
+                             f"call wait() or Sequencer.drain()")
+        return self._result
+
+    def wait(self):
+        """Materialize this request (and, by FIFO + dependency order,
+        everything that must execute before it). Returns the result."""
+        return self._seq._materialize(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanItem:
+    """One drain step: a single request, or a coalesced bucket of >= 2."""
+
+    requests: tuple
+
+    @property
+    def coalesced(self) -> bool:
+        return len(self.requests) > 1
+
+    @property
+    def msg_bytes(self) -> int:
+        return sum(r.msg_bytes for r in self.requests)
+
+
+class Sequencer:
+    """Outstanding-request tracker for one `CollectiveEngine`.
+
+    Reached via `engine.queue`; `engine.issue(...)` / the `i`-prefixed
+    conveniences (`iallreduce`, ...) enqueue here.
+    """
+
+    #: per-request coalescing cap: only reductions at or below this many
+    #: payload bytes bucket (the offload win is many tiny CPU-side calls;
+    #: large requests already amortize their alpha).
+    COALESCE_BYTES = 64 * 1024
+
+    #: algorithms whose elementwise combine order is independent of both
+    #: element position and message size: every step exchanges and
+    #: combines the FULL buffer pairwise (SEL_ALL), so element i of a
+    #: coalesced bucket sees the identical sequence of fp adds it would
+    #: see uncoalesced — the bitwise-neutrality precondition. Chunked
+    #: algorithms (rings, halving/doubling) order each element's
+    #: reduction by its chunk index and may NOT coalesce.
+    ORDER_SAFE_ALGORITHMS = frozenset({"recursive_doubling"})
+
+    def __init__(self, engine, coalesce_bytes: int = COALESCE_BYTES):
+        self.engine = engine
+        self.coalesce_bytes = int(coalesce_bytes)
+        self._queues: dict = {}        # axis -> list[Request] (FIFO)
+        self._rids = itertools.count()
+        self._buffer_owner: dict = {}  # id(array) -> last touching Request
+        # control-plane telemetry, asserted on by tests / trainer logs
+        self.stats = {"issued": 0, "executed": 0,
+                      "coalesced_buckets": 0, "coalesced_requests": 0}
+
+    # -- enqueue -------------------------------------------------------------
+    def issue(self, collective: str, x, axis: str, *, after=None,
+              _pre=None, _post=None, _shape=None, **kwargs) -> Request:
+        """Enqueue a collective; returns a `Request` handle immediately.
+
+        `x` is the operand array, or another `Request` (its result feeds
+        this call — a structural DATAFLOW edge the queue always keeps).
+        Ordering conflicts are additionally inferred from buffer
+        identity: a request whose operand IS the same array object as an
+        outstanding request's will not reorder past it. `after=` (an
+        iterable of Requests) overrides that inference with explicit
+        edges — it never removes a dataflow edge, since the drain must
+        materialize the operand regardless and the makespan model may
+        not credit overlap the drain cannot cash. Remaining keywords are
+        forwarded to the blocking engine call at drain time.
+        """
+        if isinstance(x, Request):
+            if x._seq is not self:
+                raise ValueError("operand request belongs to a different "
+                                 "sequencer")
+            in_shape, dtype = x.shape, x.dtype
+            structural = () if x._done else (x,)
+            inferred = ()
+        else:
+            in_shape, dtype = tuple(x.shape), np.dtype(x.dtype)
+            structural = ()
+            owner = self._buffer_owner.get(id(x))
+            inferred = (owner,) if owner is not None and not owner._done \
+                else ()
+        if after is None:
+            deps = structural + inferred
+        else:
+            extra = tuple(r for r in after if not r._done)
+            for r in extra:
+                if r._seq is not self:
+                    raise ValueError("after= request belongs to a "
+                                     "different sequencer")
+            deps = structural + tuple(r for r in extra
+                                      if r not in structural)
+        n = self.engine.comm(axis).size
+        shape = tuple(_shape) if _shape is not None \
+            else _result_shape(collective, in_shape, n)
+        req = Request(rid=next(self._rids), collective=collective,
+                      axis=axis, operand=x, kwargs=dict(kwargs),
+                      shape=shape, dtype=dtype, deps=deps, _seq=self,
+                      _pre=_pre, _post=_post)
+        if not isinstance(x, Request):
+            self._buffer_owner[id(x)] = req
+        self._queues.setdefault(axis, []).append(req)
+        self.stats["issued"] += 1
+        return req
+
+    def issue_multi(self, x, axes, op: str = "add",
+                    algorithm: str = "auto",
+                    compression: Optional[str] = None) -> Request:
+        """Non-blocking hierarchical allreduce: `engine.allreduce_multi`
+        as a request chain (RS over axes[0] -> recurse -> AG back), each
+        stage a queued request depending on the previous one. The
+        returned request's wait() yields the fully reduced array in the
+        operand's shape."""
+        eng = self.engine
+        axes = [a for a in axes if eng.mesh.shape[a] > 1]
+        src_shape = x.shape if isinstance(x, Request) else tuple(x.shape)
+        if not axes:
+            # degenerate communicator: nothing moves. A Request operand
+            # IS the answer (do not wait it here — issue never blocks);
+            # an array operand is wrapped as an already-done request so
+            # callers treat every leaf uniformly.
+            if isinstance(x, Request):
+                return x
+            return Request(rid=next(self._rids), collective="allreduce",
+                           axis="", operand=x, kwargs={},
+                           shape=tuple(src_shape), dtype=np.dtype(x.dtype),
+                           _seq=self, _done=True, _result=x)
+        if len(axes) == 1:
+            return self.issue("allreduce", x, axes[0], op=op,
+                              algorithm=algorithm, compression=compression)
+        n0 = eng.mesh.shape[axes[0]]
+        size = _size_of(src_shape)
+        pad = (-size) % n0
+
+        def pre(v, pad=pad):
+            import jax.numpy as jnp
+            flat = v.reshape(-1)
+            if pad:
+                flat = jnp.concatenate(
+                    [flat, jnp.zeros((pad,), flat.dtype)])
+            return flat
+
+        r_rs = self.issue("reduce_scatter", x, axes[0], op=op,
+                          algorithm=algorithm, compression=compression,
+                          _pre=pre, _shape=((size + pad) // n0,))
+        r_mid = self.issue_multi(r_rs, axes[1:], op=op,
+                                 algorithm=algorithm,
+                                 compression=compression)
+
+        def post(v, size=size, shape=tuple(src_shape)):
+            return v[:size].reshape(shape)
+
+        return self.issue("allgather", r_mid, axes[0],
+                          algorithm=algorithm, _post=post,
+                          _shape=tuple(src_shape))
+
+    # -- queue inspection ----------------------------------------------------
+    def outstanding(self, axis: Optional[str] = None) -> list:
+        if axis is not None:
+            return list(self._queues.get(axis, ()))
+        return sorted((r for q in self._queues.values() for r in q),
+                      key=lambda r: r.rid)
+
+    def clear(self) -> None:
+        """Drop every outstanding request WITHOUT executing (model-only
+        uses: makespan sweeps over hypothetical queues)."""
+        self._queues.clear()
+        self._buffer_owner.clear()
+
+    # -- coalescing ----------------------------------------------------------
+    def _coalescible(self, r: Request) -> bool:
+        kw = r.kwargs
+        return (r.collective == "allreduce"
+                and not r.deps and r._pre is None and r._post is None
+                and not isinstance(r.operand, Request)
+                and kw.get("compression") is None
+                and kw.get("segments") is None
+                and getattr(self.engine, "backend", "microcode")
+                == "microcode"
+                and r.msg_bytes <= self.coalesce_bytes)
+
+    @staticmethod
+    def _coalesce_key(r: Request) -> tuple:
+        return (r.kwargs.get("op", "add"), np.dtype(r.dtype).str,
+                r.kwargs.get("algorithm", "auto"))
+
+    def _resolved_algorithm(self, collective: str, msg_bytes: int,
+                            comm, algorithm, codec, elem_bytes) -> str:
+        if algorithm in (None, "auto"):
+            return self.engine.selector.choose(
+                collective, msg_bytes, comm, codec=codec,
+                elem_bytes=elem_bytes).algorithm
+        return algorithm
+
+    def _bucket_safe(self, group: list, comm) -> bool:
+        """Bitwise-neutrality check: every member AND the combined
+        bucket must resolve to one ORDER_SAFE algorithm (see class
+        docstring). Resolution goes through the memoized selector, so
+        the check prices nothing new. `comm` is the communicator the
+        plan is being built FOR — the engine's own fabric when
+        draining, the caller's override when pricing a hypothetical
+        cluster — so coalescing decisions and pricing never diverge."""
+        algo_kw = group[0].kwargs.get("algorithm", "auto")
+        elem = np.dtype(group[0].dtype).itemsize
+        algos = {self._resolved_algorithm("allreduce", r.msg_bytes, comm,
+                                          algo_kw, None, elem)
+                 for r in group}
+        total = sum(r.msg_bytes for r in group)
+        algos.add(self._resolved_algorithm("allreduce", total, comm,
+                                           algo_kw, None, elem))
+        return len(algos) == 1 and algos <= self.ORDER_SAFE_ALGORITHMS
+
+    def _head_item(self, q, comm) -> PlanItem:
+        """The next drain step of queue `q`: its head request, extended
+        over the maximal run of consecutive coalescible same-key
+        followers when the bucket passes `_bucket_safe`. The greedy scan
+        is prefix-stable (a group never depends on what follows it), so
+        draining head items one at a time yields exactly the groups
+        `_partition` plans — without re-planning the whole queue per
+        executed item."""
+        r = q[0]
+        if self._coalescible(r):
+            key = self._coalesce_key(r)
+            j = 1
+            while (j < len(q) and self._coalescible(q[j])
+                   and self._coalesce_key(q[j]) == key):
+                j += 1
+            if j >= 2 and self._bucket_safe(q[:j], comm):
+                return PlanItem(requests=tuple(q[:j]))
+        return PlanItem(requests=(r,))
+
+    def _partition(self, axis: str, comm=None) -> list:
+        """The drain plan for one communicator: the FIFO queue, with
+        maximal runs of consecutive coalescible same-key requests folded
+        into buckets (consecutive => no conflicting request can sit
+        between members, so bucketing never reorders). `comm` defaults
+        to the engine's own fabric (the drain plan); pricing against a
+        different cluster passes its communicator so the plan matches
+        what THAT hardware would coalesce."""
+        comm = comm if comm is not None else self.engine.comm(axis)
+        q = list(self._queues.get(axis, ()))
+        items = []
+        while q:
+            item = self._head_item(q, comm)
+            items.append(item)
+            q = q[len(item.requests):]
+        return items
+
+    def plan(self, axis: str, comm=None) -> list:
+        """The `PlanItem` sequence `drain` will execute for `axis` —
+        the artifact `makespan` prices and `simulate_drain` runs."""
+        return self._partition(axis, comm)
+
+    # -- pricing -------------------------------------------------------------
+    def _resolve_item(self, item: PlanItem, comm):
+        """(schedule, program, msg_bytes, elem_bytes) for one plan item.
+
+        The ONE resolver pricing, simulation, and chaining share: the
+        program is the same compiled artifact the drain's blocking
+        engine call memoizes (selector choice for auto, cached schedule
+        + memoized compile for explicit algorithms); the schedule rides
+        along for the simulator's result/owned_chunk conventions."""
+        r = item.requests[0]
+        kw = r.kwargs
+        collective = r.collective if not item.coalesced else "allreduce"
+        nbytes = item.msg_bytes
+        elem = np.dtype(r.dtype).itemsize
+        algorithm = kw.get("algorithm", "auto")
+        codec = kw.get("compression")
+        root, op = kw.get("root", 0), kw.get("op", "add")
+        if algorithm in (None, "auto"):
+            choice = self.engine.selector.choose(
+                collective, nbytes, comm, codec=codec, elem_bytes=elem)
+            if root == 0 and op == "add":
+                return choice.schedule, choice.program, nbytes, elem
+            # the selector priced the root=0/op='add' schedule; the
+            # drain executes the chosen ALGORITHM rebuilt for this
+            # request's root/op (the same rule as engine._resolve)
+            algorithm, segments = choice.algorithm, choice.segments
+        else:
+            segments = kw.get("segments") or 1
+        sched = self.engine._cached_schedule(
+            collective, algorithm, comm, root, op)
+        sched = sched.with_segments(segments)
+        return sched, sched.compile(codec=codec), nbytes, elem
+
+    def makespan(self, axis: str, comm=None) -> float:
+        """Predicted seconds to drain `axis`'s outstanding queue.
+
+        The queue-level pipelining model (module docstring): wire
+        occupancy serializes across the plan, queued requests' alpha
+        halves hide behind it, dependency chains serialize their full
+        costs and lower-bound the result. Priced off the same compiled
+        programs the drain executes. Cross-communicator dependencies are
+        priced on their own axis's makespan and treated as satisfied
+        here."""
+        comm = comm if comm is not None else self.engine.comm(axis)
+        items = self._partition(axis, comm)
+        if not items:
+            return 0.0
+        pos = {r: i for i, it in enumerate(items) for r in it.requests}
+        fulls, lats, wires = [], [], []
+        for it in items:
+            _sched, prog, nbytes, elem = self._resolve_item(it, comm)
+            fulls.append(prog.cost(nbytes, comm, elem_bytes=elem))
+            lat, wire = prog.cost_terms(nbytes, comm, elem_bytes=elem)
+            lats.append(lat)
+            wires.append(wire)
+        chain = [0.0] * len(items)
+        for i, it in enumerate(items):
+            best = 0.0
+            for r in it.requests:
+                for d in r.deps:
+                    j = pos.get(d)
+                    if j is not None and j < i:
+                        best = max(best, chain[j])
+            chain[i] = best + fulls[i]
+        return max(max(chain), sum(wires) + max(lats))
+
+    def serial_cost(self, axis: str, comm=None) -> float:
+        """Sum of the blocking `Program.cost`s of the outstanding
+        requests, priced individually (no coalescing, no overlap) — the
+        serial-blocking reference makespan is measured against."""
+        comm = comm if comm is not None else self.engine.comm(axis)
+        total = 0.0
+        for r in self._queues.get(axis, ()):
+            _sched, prog, nbytes, elem = self._resolve_item(
+                PlanItem(requests=(r,)), comm)
+            total += prog.cost(nbytes, comm, elem_bytes=elem)
+        return total
+
+    # -- engine drain (trace-time execution) ---------------------------------
+    def _operand_value(self, r: Request):
+        if isinstance(r.operand, Request):
+            val = self._materialize(r.operand)
+        else:
+            val = r.operand
+        return r._pre(val) if r._pre is not None else val
+
+    def _dispatch(self, r: Request, val):
+        eng = self.engine
+        if r.collective in ("allreduce", "reduce_scatter", "allgather",
+                            "bcast", "reduce", "gather", "alltoall"):
+            out = getattr(eng, r.collective)(val, r.axis, **r.kwargs)
+        else:
+            out = eng.collective(r.collective, val, r.axis, **r.kwargs)
+        return r._post(out) if r._post is not None else out
+
+    def _finish(self, r: Request, result) -> None:
+        r._result = result
+        r._done = True
+        self.stats["executed"] += 1
+        if not isinstance(r.operand, Request) \
+                and self._buffer_owner.get(id(r.operand)) is r:
+            del self._buffer_owner[id(r.operand)]
+
+    def _run_item(self, item: PlanItem) -> None:
+        for r in item.requests:
+            for d in r.deps:
+                self._materialize(d)
+        q = self._queues[item.requests[0].axis]
+        if not item.coalesced:
+            r = item.requests[0]
+            out = self._dispatch(r, self._operand_value(r))
+            self._finish(r, out)
+            q.remove(r)
+            return
+        # bucketed reduction: ONE program for the whole run — compiled,
+        # priced, and executed at the concatenated size; bitwise-neutral
+        # by the ORDER_SAFE eligibility check
+        import jax.numpy as jnp
+        flats = [self._operand_value(r).reshape(-1) for r in item.requests]
+        buf = jnp.concatenate(flats)
+        r0 = item.requests[0]
+        out = self.engine.allreduce(buf, r0.axis, **r0.kwargs)
+        off = 0
+        for r, flat in zip(item.requests, flats):
+            n = flat.shape[0]
+            self._finish(r, out[off:off + n].reshape(r.operand.shape))
+            off += n
+            q.remove(r)
+        self.stats["coalesced_buckets"] += 1
+        self.stats["coalesced_requests"] += len(item.requests)
+
+    def _materialize(self, req: Request):
+        if req._seq is not self:
+            raise ValueError("request belongs to a different sequencer")
+        if not req._done and req not in self._queues.get(req.axis, ()):
+            raise ValueError(f"request {req.rid} is not outstanding")
+        while not req._done:
+            comm = self.engine.comm(req.axis)
+            self._run_item(self._head_item(self._queues[req.axis], comm))
+        return req._result
+
+    def drain(self, axis: Optional[str] = None) -> list:
+        """Materialize every outstanding request (on `axis`, or all
+        communicators in global issue order). Returns the drained
+        requests; results hang off each `Request.result`."""
+        drained = []
+        if axis is not None:
+            comm = self.engine.comm(axis)
+            while self._queues.get(axis):
+                item = self._head_item(self._queues[axis], comm)
+                drained.extend(item.requests)
+                self._run_item(item)
+            return drained
+        for r in self.outstanding():
+            if not r._done:
+                self._materialize(r)
+            drained.append(r)
+        return drained
+
+    # -- simulator drain (numpy validation path) -----------------------------
+    def simulate_drain(self, feeds: dict) -> dict:
+        """Drain the whole queue in the numpy simulator.
+
+        `feeds` maps each leaf request (array operand) to its per-rank
+        input list; requests whose operand is another Request consume
+        that request's simulated per-rank results. Executes plan items
+        in global issue order — per-communicator FIFO plus dependency
+        order, exactly the engine drain's discipline — through
+        `simulator.run_collective` on the SAME compiled programs
+        `makespan` prices. Returns {request: per-rank result list} and
+        marks the requests done (a simulated sequencer is spent; use a
+        fresh one per engine drain)."""
+        from repro.core import simulator as sim
+        if any(r._pre is not None or r._post is not None
+               for q in self._queues.values() for r in q):
+            raise NotImplementedError(
+                "simulate_drain does not execute issue_multi chains "
+                "(their pad/trim hooks are trace-time jnp closures)")
+        results: dict = {}
+        while any(self._queues.values()):
+            # global issue order: among queue heads, run the item whose
+            # head request was issued first — dependencies always point
+            # at earlier rids, so their communicator's head is scheduled
+            # before the dependent request can reach its own head slot
+            axis = min((a for a, q in self._queues.items() if q),
+                       key=lambda a: self._queues[a][0].rid)
+            comm = self.engine.comm(axis)
+            item = self._head_item(self._queues[axis], comm)
+            sched, prog, _nbytes, _elem = self._resolve_item(item, comm)
+            vals = []
+            for r in item.requests:
+                if isinstance(r.operand, Request):
+                    vals.append(results[r.operand])
+                else:
+                    vals.append(feeds[r])
+            q = self._queues[axis]
+            if item.coalesced:
+                n = comm.size
+                cat = [np.concatenate([v[rank].reshape(-1)
+                                       for v in vals])
+                       for rank in range(n)]
+                r0 = item.requests[0]
+                outs = sim.run_collective(
+                    "allreduce", sched, prog, cat,
+                    root=r0.kwargs.get("root", 0))
+                off = 0
+                for r, v in zip(item.requests, vals):
+                    ln = v[0].size
+                    per = [outs[rank][off:off + ln].reshape(
+                        v[rank].shape) for rank in range(n)]
+                    results[r] = per
+                    self._finish(r, per)
+                    q.remove(r)
+                    off += ln
+                self.stats["coalesced_buckets"] += 1
+                self.stats["coalesced_requests"] += len(item.requests)
+            else:
+                r = item.requests[0]
+                for d in r.deps:
+                    if not d._done:
+                        raise AssertionError(
+                            "global-order drain reached a request before "
+                            "its dependency — sequencer invariant broken")
+                outs = sim.run_collective(
+                    r.collective, sched, prog, vals[0],
+                    root=r.kwargs.get("root", 0))
+                results[r] = outs
+                self._finish(r, outs)
+                q.remove(r)
+        return results

@@ -315,6 +315,76 @@ def simulate_with_cost(schedule: Schedule, inputs: list, comm,
     return bufs, prog.cost(msg_bytes, comm, elem_bytes=elem_bytes)
 
 
+def _flatten_pad(x: np.ndarray, mult: int):
+    """numpy mirror of the engine's `_flatten_pad` staging copy."""
+    flat = np.asarray(x).reshape(-1)
+    pad = (-flat.shape[0]) % mult
+    if pad:
+        flat = np.concatenate([flat, np.zeros((pad,), flat.dtype)])
+    return flat, x.shape, x.size
+
+
+def run_collective(collective: str, schedule: Schedule, prog: Program,
+                   inputs: list, root: int = 0) -> list:
+    """Execute one ENGINE-CONVENTION collective call over per-rank numpy
+    buffers: the same flatten/pad staging, result trimming, and
+    shard/root slicing the `CollectiveEngine` wrappers apply around
+    `execute_program`, so a simulated call is comparable element-for-
+    element with the jax engine's return value. Used by the sequencer's
+    `simulate_drain` to validate queue drains against the same compiled
+    program the makespan model prices. Returns per-rank results."""
+    n = prog.nranks
+    if len(inputs) != n:
+        raise ValueError(f"need {n} rank buffers, got {len(inputs)}")
+    if collective == "alltoall":
+        arrs = [np.asarray(b) for b in inputs]
+        if arrs[0].shape[0] % n:
+            raise ValueError(
+                f"alltoall dim0 {arrs[0].shape[0]} % {n} != 0")
+        return execute_program(prog, arrs)
+    if collective == "reduce_scatter":
+        flats = [np.asarray(b).reshape(-1) for b in inputs]
+        if flats[0].size % n:
+            raise ValueError(
+                f"reduce_scatter size {flats[0].size} % {n} != 0")
+        outs = execute_program(prog, flats)
+        csize = flats[0].shape[0] // n
+        return [outs[r][int(schedule.owned_chunk(r)) * csize:
+                        (int(schedule.owned_chunk(r)) + 1) * csize]
+                for r in range(n)]
+    if collective in ("allgather", "gather"):
+        flats = [np.asarray(b).reshape(-1) for b in inputs]
+        fl = flats[0].shape[0]
+        bufs = []
+        for r in range(n):
+            slot = r if (collective == "allgather"
+                         or schedule.chunk_coords == "absolute") \
+                else (r - root) % n
+            buf = np.zeros((n * fl,), flats[r].dtype)
+            buf[slot * fl:(slot + 1) * fl] = flats[r]
+            bufs.append(buf)
+        outs = execute_program(prog, bufs)
+        if collective == "gather" and schedule.chunk_coords == "relative":
+            outs = [np.roll(o.reshape(n, fl), root, axis=0).reshape(-1)
+                    for o in outs]
+        return outs
+    # allreduce / reduce / bcast / custom collectives: pad to the chunk
+    # grid, run, then trim (full results) or slice the owned chunk
+    staged = [_flatten_pad(b, prog.chunks) for b in inputs]
+    outs = execute_program(prog, [s[0] for s in staged])
+    if schedule.result == "shard":
+        if staged[0][2] % prog.chunks:
+            raise ValueError(
+                f"{collective} returns shards: input size {staged[0][2]} "
+                f"must be divisible by {prog.chunks} chunks")
+        csize = staged[0][0].shape[0] // prog.chunks
+        return [outs[r][int(schedule.owned_chunk(r)) * csize:
+                        (int(schedule.owned_chunk(r)) + 1) * csize]
+                for r in range(n)]
+    return [outs[r][:staged[r][2]].reshape(staged[r][1])
+            for r in range(n)]
+
+
 # ---------------------------------------------------------------------------
 # Numpy oracles (what each collective should produce)
 # ---------------------------------------------------------------------------

@@ -9,9 +9,12 @@ software-MPI baseline).
 Gradient sync rule (validated in tests/test_grad_semantics.py): a param's
 gradient must be psum'd over every mesh axis absent from its PartitionSpec.
 Leaves are bucketed by their missing-axis set and synced with ONE fused
-engine.tree_allreduce per bucket (gradient bucketing), optionally
+engine allreduce per bucket (gradient bucketing), optionally
 int8/bf16-compressed (the paper's unary streaming plugin as a distributed-
-optimization trick).
+optimization trick). By default the buckets go through the engine's
+non-blocking request queue (`itree_allreduce`): all groups issue before
+any waits, the paper's offload-engine enqueue-then-overlap pattern
+(`ParallelConfig.async_grad_sync`).
 """
 from __future__ import annotations
 
@@ -87,8 +90,18 @@ def init_params(cfg: ArchConfig, mesh, tp: int, seed: int = 0):
 # --------------------------------------------------------------------------
 
 def grad_sync(grads, specs, ctx: ParCtx,
-              compression: Optional[str] = None):
+              compression: Optional[str] = None,
+              use_queue: bool = True):
     """Bucketed, engine-routed gradient synchronization.
+
+    With `use_queue` (`ParallelConfig.async_grad_sync`), every sync
+    group's bucketed allreduces are ISSUED into the engine's request
+    queue first (`itree_allreduce` — the non-blocking CCLO offload
+    path) and only then waited: all gradient buckets sit in the queue
+    together, so small same-dtype buckets coalesce into one program and
+    independent buckets drain back-to-back without per-call re-entry.
+    The queue's coalescing eligibility rule makes this bitwise-identical
+    to the blocking path.
 
     Returns (synced grads, psum-corrected local sum-of-squares for the
     global clip norm: each leaf's contribution divided by its replication
@@ -105,21 +118,36 @@ def grad_sync(grads, specs, ctx: ParCtx,
         missing = tuple(a for a in mesh_axes if a not in spec_axes(spec))
         buckets.setdefault(missing, []).append((path, leaf))
 
+    # issue phase: enqueue every sync group's bucket collectives before
+    # materializing any (the backward walk's grads are all live here, so
+    # the whole gradient exchange is outstanding at once — the paper's
+    # enqueue-then-overlap offload pattern)
+    tickets = {}
+    for missing, entries in buckets.items():
+        if not missing:
+            continue
+        leaves = [l for _, l in entries]
+        # fastest (ICI) axes first, pod (DCN) last — hierarchical AR
+        order = [a for a in ("data", "model") if a in missing] + \
+                [a for a in missing if a not in ("data", "model")]
+        if use_queue:
+            tickets[missing] = ctx.engine.itree_allreduce(
+                leaves, order, compression=compression)
+        else:
+            tickets[missing] = ctx.engine.tree_allreduce(
+                leaves, order, compression=compression)
+
     out = {}
     sq = jnp.zeros((), jnp.float32)
     for missing, entries in buckets.items():
-        leaves = [l for _, l in entries]
         repl = 1
         for a in missing:
             repl *= ctx.mesh.shape[a]
         if missing:
-            # fastest (ICI) axes first, pod (DCN) last — hierarchical AR
-            order = [a for a in ("data", "model") if a in missing] + \
-                    [a for a in missing if a not in ("data", "model")]
-            synced = ctx.engine.tree_allreduce(
-                leaves, order, compression=compression)
+            t = tickets[missing]
+            synced = t.wait() if use_queue else t
         else:
-            synced = leaves
+            synced = [l for _, l in entries]
         for (path, _), s in zip(entries, synced):
             out[tuple(path)] = s
             sq = sq + jnp.sum(jnp.square(s.astype(jnp.float32))) / repl
@@ -186,7 +214,8 @@ def build_train_step(cfg: ArchConfig, pcfg: ParallelConfig, mesh,
             loss = loss / k
             metrics = jax.tree.map(lambda m: m / k, metrics)
         grads, sq_local = grad_sync(grads, specs, ctx,
-                                    compression=pcfg.grad_compression)
+                                    compression=pcfg.grad_compression,
+                                    use_queue=pcfg.async_grad_sync)
         # global clip norm: one scalar allreduce over the whole mesh
         axes = [a for a in mesh.axis_names if mesh.shape[a] > 1]
         sq = sq_local

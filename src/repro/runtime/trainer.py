@@ -124,6 +124,21 @@ class Trainer:
                 # checkpoint-restart: fall through and resume from latest
                 continue
 
+    def _queue_stats(self):
+        """Offload-queue telemetry from the step's CollectiveEngine.
+
+        The gradient sync issues its bucket allreduces through the
+        engine's request queue (stages.grad_sync / itree_allreduce);
+        issuing happens at TRACE time, so these counters move on the
+        first step (and on any retrace) and then hold — logged so runs
+        record how many collectives rode the queue and how many
+        coalesced into bucketed programs."""
+        q = self.ts.ctx.engine._queue  # no queue was created -> no stats
+        if q is None:
+            return {}
+        return {"queue_issued": q.stats["issued"],
+                "queue_coalesced": q.stats["coalesced_requests"]}
+
     def _run_once(self):
         params, opt, start = self.restore_or_init()
         loader = make_loader(self.data_cfg, self.arch, start_step=start)
@@ -142,7 +157,8 @@ class Trainer:
                 dt = time.perf_counter() - t0
                 self.heartbeat.beat()
                 z = self.watchdog.observe(step, dt)
-                rec = {"step": step, "dt": dt, **metrics}
+                rec = {"step": step, "dt": dt, **metrics,
+                       **self._queue_stats()}
                 if z is not None:
                     rec["straggler_z"] = z
                 log.append(rec)

@@ -22,9 +22,12 @@ def _load_check_bench():
 
 @pytest.fixture(scope="module")
 def sweep_results(tmp_path_factory):
+    # --quick = the exact CI bench-gate subset (fig12 + seg_sweep +
+    # queue_sweep), so the committed baseline is checked over every
+    # gated section, not just the segment sweep
     from benchmarks import run as bench_run
     path = tmp_path_factory.mktemp("bench") / "BENCH_collectives.json"
-    returned = bench_run.main(["--only", "seg_sweep", "--json", str(path)])
+    returned = bench_run.main(["--quick", "--json", str(path)])
     on_disk = json.loads(path.read_text())
     return returned, on_disk
 
@@ -33,6 +36,7 @@ def test_json_written_and_matches_returned(sweep_results):
     returned, on_disk = sweep_results
     assert on_disk["rows"] == returned["rows"]
     assert on_disk["segment_sweep"] == returned["segment_sweep"]
+    assert on_disk["queue_sweep"] == returned["queue_sweep"]
     assert {"jax", "backend", "device_count"} <= set(on_disk["meta"])
 
 
@@ -112,6 +116,53 @@ def test_sweep_marks_streamed_programs(sweep_results):
     assert not any(e["streamed"] for e in sweep if e["segments"] == 1)
 
 
+# -- the queue sweep (offload request-queue makespan model) -------------------
+
+def test_queue_sweep_schema(sweep_results):
+    _, on_disk = sweep_results
+    queue = on_disk["queue_sweep"]
+    assert queue
+    required = {"collective", "nranks", "msg_bytes", "requests",
+                "makespan_s", "serial_s", "coalesced"}
+    for entry in queue:
+        assert required <= set(entry)
+    # every size curve includes the 1-request baseline and deeper queues
+    sizes = {e["msg_bytes"] for e in queue}
+    for s in sizes:
+        reqs = {e["requests"] for e in queue if e["msg_bytes"] == s}
+        assert 1 in reqs and max(reqs) >= 4
+
+
+def test_queue_makespan_beats_serial_iff_overlap(sweep_results):
+    """Acceptance (queue form): a queue of >= 4 independent same-axis
+    collectives prices strictly below the serial-blocking sum; a single
+    request gets no credit (makespan == its own blocking cost)."""
+    _, on_disk = sweep_results
+    deep = 0
+    for e in on_disk["queue_sweep"]:
+        if e["requests"] == 1:
+            assert e["makespan_s"] == pytest.approx(e["serial_s"],
+                                                    rel=1e-9)
+        else:
+            assert e["makespan_s"] < e["serial_s"], e
+            if e["requests"] >= 4:
+                deep += 1
+    assert deep >= 2
+
+
+def test_queue_sweep_small_requests_coalesce(sweep_results):
+    """Tiny same-(op, dtype) reductions fold into one bucketed program
+    (the paper's many-small-calls offload win); large requests never
+    bucket."""
+    _, on_disk = sweep_results
+    queue = on_disk["queue_sweep"]
+    assert any(e["coalesced"] for e in queue
+               if e["msg_bytes"] <= 64 * 1024 and e["requests"] > 1)
+    assert not any(e["coalesced"] for e in queue
+                   if e["msg_bytes"] > 64 * 1024)
+    assert not any(e["coalesced"] for e in queue if e["requests"] == 1)
+
+
 # -- the CI perf gate (scripts/check_bench.py) --------------------------------
 
 def test_check_bench_passes_against_committed_baseline(sweep_results,
@@ -140,6 +191,21 @@ def test_check_bench_fails_on_model_drift(sweep_results, tmp_path):
                 / "benchmarks" / "baseline.json")
     cb = _load_check_bench()
     assert cb.main([str(results), "--baseline", str(baseline)]) == 1
+
+
+def test_check_bench_gates_queue_metrics(sweep_results, tmp_path):
+    """queue_sweep points gate like sweep points: a drifted makespan_s
+    (or serial_s) fails the build until the baseline is refreshed."""
+    _, on_disk = sweep_results
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    for metric in ("makespan_s", "serial_s"):
+        drifted = json.loads(json.dumps(on_disk))
+        drifted["queue_sweep"][0][metric] *= 1.25
+        results = tmp_path / f"queue_drift_{metric}.json"
+        results.write_text(json.dumps(drifted))
+        assert cb.main([str(results), "--baseline", str(baseline)]) == 1
 
 
 def test_check_bench_fails_on_missing_points(sweep_results, tmp_path):

@@ -298,3 +298,62 @@ def test_registry_changes_invalidate_choose_cache():
         assert third.algorithm == "slow_ring"
     finally:
         plugins.unregister_collective("myred2")
+
+
+def test_choice_segments_always_executable_on_indivisible_payload():
+    """ROADMAP "prices requested k" item, closed: every candidate
+    segment count is clamped through `fit_segments` on the padded chunk
+    grid BEFORE pricing, so `Choice.segments` is exactly the count the
+    executor's trace-time clamp will admit — never a priced fiction the
+    data plane then shrinks."""
+    from repro.core.program import fit_segments
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    # 3^8 fp32 elements per chunk: no power-of-two count divides it, so
+    # the old selector would price (and "choose") k=2 for the streamed
+    # ring while the executor silently ran k=1
+    msg = 8 * 6561 * 4
+    c = sel.choose("allreduce", msg, comm)
+    csize = (msg // 4) // 8
+    assert csize % c.segments == 0           # executable as priced
+    assert c.segments == fit_segments(csize, c.segments)
+
+
+def test_tuned_segment_pin_clamped_to_executable_count():
+    """A tuning-table segment pin on an indivisible payload prices the
+    count the executor will actually run (the largest admissible
+    divisor), keeping cost and execution in agreement for pinned
+    deployments too."""
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    msg = 8 * 6561 * 4
+    sel.set_tuning("allreduce", "ring", segments=4)
+    c = sel.choose("allreduce", msg, comm)
+    assert c.algorithm == "ring"
+    assert c.segments == 3                   # fit_segments(6561, 4) == 3
+
+
+def test_divisible_payload_choices_unchanged_by_clamp():
+    """Power-of-two payloads (every benchmark sweep point) admit the
+    full candidate ladder: the clamp is the identity there."""
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    c = sel.choose("allreduce", 1 << 20, comm)
+    csize = ((1 << 20) // 4) // 8
+    assert csize % c.segments == 0
+    assert c.segments > 1  # large streamed message still segments
+
+
+def test_gather_shard_clamp_uses_shard_grid():
+    """Regression: allgather/gather price the per-rank SHARD but execute
+    on the nranks*shard buffer whose chunk IS one shard — the clamp must
+    fit candidates against the shard, not shard/chunks (which would
+    wrongly collapse the ladder for non-power-of-two shards)."""
+    from repro.core import algorithms as A
+    sel = Selector()
+    comm = Communicator(axis="x", size=8)
+    sched = A.ring_allgather(comm)
+    # 24-element fp32 shard: the shard grid admits 2, 4, and 8; the
+    # wrong shard/chunks grid (3 elements) would collapse to (1, 3)
+    assert sel.fit_candidate_segments(sched, 24 * 4, (1, 2, 4, 8)) == \
+        (1, 2, 4, 8)
