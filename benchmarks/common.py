@@ -30,7 +30,8 @@ def timeit(fn, *args, warmup=2, iters=10):
 # records benchmarks attach directly (segment sweeps, queue sweeps).
 # run.py serializes this into BENCH_collectives.json so the perf
 # trajectory is diffable across PRs.
-RESULTS = {"rows": [], "segment_sweep": [], "queue_sweep": []}
+RESULTS = {"rows": [], "segment_sweep": [], "queue_sweep": [],
+           "fault_sweep": []}
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -50,10 +51,16 @@ def record_queue(entry: dict):
     RESULTS["queue_sweep"].append(entry)
 
 
+def record_fault(entry: dict):
+    """Attach one structured fault-sweep record (see figures.fault_sweep)."""
+    RESULTS["fault_sweep"].append(entry)
+
+
 def reset_results():
     RESULTS["rows"].clear()
     RESULTS["segment_sweep"].clear()
     RESULTS["queue_sweep"].clear()
+    RESULTS["fault_sweep"].clear()
 
 
 def header():

@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from benchmarks.common import record_queue, record_sweep, row, timeit
+from benchmarks.common import (
+    record_fault, record_queue, record_sweep, row, timeit,
+)
 from repro.core import CollectiveEngine, Communicator, Selector
 from repro.core.hw_spec import ACCL_CLUSTER, TPU_V5E
 from repro.core.topology import make_mesh
@@ -297,6 +299,55 @@ def queue_sweep(request_counts=(1, 2, 4, 8), nranks: int = 8,
                 f"serial={serial*1e6:.1f}us "
                 f"speedup={serial/makespan:.2f}x "
                 f"items={len(plan)} coalesced={coalesced}")
+
+
+# -- Fault sweep: makespan vs drop rate per reliability tier ------------------
+
+def fault_sweep(drop_rates=(0.0, 0.01, 0.05, 0.2), nranks: int = 8,
+                sizes=(1 << 16, 1 << 22), tiers=("tcp-like", "rdma-like")):
+    """Retransmission-priced queue makespan vs segment drop rate.
+
+    Pure model (no device timing, no randomness): the same queue of four
+    independent allreduces is priced under each reliability tier's
+    truncated-geometric retransmission model — expected transmissions
+    inflate both halves of the alpha-beta cost and each expected retry
+    adds the tier's expected exponential backoff per wire crossing
+    (Program.cost with tier/drop_prob). `surcharge` is the ratio to the
+    fault-free makespan; drop_rate 0.0 must price identical to the base
+    model, which `scripts/check_bench.py` gates next to the other sweeps.
+    """
+    from repro.core.faults import TIERS
+    from repro.core.sequencer import Sequencer
+
+    mesh = make_mesh((nranks,), ("x",))
+    eng = CollectiveEngine(mesh)
+    comm = Communicator(axis="x", size=nranks)
+    for nbytes in sizes:
+        seq = Sequencer(eng)
+        for _ in range(4):
+            seq.issue("allreduce", np.zeros((nbytes // 4,), np.float32),
+                      "x")
+        base = seq.makespan("x", comm=comm)
+        for tier_name in tiers:
+            tier = TIERS[tier_name]
+            for p in drop_rates:
+                makespan = seq.makespan("x", comm=comm, tier=tier,
+                                        drop_prob=p)
+                record_fault({
+                    "collective": "allreduce",
+                    "nranks": nranks,
+                    "msg_bytes": int(nbytes),
+                    "tier": tier_name,
+                    "drop_rate": float(p),
+                    "makespan_s": makespan,
+                    "surcharge": makespan / base,
+                })
+                row(f"faultsweep/allreduce/{tier_name}/p{p:g}/"
+                    f"{nbytes>>10}KB/{nranks}ranks", makespan * 1e6,
+                    f"E={tier.expected_transmissions(p):.3f} "
+                    f"surcharge={makespan/base:.3f}x "
+                    f"retries<={tier.max_retries}")
+        seq.clear()
 
 
 # -- Fig 13: engine vs baseline (ACCL+ vs ACCL vs MPI analogue) ---------------

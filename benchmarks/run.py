@@ -35,7 +35,8 @@ def main(argv=None) -> dict:
                          "seg_sweep) instead of the full set")
     ap.add_argument("--quick", action="store_true",
                     help="run only the deterministic model benchmarks "
-                         "(fig12_scaling + seg_sweep + queue_sweep) — "
+                         "(fig12_scaling + seg_sweep + queue_sweep + "
+                         "fault_sweep) — "
                          "the CI bench-gate mode; still writes the JSON "
                          "results file")
     default_segments = ",".join(
@@ -82,6 +83,7 @@ def main(argv=None) -> dict:
         "fig13_backend_compare": figures.fig13_backend_compare,
         "seg_sweep": seg_sweep,
         "queue_sweep": figures.queue_sweep,
+        "fault_sweep": figures.fault_sweep,
         "fig16_vecmat": figures.fig16_vecmat,
         "fig17_dlrm": figures.fig17_dlrm,
         "table3_resources": figures.table3_resources,
@@ -95,7 +97,8 @@ def main(argv=None) -> dict:
         # the deterministic (pure cost-model) subset CI gates on
         benches = {"fig12_scaling": benches["fig12_scaling"],
                    "seg_sweep": benches["seg_sweep"],
-                   "queue_sweep": benches["queue_sweep"]}
+                   "queue_sweep": benches["queue_sweep"],
+                   "fault_sweep": benches["fault_sweep"]}
     for fn in benches.values():
         fn()
 
@@ -104,13 +107,15 @@ def main(argv=None) -> dict:
         "rows": list(RESULTS["rows"]),
         "segment_sweep": list(RESULTS["segment_sweep"]),
         "queue_sweep": list(RESULTS["queue_sweep"]),
+        "fault_sweep": list(RESULTS["fault_sweep"]),
     }
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=1)
         print(f"# wrote {args.json}: {len(results['rows'])} rows, "
               f"{len(results['segment_sweep'])} sweep points, "
-              f"{len(results['queue_sweep'])} queue points")
+              f"{len(results['queue_sweep'])} queue points, "
+              f"{len(results['fault_sweep'])} fault points")
     return results
 
 

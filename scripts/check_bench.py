@@ -1,12 +1,14 @@
 #!/usr/bin/env python
 """CI perf gate: fail when the predicted-time model drifts from baseline.
 
-Compares the `segment_sweep` AND `queue_sweep` records of a fresh
-benchmark run (the deterministic `python -m benchmarks.run --quick`
-output) against the committed baseline in benchmarks/baseline.json —
-sweep points gate `predicted_s`, queue points gate BOTH `makespan_s`
-(the sequencer's queue-level overlap model) and `serial_s` (the
-blocking reference it is measured against). The gate is symmetric:
+Compares the `segment_sweep`, `queue_sweep` AND `fault_sweep` records
+of a fresh benchmark run (the deterministic `python -m benchmarks.run
+--quick` output) against the committed baseline in
+benchmarks/baseline.json — sweep points gate `predicted_s`, queue
+points gate BOTH `makespan_s` (the sequencer's queue-level overlap
+model) and `serial_s` (the blocking reference it is measured against),
+fault points gate the retransmission-priced `makespan_s` per
+(tier, drop_rate). The gate is symmetric:
 
   * every baseline point must still exist (MISSING fails — coverage must
     not silently shrink),
@@ -48,6 +50,11 @@ def _queue_key(e: dict) -> tuple:
             int(e["requests"]))
 
 
+def _fault_key(e: dict) -> tuple:
+    return (e["collective"], int(e["nranks"]), int(e["msg_bytes"]),
+            e["tier"], float(e["drop_rate"]))
+
+
 def _sweep(path: str) -> dict:
     """Every gated point of a results file, one flat dict: segment-sweep
     points keyed ('seg', ...) -> predicted_s, queue-sweep points keyed
@@ -63,6 +70,8 @@ def _sweep(path: str) -> dict:
         base = ("queue",) + _queue_key(e)
         pts[base + ("makespan_s",)] = float(e["makespan_s"])
         pts[base + ("serial_s",)] = float(e["serial_s"])
+    for e in data.get("fault_sweep", []):
+        pts[("fault",) + _fault_key(e)] = float(e["makespan_s"])
     return pts
 
 
@@ -96,7 +105,8 @@ def main(argv=None) -> int:
             data = json.load(f)
         out = {"meta": data.get("meta", {}),
                "segment_sweep": data["segment_sweep"],
-               "queue_sweep": data.get("queue_sweep", [])}
+               "queue_sweep": data.get("queue_sweep", []),
+               "fault_sweep": data.get("fault_sweep", [])}
         with open(args.write_baseline, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.write_baseline}: {len(new)} sweep points")

@@ -761,9 +761,15 @@ class CollectiveEngine:
         """
         comm = self.comm(axis)
         if algorithm in (None, "auto"):
+            # alltoall executes on the caller's 2-D leading-dim grid, so
+            # the selector clamps candidate segments on rows, not the
+            # flat element count (priced k == executed k)
+            lead = int(x.shape[0]) if collective == "alltoall" \
+                and getattr(x, "ndim", 0) else None
             choice = self.selector.choose(
                 collective, x.size * x.dtype.itemsize, comm,
-                codec=compression, elem_bytes=x.dtype.itemsize)
+                codec=compression, elem_bytes=x.dtype.itemsize,
+                lead_dim=lead)
             algorithm = choice.algorithm
             if segments is None:
                 segments = choice.segments

@@ -327,7 +327,8 @@ class Program:
                 yield 1, 1, tuple(ops[i:j + 1]), None
                 i = j + 1
 
-    def cost(self, msg_bytes: float, comm, elem_bytes: int = 4) -> float:
+    def cost(self, msg_bytes: float, comm, elem_bytes: int = 4,
+             tier=None, drop_prob: float = 0.0) -> float:
         """Predicted seconds for THIS compiled program on `comm`'s fabric.
 
         The SPLIT pipelining model, priced off the ops that will actually
@@ -359,12 +360,25 @@ class Program:
         single cross-step region, this walk returns the identical number
         to the retired schedule-walk `predict_time` — asserted (with the
         intentional divergences) by the golden pricing tests.
+
+        `tier`/`drop_prob` (a `faults.ReliabilityTier` and a segment
+        drop probability) add the honest retransmission surcharge: every
+        alpha and wire term is scaled by the tier's expected
+        transmissions under that loss rate, and the expected exponential
+        backoff per wire crossing is added on top. `tier=None` (the
+        default) is bitwise-neutral — fault-free pricing is unchanged.
         """
-        return self._cost_walk(msg_bytes, comm, elem_bytes)[0] \
-            / self.overlap_factor
+        total, _lat, _wir, crossings = \
+            self._cost_walk(msg_bytes, comm, elem_bytes)
+        total = total / self.overlap_factor
+        if tier is not None:
+            total = (total * tier.expected_transmissions(drop_prob)
+                     + crossings * tier.expected_backoff(drop_prob))
+        return total
 
     def cost_terms(self, msg_bytes: float, comm,
-                   elem_bytes: int = 4) -> tuple:
+                   elem_bytes: int = 4, tier=None,
+                   drop_prob: float = 0.0) -> tuple:
         """`cost` decomposed as (latency_s, wire_s).
 
         latency_s collects every per-hop alpha term of the walk; wire_s
@@ -376,20 +390,35 @@ class Program:
         sharing one communicator's links serializes, while the alpha
         half of a QUEUED request hides behind the wire time of the one
         in flight.
+
+        With a reliability `tier` and a `drop_prob`, both halves scale
+        by the tier's expected transmissions and the expected backoff
+        lands in the latency half (backoff occupies no wire). The
+        default `tier=None` is bitwise-neutral.
         """
-        _total, lat, wire = self._cost_walk(msg_bytes, comm, elem_bytes)
-        return lat / self.overlap_factor, wire / self.overlap_factor
+        _total, lat, wire, crossings = \
+            self._cost_walk(msg_bytes, comm, elem_bytes)
+        lat = lat / self.overlap_factor
+        wire = wire / self.overlap_factor
+        if tier is not None:
+            e = tier.expected_transmissions(drop_prob)
+            lat = lat * e + crossings * tier.expected_backoff(drop_prob)
+            wire = wire * e
+        return lat, wire
 
     def _cost_walk(self, msg_bytes: float, comm, elem_bytes: int) -> tuple:
-        """(total, latency, wire) over the ops. `total` accumulates in
-        the exact historical order (golden parity is asserted bitwise);
-        the split halves accumulate alongside it."""
+        """(total, latency, wire, crossings) over the ops. `total`
+        accumulates in the exact historical order (golden parity is
+        asserted bitwise); the split halves accumulate alongside it.
+        `crossings` counts per-segment wire crossings (mult * k_eff) —
+        the unit the retransmission surcharge is charged per."""
         alpha = comm.hop_latency
         bw = comm.link_bw
         floor = comm.min_segment_bytes
         total = 0.0
         lat = 0.0
         wir = 0.0
+        crossings = 0.0
         drains: dict = {}          # region id -> [k_max, t_max, a_max, b_max]
         for mult, k, body, region in self.exchange_terms():
             scale = 1.0
@@ -407,6 +436,7 @@ class Program:
                 k_eff -= 1
             b = wire / (k_eff * bw)
             t = alpha + b
+            crossings += mult * k_eff
             if region is not None:
                 total += mult * t
                 lat += mult * alpha
@@ -422,7 +452,7 @@ class Program:
         total += sum((k_r - 1) * t_r for k_r, t_r, _a, _b in drains.values())
         lat += sum((k_r - 1) * a_r for k_r, _t, a_r, _b in drains.values())
         wir += sum((k_r - 1) * b_r for k_r, _t, _a, b_r in drains.values())
-        return total, lat, wir
+        return total, lat, wir, crossings
 
 
 # --------------------------------------------------------------------------

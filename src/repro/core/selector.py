@@ -233,7 +233,8 @@ class Selector:
 
     def fit_candidate_segments(self, schedule: Schedule, msg_bytes: int,
                                seg_space, codec: Optional[str] = None,
-                               elem_bytes: int = 4) -> tuple:
+                               elem_bytes: int = 4,
+                               lead_dim: Optional[int] = None) -> tuple:
         """Clamp candidate segment counts to what the executor will admit.
 
         The data plane clamps every requested count through
@@ -248,13 +249,21 @@ class Selector:
         it unchanged. Clamping here (duplicates dropped, order kept)
         makes the priced k and the executed k agree by construction.
 
-        Known remainder: `alltoall` keeps its caller's 2-D shape, so its
-        payload grid is leading-dim rows rather than the flat element
-        grid priced here — an indivisible leading dim can still clamp at
-        trace time (see ROADMAP open items).
+        `alltoall` keeps its caller's 2-D shape, so its payload grid is
+        leading-dim ROWS (`lead_dim / chunks` per chunk), not the flat
+        element grid — callers pass `lead_dim` and the clamp runs on the
+        row grid the executor will actually see, so an indivisible
+        leading dim can no longer execute fewer segments than the priced
+        `Choice.segments`.
         """
         elems = max(1, int(msg_bytes) // max(1, int(elem_bytes)))
-        if schedule.collective in ("allgather", "gather"):
+        row_elems = 1
+        if schedule.collective == "alltoall" and lead_dim:
+            # the executor's fit_segments runs on payload rows: one
+            # chunk of the caller's leading dim per exchange
+            csize = max(1, int(lead_dim) // schedule.chunks)
+            row_elems = max(1, elems // max(1, int(lead_dim)))
+        elif schedule.collective in ("allgather", "gather"):
             # gathers price the per-rank SHARD (`msg_bytes`) but execute
             # on the nranks*shard buffer, whose chunk IS one shard — the
             # executable grid is the shard itself, not shard/chunks
@@ -266,7 +275,7 @@ class Selector:
             block = plugins.get_codec(codec).block_elems
         out, seen = [], set()
         for k in seg_space:
-            kf = fit_segments(csize, int(k), 1, block)
+            kf = fit_segments(csize, int(k), row_elems, block)
             if kf not in seen:
                 seen.add(kf)
                 out.append(kf)
@@ -296,24 +305,29 @@ class Selector:
         return ("rendezvous",)
 
     def choose(self, collective: str, msg_bytes: int, comm: Communicator,
-               codec: Optional[str] = None, elem_bytes: int = 4) -> Choice:
+               codec: Optional[str] = None, elem_bytes: int = 4,
+               lead_dim: Optional[int] = None) -> Choice:
         self.stats["choose_calls"] += 1
         # registry_version: (un)registering a custom collective must not
-        # serve picks cached against the old candidate set
+        # serve picks cached against the old candidate set; lead_dim is
+        # part of the key because alltoall's executable segment grid is
+        # its caller's leading dim, not just the byte count
         key = (collective, int(msg_bytes), comm, codec, int(elem_bytes),
+               None if lead_dim is None else int(lead_dim),
                plugins.registry_version())
         hit = self._cache.get(key)
         if hit is not None:
             self.stats["cache_hits"] += 1
             return hit
         choice = self._choose_uncached(collective, msg_bytes, comm, codec,
-                                       elem_bytes)
+                                       elem_bytes, lead_dim)
         self._cache[key] = choice
         return choice
 
     def _choose_uncached(self, collective: str, msg_bytes: int,
                          comm: Communicator, codec: Optional[str] = None,
-                         elem_bytes: int = 4) -> Choice:
+                         elem_bytes: int = 4,
+                         lead_dim: Optional[int] = None) -> Choice:
         tuned_algo, tuned_segs = self._tuned(collective, msg_bytes,
                                              comm.size, codec)
         custom_algos = {a for a, _g, _p
@@ -338,7 +352,7 @@ class Selector:
             # price only counts the executor will actually run (the
             # trace-time fit_segments clamp, applied before pricing)
             seg_space = self.fit_candidate_segments(
-                sched, msg_bytes, seg_space, codec, elem_bytes)
+                sched, msg_bytes, seg_space, codec, elem_bytes, lead_dim)
             tuned_best: Optional[Choice] = None
             for k in seg_space:
                 # ONE compiled artifact per candidate: compiling through

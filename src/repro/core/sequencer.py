@@ -57,6 +57,20 @@ against one artifact. A sequencer drains either through its engine
 Trace-time contract: requests issued inside a traced function hold
 tracers and MUST be waited/drained before the trace ends (the engine's
 MPI-like calls are trace-time too; the queue only defers them).
+
+Reliability (the ACCL+ fault story): every request ends in exactly one
+typed terminal state — DONE, TIMED_OUT, CANCELLED, or PEER_FAILED —
+never a hang. `simulate_drain` accepts a `FaultPlan` + `ReliabilityTier`
+and executes the queue against the lossy fabric with a purely VIRTUAL
+clock (priced program cost + retry alphas + deterministic backoff; no
+wall-clock anywhere): a request whose tier-level retries recover
+materializes bitwise-identical to the fault-free drain, one that cannot
+ends typed, and failures cascade as CANCELLED to dependents. A
+`FaultPlan` that kills a rank shrinks the communicator to the survivors
+and the selector REPLANS the still-queued collectives on the degraded
+fabric. `Sequencer.abort()` (or using the sequencer as a context
+manager) cancels everything outstanding and provably empties the
+engine's queue — no stale tracers survive an aborted trace.
 """
 from __future__ import annotations
 
@@ -65,6 +79,10 @@ import itertools
 from typing import Optional
 
 import numpy as np
+
+
+class RequestCancelled(RuntimeError):
+    """Typed terminal error raised when a CANCELLED request is waited."""
 
 
 def _size_of(shape) -> int:
@@ -97,7 +115,19 @@ class Request:
     compression, segments). `shape`/`dtype` are the STATIC result
     signature — known at issue time, so the queue prices and chains
     requests without materializing anything.
+
+    `status` walks PENDING -> exactly one terminal state: DONE (result
+    available), TIMED_OUT (deadline or retry budget exhausted),
+    CANCELLED (explicit `cancel()`/`abort()` or a failed dependency),
+    PEER_FAILED (a peer rank died). `timeout` is a VIRTUAL-seconds
+    deadline enforced by the simulated drain's clock.
     """
+
+    PENDING = "PENDING"
+    DONE = "DONE"
+    TIMED_OUT = "TIMED_OUT"
+    CANCELLED = "CANCELLED"
+    PEER_FAILED = "PEER_FAILED"
 
     rid: int
     collective: str
@@ -107,6 +137,9 @@ class Request:
     shape: tuple
     dtype: object
     deps: tuple = ()
+    timeout: Optional[float] = None
+    status: str = PENDING
+    error: object = dataclasses.field(default=None, repr=False)
     _seq: object = dataclasses.field(default=None, repr=False)
     _pre: object = dataclasses.field(default=None, repr=False)
     _post: object = dataclasses.field(default=None, repr=False)
@@ -118,6 +151,16 @@ class Request:
         return self._done
 
     @property
+    def failed(self) -> bool:
+        return self.status in (self.TIMED_OUT, self.CANCELLED,
+                               self.PEER_FAILED)
+
+    @property
+    def finished(self) -> bool:
+        """Terminal (success OR typed failure) — never a hang."""
+        return self._done or self.status != self.PENDING
+
+    @property
     def msg_bytes(self) -> int:
         """Bytes of the ISSUED payload (the wire-pricing size). Works
         for array and Request operands alike — both carry a static
@@ -126,6 +169,11 @@ class Request:
 
     @property
     def result(self):
+        if self.failed:
+            err = self.error if isinstance(self.error, BaseException) \
+                else RequestCancelled(
+                    f"request {self.rid} ended {self.status}")
+            raise err
         if not self._done:
             raise ValueError(f"request {self.rid} not materialized; "
                              f"call wait() or Sequencer.drain()")
@@ -133,8 +181,18 @@ class Request:
 
     def wait(self):
         """Materialize this request (and, by FIFO + dependency order,
-        everything that must execute before it). Returns the result."""
+        everything that must execute before it). Returns the result;
+        raises the typed terminal error if the request failed."""
+        if self.failed:
+            return self.result  # raises the typed error
         return self._seq._materialize(self)
+
+    def cancel(self) -> None:
+        """Cancel this queued request and, transitively, every
+        outstanding request that depends on it. Idempotent; a no-op on
+        requests already in a terminal state."""
+        self._seq._fail(self, self.CANCELLED,
+                        RequestCancelled(f"request {self.rid} cancelled"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,7 +243,8 @@ class Sequencer:
 
     # -- enqueue -------------------------------------------------------------
     def issue(self, collective: str, x, axis: str, *, after=None,
-              _pre=None, _post=None, _shape=None, **kwargs) -> Request:
+              timeout: Optional[float] = None, _pre=None, _post=None,
+              _shape=None, **kwargs) -> Request:
         """Enqueue a collective; returns a `Request` handle immediately.
 
         `x` is the operand array, or another `Request` (its result feeds
@@ -196,7 +255,9 @@ class Sequencer:
         iterable of Requests) overrides that inference with explicit
         edges — it never removes a dataflow edge, since the drain must
         materialize the operand regardless and the makespan model may
-        not credit overlap the drain cannot cash. Remaining keywords are
+        not credit overlap the drain cannot cash. `timeout` is a
+        virtual-seconds deadline enforced by the simulated drain's
+        clock (typed TIMED_OUT, never a hang). Remaining keywords are
         forwarded to the blocking engine call at drain time.
         """
         if isinstance(x, Request):
@@ -227,8 +288,8 @@ class Sequencer:
             else _result_shape(collective, in_shape, n)
         req = Request(rid=next(self._rids), collective=collective,
                       axis=axis, operand=x, kwargs=dict(kwargs),
-                      shape=shape, dtype=dtype, deps=deps, _seq=self,
-                      _pre=_pre, _post=_post)
+                      shape=shape, dtype=dtype, deps=deps, timeout=timeout,
+                      _seq=self, _pre=_pre, _post=_post)
         if not isinstance(x, Request):
             self._buffer_owner[id(x)] = req
         self._queues.setdefault(axis, []).append(req)
@@ -256,7 +317,8 @@ class Sequencer:
             return Request(rid=next(self._rids), collective="allreduce",
                            axis="", operand=x, kwargs={},
                            shape=tuple(src_shape), dtype=np.dtype(x.dtype),
-                           _seq=self, _done=True, _result=x)
+                           status=Request.DONE, _seq=self, _done=True,
+                           _result=x)
         if len(axes) == 1:
             return self.issue("allreduce", x, axes[0], op=op,
                               algorithm=algorithm, compression=compression)
@@ -298,6 +360,53 @@ class Sequencer:
         uses: makespan sweeps over hypothetical queues)."""
         self._queues.clear()
         self._buffer_owner.clear()
+
+    # -- cancellation / abort ------------------------------------------------
+    def _fail(self, req: Request, status: str, error) -> None:
+        """Move `req` to terminal `status`, drop it from its queue and
+        the buffer-identity index, and cascade CANCELLED to every
+        outstanding dependent (their operand can never materialize).
+        Idempotent on already-terminal requests."""
+        if req._done or req.status != Request.PENDING:
+            return
+        req.status = status
+        req.error = error
+        q = self._queues.get(req.axis)
+        if q is not None and req in q:
+            q.remove(req)
+        if not isinstance(req.operand, Request) \
+                and self._buffer_owner.get(id(req.operand)) is req:
+            del self._buffer_owner[id(req.operand)]
+        for r in self.outstanding():
+            if req in r.deps or r.operand is req:
+                self._fail(r, Request.CANCELLED, RequestCancelled(
+                    f"request {r.rid} cancelled: dependency {req.rid} "
+                    f"ended {req.status}"))
+
+    def abort(self) -> list:
+        """Cancel EVERY outstanding request and empty the queue — the
+        guaranteed cleanup path for an abandoned trace. After abort the
+        engine's queue holds no requests and no stale tracers: the
+        buffer-identity index is cleared, so the next collective issued
+        through the engine starts from an empty sequencer state.
+        Returns the cancelled requests (each in status CANCELLED)."""
+        dropped = [r for r in self.outstanding() if not r.finished]
+        for r in dropped:
+            self._fail(r, Request.CANCELLED,
+                       RequestCancelled(f"request {r.rid} aborted"))
+        self._queues.clear()
+        self._buffer_owner.clear()
+        return dropped
+
+    def __enter__(self) -> "Sequencer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        """Context-manager cleanup: whatever the block left outstanding
+        (normally or via an exception mid-drain) is aborted, so
+        `engine.queue` is provably empty on exit."""
+        self.abort()
+        return False
 
     # -- coalescing ----------------------------------------------------------
     def _coalescible(self, r: Request) -> bool:
@@ -401,8 +510,11 @@ class Sequencer:
         codec = kw.get("compression")
         root, op = kw.get("root", 0), kw.get("op", "add")
         if algorithm in (None, "auto"):
+            lead = int(r.operand.shape[0]) if collective == "alltoall" \
+                and len(r.operand.shape) else None
             choice = self.engine.selector.choose(
-                collective, nbytes, comm, codec=codec, elem_bytes=elem)
+                collective, nbytes, comm, codec=codec, elem_bytes=elem,
+                lead_dim=lead)
             if root == 0 and op == "add":
                 return choice.schedule, choice.program, nbytes, elem
             # the selector priced the root=0/op='add' schedule; the
@@ -416,7 +528,8 @@ class Sequencer:
         sched = sched.with_segments(segments)
         return sched, sched.compile(codec=codec), nbytes, elem
 
-    def makespan(self, axis: str, comm=None) -> float:
+    def makespan(self, axis: str, comm=None, tier=None,
+                 drop_prob: float = 0.0) -> float:
         """Predicted seconds to drain `axis`'s outstanding queue.
 
         The queue-level pipelining model (module docstring): wire
@@ -425,7 +538,10 @@ class Sequencer:
         costs and lower-bound the result. Priced off the same compiled
         programs the drain executes. Cross-communicator dependencies are
         priced on their own axis's makespan and treated as satisfied
-        here."""
+        here. A reliability `tier` + `drop_prob` add the per-program
+        retransmission surcharge (`Program.cost` / `cost_terms`), so the
+        queue's price reflects the chosen reliability contract; the
+        default is bitwise-neutral fault-free pricing."""
         comm = comm if comm is not None else self.engine.comm(axis)
         items = self._partition(axis, comm)
         if not items:
@@ -434,8 +550,10 @@ class Sequencer:
         fulls, lats, wires = [], [], []
         for it in items:
             _sched, prog, nbytes, elem = self._resolve_item(it, comm)
-            fulls.append(prog.cost(nbytes, comm, elem_bytes=elem))
-            lat, wire = prog.cost_terms(nbytes, comm, elem_bytes=elem)
+            fulls.append(prog.cost(nbytes, comm, elem_bytes=elem,
+                                   tier=tier, drop_prob=drop_prob))
+            lat, wire = prog.cost_terms(nbytes, comm, elem_bytes=elem,
+                                        tier=tier, drop_prob=drop_prob)
             lats.append(lat)
             wires.append(wire)
         chain = [0.0] * len(items)
@@ -481,6 +599,7 @@ class Sequencer:
     def _finish(self, r: Request, result) -> None:
         r._result = result
         r._done = True
+        r.status = Request.DONE
         self.stats["executed"] += 1
         if not isinstance(r.operand, Request) \
                 and self._buffer_owner.get(id(r.operand)) is r:
@@ -517,9 +636,13 @@ class Sequencer:
     def _materialize(self, req: Request):
         if req._seq is not self:
             raise ValueError("request belongs to a different sequencer")
+        if req.failed:
+            return req.result  # raises the typed terminal error
         if not req._done and req not in self._queues.get(req.axis, ()):
             raise ValueError(f"request {req.rid} is not outstanding")
         while not req._done:
+            if req.failed:
+                return req.result  # raises the typed terminal error
             comm = self.engine.comm(req.axis)
             self._run_item(self._head_item(self._queues[req.axis], comm))
         return req._result
@@ -543,7 +666,8 @@ class Sequencer:
         return drained
 
     # -- simulator drain (numpy validation path) -----------------------------
-    def simulate_drain(self, feeds: dict) -> dict:
+    def simulate_drain(self, feeds: dict, fault_plan=None, tier=None,
+                       degrade: bool = False) -> dict:
         """Drain the whole queue in the numpy simulator.
 
         `feeds` maps each leaf request (array operand) to its per-rank
@@ -554,14 +678,40 @@ class Sequencer:
         `simulator.run_collective` on the SAME compiled programs
         `makespan` prices. Returns {request: per-rank result list} and
         marks the requests done (a simulated sequencer is spent; use a
-        fresh one per engine drain)."""
+        fresh one per engine drain).
+
+        `fault_plan` (a `faults.FaultPlan`, with `tier` defaulting to
+        tcp-like) executes the drain against the lossy fabric: a request
+        whose tier-level retries recover materializes bitwise-identical
+        to the fault-free drain; one that cannot ends in a TYPED
+        terminal state (TIMED_OUT on loss/deadline, PEER_FAILED on a
+        dead rank) with its dependents CANCELLED — never a hang, never
+        a partial write. Per-request `timeout`s are enforced on the
+        VIRTUAL clock (priced program cost + retry alphas + the tier's
+        deterministic backoff); no wall-clock is consulted anywhere.
+        With `degrade=True` a dead rank additionally shrinks the
+        communicator to the survivors (`Communicator.shrunk`), the
+        selector replans every still-queued collective on the degraded
+        fabric, and surviving ranks' feeds carry on — the
+        shrink-and-continue path the trainer demo rides."""
         from repro.core import simulator as sim
+        from repro.core.faults import (
+            FaultyTransport, PeerFailedError, TIERS, TransportError,
+            TransportTimeout,
+        )
         if any(r._pre is not None or r._post is not None
                for q in self._queues.values() for r in q):
             raise NotImplementedError(
                 "simulate_drain does not execute issue_multi chains "
                 "(their pad/trim hooks are trace-time jnp closures)")
+        transport = None
+        if fault_plan is not None:
+            transport = FaultyTransport(
+                plan=fault_plan,
+                tier=tier if tier is not None else TIERS["tcp-like"])
         results: dict = {}
+        comm_override: dict = {}   # axis -> degraded communicator
+        survivors: dict = {}       # axis -> surviving ORIGINAL rank ids
         while any(self._queues.values()):
             # global issue order: among queue heads, run the item whose
             # head request was issued first — dependencies always point
@@ -569,47 +719,120 @@ class Sequencer:
             # before the dependent request can reach its own head slot
             axis = min((a for a, q in self._queues.items() if q),
                        key=lambda a: self._queues[a][0].rid)
-            comm = self.engine.comm(axis)
+            comm = comm_override.get(axis)
+            if comm is None:
+                comm = self.engine.comm(axis)
             item = self._head_item(self._queues[axis], comm)
-            sched, prog, _nbytes, _elem = self._resolve_item(item, comm)
+            # a failed dependency cancels the dependent before it runs
+            bad = next(
+                (d for r in item.requests
+                 for d in (r.deps + ((r.operand,) if isinstance(
+                     r.operand, Request) else ()))
+                 if d.failed), None)
+            if bad is not None:
+                for r in item.requests:
+                    self._fail(r, Request.CANCELLED, RequestCancelled(
+                        f"request {r.rid} cancelled: dependency "
+                        f"{bad.rid} ended {bad.status}"))
+                continue
+            sched, prog, nbytes, elem = self._resolve_item(item, comm)
+            surv = survivors.get(axis)
+
+            def _fit(v, surv=surv, n=comm.size):
+                # a feed recorded at the pre-shrink size is sliced to
+                # the survivors; post-shrink results already fit
+                if surv is not None and len(v) != n:
+                    return [v[i] for i in surv]
+                return list(v)
+
             vals = []
             for r in item.requests:
                 if isinstance(r.operand, Request):
-                    vals.append(results[r.operand])
+                    vals.append(_fit(results[r.operand]))
                 else:
-                    vals.append(feeds[r])
+                    vals.append(_fit(feeds[r]))
             q = self._queues[axis]
+            pre_retries = transport.retries if transport else 0
+            pre_backoff = transport.backoff_s if transport else 0.0
+            try:
+                results_item = self._sim_item(
+                    sim, item, sched, prog, vals, comm, transport)
+            except PeerFailedError as e:
+                if degrade:
+                    prev = survivors.get(axis, list(range(comm.size)))
+                    survivors[axis] = [r for i, r in enumerate(prev)
+                                       if i != e.rank]
+                    comm_override[axis] = comm.shrunk(len(survivors[axis]))
+                    if transport is not None:
+                        # rank-keyed schedule entries do not survive the
+                        # renumbering; background loss (drop_prob) does
+                        transport = FaultyTransport(
+                            plan=dataclasses.replace(
+                                fault_plan, drops=frozenset(),
+                                flaps=(), dead=()),
+                            tier=transport.tier,
+                            exchange=transport.exchange,
+                            retries=transport.retries,
+                            backoff_s=transport.backoff_s)
+                for r in item.requests:
+                    self._fail(r, Request.PEER_FAILED, e)
+                continue
+            except TransportError as e:
+                for r in item.requests:
+                    self._fail(r, Request.TIMED_OUT, e)
+                continue
+            # virtual clock for this item: priced cost + retry penalty
+            elapsed = prog.cost(nbytes, comm, elem_bytes=elem)
+            if transport is not None:
+                elapsed += ((transport.retries - pre_retries)
+                            * comm.hop_latency
+                            + transport.backoff_s - pre_backoff)
+            late = [r for r in item.requests
+                    if r.timeout is not None and elapsed > r.timeout]
+            if late:
+                for r in item.requests:
+                    self._fail(r, Request.TIMED_OUT, TransportTimeout(
+                        f"request {r.rid}: drain step took "
+                        f"{elapsed:.3e}s virtual > timeout"))
+                continue
+            for r, per in results_item:
+                results[r] = per
+                self._finish(r, per)
+                q.remove(r)
             if item.coalesced:
-                n = comm.size
-                cat = [np.concatenate([v[rank].reshape(-1)
-                                       for v in vals])
-                       for rank in range(n)]
-                r0 = item.requests[0]
-                outs = sim.run_collective(
-                    "allreduce", sched, prog, cat,
-                    root=r0.kwargs.get("root", 0))
-                off = 0
-                for r, v in zip(item.requests, vals):
-                    ln = v[0].size
-                    per = [outs[rank][off:off + ln].reshape(
-                        v[rank].shape) for rank in range(n)]
-                    results[r] = per
-                    self._finish(r, per)
-                    q.remove(r)
-                    off += ln
                 self.stats["coalesced_buckets"] += 1
                 self.stats["coalesced_requests"] += len(item.requests)
-            else:
-                r = item.requests[0]
-                for d in r.deps:
-                    if not d._done:
-                        raise AssertionError(
-                            "global-order drain reached a request before "
-                            "its dependency — sequencer invariant broken")
-                outs = sim.run_collective(
-                    r.collective, sched, prog, vals[0],
-                    root=r.kwargs.get("root", 0))
-                results[r] = outs
-                self._finish(r, outs)
-                q.remove(r)
         return results
+
+    def _sim_item(self, sim, item: PlanItem, sched, prog, vals, comm,
+                  transport) -> list:
+        """Run one plan item through `simulator.run_collective`;
+        returns [(request, per_rank_results), ...] without touching
+        queue state (the caller commits or converts a typed failure)."""
+        if item.coalesced:
+            n = comm.size
+            cat = [np.concatenate([v[rank].reshape(-1) for v in vals])
+                   for rank in range(n)]
+            r0 = item.requests[0]
+            outs = sim.run_collective(
+                "allreduce", sched, prog, cat,
+                root=r0.kwargs.get("root", 0), transport=transport)
+            pairs = []
+            off = 0
+            for r, v in zip(item.requests, vals):
+                ln = v[0].size
+                per = [outs[rank][off:off + ln].reshape(v[rank].shape)
+                       for rank in range(n)]
+                pairs.append((r, per))
+                off += ln
+            return pairs
+        r = item.requests[0]
+        for d in r.deps:
+            if not d._done:
+                raise AssertionError(
+                    "global-order drain reached a request before "
+                    "its dependency — sequencer invariant broken")
+        outs = sim.run_collective(
+            r.collective, sched, prog, vals[0],
+            root=r.kwargs.get("root", 0), transport=transport)
+        return [(r, outs)]

@@ -135,7 +135,7 @@ class _State:
 
 
 def _exchange_writes(body: tuple, k_req: int, state: _State, chunks: int,
-                     step: int, read_bufs) -> list:
+                     step: int, read_bufs, transport=None) -> list:
     """One exchange across all ranks, two-phase: every rank's payload and
     combine target are read from `read_bufs` (the pre-step state), then the
     region writes are returned for the caller to apply.
@@ -143,6 +143,13 @@ def _exchange_writes(body: tuple, k_req: int, state: _State, chunks: int,
     Mirrors the engine's `_exchange_update` + deferred `_apply_write`,
     including SEG_LOOP's per-segment combine granularity, so numerics
     match the XLA executor exactly.
+
+    `transport` (a `faults.FaultyTransport`) is consulted once per
+    (src, dst) wire crossing BEFORE any write is staged: a delivery that
+    survives its retry budget retransmits the identical payload (so the
+    final buffers are bitwise-equal to the fault-free run), and a
+    terminal loss raises a typed error while every buffer still holds
+    its pre-exchange state — no partial writes, no silent corruption.
     Returns [(rank, off, mask_idxs, new_val, raw_or_None), ...].
     """
     load, recv = body[0], body[-1]
@@ -158,6 +165,11 @@ def _exchange_writes(body: tuple, k_req: int, state: _State, chunks: int,
                            else read_bufs[r], chunks, load.sel, r, step)
                 for r in range(n)}
     wire = {dst: payloads[src] for (src, dst) in send_op.perm}
+
+    if transport is not None:
+        for (src, dst) in send_op.perm:
+            transport.deliver(src, dst)
+        transport.advance()
 
     if recv.dsts is None:
         missing = set(range(n)) - set(wire.keys())
@@ -198,8 +210,12 @@ def _apply(state: _State, chunks: int, writes: list) -> None:
             state.prevs[rank] = np.array(raw, copy=True)
 
 
-def execute_program(prog: Program, inputs: list) -> list:
-    """Run a compiled Program over per-rank buffers; returns final buffers."""
+def execute_program(prog: Program, inputs: list, transport=None) -> list:
+    """Run a compiled Program over per-rank buffers; returns final buffers.
+
+    `transport` (optional `faults.FaultyTransport`) injects the fault
+    plan at every wire crossing; see `_exchange_writes`.
+    """
     n = prog.nranks
     assert len(inputs) == n, f"need {n} rank buffers"
     for b in inputs:
@@ -236,7 +252,7 @@ def execute_program(prog: Program, inputs: list) -> list:
             for body in op.bodies:
                 writes = _exchange_writes(body, op.segments, state,
                                           prog.chunks, body[0].step,
-                                          state.bufs)
+                                          state.bufs, transport)
                 _apply(state, prog.chunks, writes)
             i += 1
             continue
@@ -245,7 +261,8 @@ def execute_program(prog: Program, inputs: list) -> list:
             # order reproduces the engine's one-scatter result exactly
             for body in op.bodies:
                 writes = _exchange_writes(body, 1, state, prog.chunks,
-                                          body[0].step, state.bufs)
+                                          body[0].step, state.bufs,
+                                          transport)
                 _apply(state, prog.chunks, writes)
             i += 1
         elif isinstance(op, Loop):
@@ -258,7 +275,8 @@ def execute_program(prog: Program, inputs: list) -> list:
                     step = op.base + it * op.period + slot
                     body, k_req = split_exchange(seq)
                     writes.extend(_exchange_writes(body, k_req, state,
-                                                   prog.chunks, step, snap))
+                                                   prog.chunks, step, snap,
+                                                   transport))
                 _apply(state, prog.chunks, writes)
             i += 1
         elif isinstance(op, Copy) and op.kind == "bruck_post":
@@ -277,7 +295,7 @@ def execute_program(prog: Program, inputs: list) -> list:
                 i = j + 1
             step = body[0].step
             writes = _exchange_writes(body, k_req, state, prog.chunks,
-                                      step, state.bufs)
+                                      step, state.bufs, transport)
             _apply(state, prog.chunks, writes)
         else:
             raise ValueError(f"unexpected micro-op {op}")
@@ -286,15 +304,16 @@ def execute_program(prog: Program, inputs: list) -> list:
 
 def simulate(schedule: Schedule, inputs: list,
              segments: Optional[int] = None, stream: bool = True,
-             stacked: bool = True) -> list:
+             stacked: bool = True, transport=None) -> list:
     """Compile `schedule` to its micro-op program and run it over per-rank
     buffers; returns final per-rank buffers. `segments` overrides the
     schedule's wire-segmentation knob; `stream`/`stacked` gate the
-    optimization passes exactly as in `Schedule.compile`."""
+    optimization passes exactly as in `Schedule.compile`. `transport`
+    (optional `faults.FaultyTransport`) injects fabric faults."""
     schedule.validate()
     prog = compile_schedule(schedule, segments=segments, stream=stream,
                             stacked=stacked)
-    return execute_program(prog, inputs)
+    return execute_program(prog, inputs, transport)
 
 
 def simulate_with_cost(schedule: Schedule, inputs: list, comm,
@@ -325,7 +344,7 @@ def _flatten_pad(x: np.ndarray, mult: int):
 
 
 def run_collective(collective: str, schedule: Schedule, prog: Program,
-                   inputs: list, root: int = 0) -> list:
+                   inputs: list, root: int = 0, transport=None) -> list:
     """Execute one ENGINE-CONVENTION collective call over per-rank numpy
     buffers: the same flatten/pad staging, result trimming, and
     shard/root slicing the `CollectiveEngine` wrappers apply around
@@ -341,13 +360,13 @@ def run_collective(collective: str, schedule: Schedule, prog: Program,
         if arrs[0].shape[0] % n:
             raise ValueError(
                 f"alltoall dim0 {arrs[0].shape[0]} % {n} != 0")
-        return execute_program(prog, arrs)
+        return execute_program(prog, arrs, transport)
     if collective == "reduce_scatter":
         flats = [np.asarray(b).reshape(-1) for b in inputs]
         if flats[0].size % n:
             raise ValueError(
                 f"reduce_scatter size {flats[0].size} % {n} != 0")
-        outs = execute_program(prog, flats)
+        outs = execute_program(prog, flats, transport)
         csize = flats[0].shape[0] // n
         return [outs[r][int(schedule.owned_chunk(r)) * csize:
                         (int(schedule.owned_chunk(r)) + 1) * csize]
@@ -363,7 +382,7 @@ def run_collective(collective: str, schedule: Schedule, prog: Program,
             buf = np.zeros((n * fl,), flats[r].dtype)
             buf[slot * fl:(slot + 1) * fl] = flats[r]
             bufs.append(buf)
-        outs = execute_program(prog, bufs)
+        outs = execute_program(prog, bufs, transport)
         if collective == "gather" and schedule.chunk_coords == "relative":
             outs = [np.roll(o.reshape(n, fl), root, axis=0).reshape(-1)
                     for o in outs]
@@ -371,7 +390,7 @@ def run_collective(collective: str, schedule: Schedule, prog: Program,
     # allreduce / reduce / bcast / custom collectives: pad to the chunk
     # grid, run, then trim (full results) or slice the owned chunk
     staged = [_flatten_pad(b, prog.chunks) for b in inputs]
-    outs = execute_program(prog, [s[0] for s in staged])
+    outs = execute_program(prog, [s[0] for s in staged], transport)
     if schedule.result == "shard":
         if staged[0][2] % prog.chunks:
             raise ValueError(

@@ -107,6 +107,26 @@ class Communicator:
     def is_pow2(self) -> bool:
         return self.size & (self.size - 1) == 0
 
+    # -- graceful degradation ----------------------------------------------
+    def shrunk(self, size: int) -> "Communicator":
+        """The degraded communicator after ranks died: same axis and
+        fabric, `size` survivors renumbered 0..size-1 (ACCL+ rebuilds
+        the communicator's rank table in configuration memory; here the
+        survivor list lives with the caller and the selector replans
+        every queued collective against this smaller group)."""
+        if not 1 <= int(size) <= self.size:
+            raise ValueError(
+                f"cannot shrink {self.size}-rank communicator to {size}")
+        return dataclasses.replace(self, size=int(size))
+
+    def without_ranks(self, dead) -> "Communicator":
+        """`shrunk` keyed by the dead rank ids instead of the count."""
+        dead = {int(r) for r in dead}
+        bad = dead - set(range(self.size))
+        if bad:
+            raise ValueError(f"ranks {sorted(bad)} not in communicator")
+        return self.shrunk(self.size - len(dead))
+
 
 def axis_comm(mesh, axis: str, hw: HwSpec = TPU_V5E) -> Communicator:
     """Build a Communicator for one axis of a jax Mesh."""

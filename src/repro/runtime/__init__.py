@@ -1,6 +1,9 @@
 from repro.runtime.trainer import Trainer, TrainerConfig
-from repro.runtime.health import StragglerWatchdog, FailureInjector
+from repro.runtime.health import (
+    FailureInjector, RankFailure, SimulatedDeviceFailure, StragglerWatchdog,
+)
 from repro.runtime.serve_session import ServeSession, convert_prefill_caches
 
 __all__ = ["Trainer", "TrainerConfig", "StragglerWatchdog",
-           "FailureInjector", "ServeSession", "convert_prefill_caches"]
+           "FailureInjector", "RankFailure", "SimulatedDeviceFailure",
+           "ServeSession", "convert_prefill_caches"]

@@ -22,6 +22,22 @@ class SimulatedDeviceFailure(RuntimeError):
     pass
 
 
+class RankFailure(RuntimeError):
+    """A peer rank died mid-run (the grad-sync collective's PEER_FAILED
+    surfaced to the trainer). Unlike SimulatedDeviceFailure — which is
+    recovered by checkpoint-restart — a rank failure is recoverable
+    WITHOUT a restore: the trainer shrinks the mesh to the survivors
+    along `axis`, replans, and continues from in-memory state."""
+
+    def __init__(self, msg, *, rank: int, axis: str = "data"):
+        super().__init__(msg)
+        self.rank = rank
+        self.axis = axis
+        #: (params, opt, step) attached by the trainer at the failure
+        #: point so shrink-and-continue resumes without a checkpoint
+        self.state = None
+
+
 @dataclasses.dataclass
 class StragglerWatchdog:
     """EWMA step-time monitor. z > threshold for `patience` consecutive
@@ -68,9 +84,15 @@ class StragglerWatchdog:
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Raise SimulatedDeviceFailure at the given steps (once each)."""
+    """Raise SimulatedDeviceFailure at the given steps (once each).
+
+    `rank_fail_at` additionally injects dead-RANK failures: (step, rank)
+    pairs raise `RankFailure` at that step, once each — the chaos hook
+    behind the trainer's shrink-and-continue path."""
 
     fail_at: tuple = ()
+    rank_fail_at: tuple = ()
+    axis: str = "data"
     fired: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int):
@@ -78,6 +100,12 @@ class FailureInjector:
             self.fired.add(step)
             raise SimulatedDeviceFailure(
                 f"injected chip failure at step {step}")
+        for (s, rank) in self.rank_fail_at:
+            if s == step and ("rank", s) not in self.fired:
+                self.fired.add(("rank", s))
+                raise RankFailure(
+                    f"injected rank {rank} loss at step {step}",
+                    rank=rank, axis=self.axis)
 
 
 class Heartbeat:

@@ -27,7 +27,8 @@ from repro.data import DataConfig, make_loader
 from repro.optim import adamw
 from repro.parallel import stages
 from repro.runtime.health import (
-    FailureInjector, Heartbeat, SimulatedDeviceFailure, StragglerWatchdog,
+    FailureInjector, Heartbeat, RankFailure, SimulatedDeviceFailure,
+    StragglerWatchdog,
 )
 
 
@@ -111,9 +112,10 @@ class Trainer:
         self._install_signals()
         restarts = 0
         log = []
+        state = None
         while True:
             try:
-                log.extend(self._run_once())
+                log.extend(self._run_once(state))
                 return log
             except SimulatedDeviceFailure as e:
                 restarts += 1
@@ -122,7 +124,55 @@ class Trainer:
                 log.append({"event": "failure", "error": str(e),
                             "restart": restarts})
                 # checkpoint-restart: fall through and resume from latest
+                state = None
                 continue
+            except RankFailure as e:
+                restarts += 1
+                if restarts > self.tcfg.max_restarts:
+                    raise
+                # shrink-and-continue: no checkpoint restore — the mesh
+                # loses the dead rank, the step is rebuilt on the
+                # degraded mesh, and the IN-MEMORY state carries on
+                log.extend(getattr(e, "partial_log", None) or [])
+                state = self._shrink_to_survivors(e)
+                log.append({"event": "rank_failure", "error": str(e),
+                            "rank": e.rank, "axis": e.axis,
+                            "mesh_shape": dict(self.mesh.shape),
+                            "restart": restarts})
+                continue
+
+    def _shrink_to_survivors(self, failure: RankFailure):
+        """Checkpoint-restart-free recovery from a dead rank.
+
+        The degraded-communicator path end to end: drop the dead rank's
+        devices from the mesh along the failed axis, rebuild the train
+        step (its engine's selector replans every collective on the
+        shrunk communicators), and re-place the in-memory params/opt on
+        the surviving devices. Returns the (params, opt, step) state the
+        next `_run_once` continues from — training never goes back to a
+        checkpoint."""
+        import numpy as np
+        if failure.state is None:
+            raise failure  # failed outside the step loop: nothing to save
+        if self.mesh.shape[failure.axis] <= 1:
+            raise failure  # no survivors to shrink onto
+        params, opt, step = failure.state
+        idx = self.mesh.axis_names.index(failure.axis)
+        devices = np.delete(np.asarray(self.mesh.devices),
+                            failure.rank % self.mesh.shape[failure.axis],
+                            axis=idx)
+        self.mesh = jax.sharding.Mesh(devices, self.mesh.axis_names)
+        self.ts = stages.build_train_step(self.arch, self.pcfg, self.mesh,
+                                          self.opt_cfg, self.lr_schedule)
+
+        def place(tree, specs):
+            return jax.tree.map(
+                lambda x, s: jax.device_put(
+                    jax.device_get(x), NamedSharding(self.mesh, s)),
+                tree, specs)
+
+        return (place(params, self.ts.specs),
+                place(opt, self.ts.opt_specs), step)
 
     def _queue_stats(self):
         """Offload-queue telemetry from the step's CollectiveEngine.
@@ -139,8 +189,11 @@ class Trainer:
         return {"queue_issued": q.stats["issued"],
                 "queue_coalesced": q.stats["coalesced_requests"]}
 
-    def _run_once(self):
-        params, opt, start = self.restore_or_init()
+    def _run_once(self, state=None):
+        if state is not None:
+            params, opt, start = state  # shrink-and-continue resume
+        else:
+            params, opt, start = self.restore_or_init()
         loader = make_loader(self.data_cfg, self.arch, start_step=start)
         log = []
         try:
@@ -148,7 +201,15 @@ class Trainer:
                 if step >= self.tcfg.total_steps or self._preempted:
                     break
                 if self.injector:
-                    self.injector.check(step)
+                    try:
+                        self.injector.check(step)
+                    except RankFailure as e:
+                        # attach the live state (and the metrics logged
+                        # so far — they will not be re-run) so recovery
+                        # needs no checkpoint restore
+                        e.state = (params, opt, step)
+                        e.partial_log = log
+                        raise
                 t0 = time.perf_counter()
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
                 params, opt, metrics = self.ts.fn(

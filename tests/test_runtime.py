@@ -40,6 +40,37 @@ def test_failure_recovery_exact(tmp_path, mesh222):
         assert abs(ref[s] - rec[s]) < 1e-5, f"divergence at step {s}"
 
 
+def test_rank_failure_shrink_and_continue(tmp_path, mesh222):
+    """Dead rank during grad sync: the trainer shrinks the data axis to
+    the survivors, replans, and continues from IN-MEMORY state — no
+    checkpoint restore, no lost pre-failure steps."""
+    t = _trainer(mesh222, str(tmp_path / "d"), total=8,
+                 injector=FailureInjector(rank_fail_at=((4, 1),)))
+    # ckpt_every beyond the run: recovery cannot lean on a restore
+    t.tcfg.ckpt_every = 100
+    log = t.run()
+    events = [r for r in log if "event" in r]
+    assert len(events) == 1 and events[0]["event"] == "rank_failure"
+    assert events[0]["rank"] == 1 and events[0]["axis"] == "data"
+    steps = [r["step"] for r in log if "step" in r]
+    assert steps == list(range(8))  # every step ran exactly once
+    assert dict(t.mesh.shape)["data"] == 1  # data axis shrunk 2 -> 1
+    # post-failure metrics are real numbers from the degraded mesh
+    post = [r for r in log if r.get("step", -1) >= 4]
+    assert all(np.isfinite(r["ce_mean"]) for r in post)
+
+
+def test_rank_failure_no_survivors_reraises(tmp_path, mesh111):
+    # data axis already 1: nothing to shrink onto -> the failure
+    # propagates (after max_restarts) instead of silently looping
+    t = _trainer(mesh111, str(tmp_path / "e"), total=6,
+                 injector=FailureInjector(rank_fail_at=((2, 0),)))
+    t.tcfg.ckpt_every = 100
+    from repro.runtime import RankFailure
+    with pytest.raises(RankFailure):
+        t.run()
+
+
 def test_elastic_reshard_resume(tmp_path, mesh222, mesh111):
     d = str(tmp_path / "c")
     _trainer(mesh222, d, total=6).run()
