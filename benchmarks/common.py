@@ -31,7 +31,7 @@ def timeit(fn, *args, warmup=2, iters=10):
 # run.py serializes this into BENCH_collectives.json so the perf
 # trajectory is diffable across PRs.
 RESULTS = {"rows": [], "segment_sweep": [], "queue_sweep": [],
-           "fault_sweep": []}
+           "fault_sweep": [], "hier_sweep": []}
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -56,11 +56,17 @@ def record_fault(entry: dict):
     RESULTS["fault_sweep"].append(entry)
 
 
+def record_hier(entry: dict):
+    """Attach one structured hier-sweep record (see figures.hier_sweep)."""
+    RESULTS["hier_sweep"].append(entry)
+
+
 def reset_results():
     RESULTS["rows"].clear()
     RESULTS["segment_sweep"].clear()
     RESULTS["queue_sweep"].clear()
     RESULTS["fault_sweep"].clear()
+    RESULTS["hier_sweep"].clear()
 
 
 def header():

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import (
-    record_fault, record_queue, record_sweep, row, timeit,
+    record_fault, record_hier, record_queue, record_sweep, row, timeit,
 )
 from repro.core import CollectiveEngine, Communicator, Selector
 from repro.core.hw_spec import ACCL_CLUSTER, TPU_V5E
@@ -348,6 +348,83 @@ def fault_sweep(drop_rates=(0.0, 0.01, 0.05, 0.2), nranks: int = 8,
                     f"surcharge={makespan/base:.3f}x "
                     f"retries<={tier.max_retries}")
         seq.clear()
+
+
+# -- Hier sweep: two-level cross-fabric allreduce vs flat ---------------------
+
+def hier_sweep(pod_sizes=(2, 4), nranks: int = 16,
+               sizes=(1 << 16, 1 << 18, 1 << 20, 1 << 22, 1 << 24,
+                      1 << 26)):
+    """Modeled flat vs hierarchical allreduce across a DCN pod boundary.
+
+    Pure model (no device timing): for each pod count, an allreduce over
+    a (pod x intra-pod) product communicator is priced two ways — the
+    best FLAT algorithm over the bottleneck view (every link rides DCN)
+    and the best two-level `hierarchical:<intra>+<inter>` composition
+    (reduce-scatter in pod, inter-pod allreduce of the 1/ici_size shard,
+    allgather in pod). Each side sweeps its own admissible segment
+    ladder, exactly as `Selector._choose_product` prices the head-to-head
+    pick. `dcn_ratio` is the priced-DCN-wire-byte quotient hier/flat:
+    for matched ring families it is exactly 1/ici_size (the headline
+    claim, asserted bitwise in tests/test_hierarchical.py); the recorded
+    ratio uses each side's own best algorithm, so it reports what the
+    selector actually ships. Every point lands in the `hier_sweep`
+    section of BENCH_collectives.json, which `scripts/check_bench.py`
+    gates — the modeled hierarchical speedup is pinned by the committed
+    baseline, not just eyeballed.
+    """
+    from repro.core import hierarchical as H
+
+    for pod in pod_sizes:
+        comm = Communicator(axis="pod", size=nranks,
+                            is_dcn=True).factor(pod)
+        sel = Selector()
+        for nbytes in sizes:
+            # best flat candidate over the bottleneck (all-DCN) view;
+            # flat programs price bitwise-identically on the product
+            flat_c = sel.choose("allreduce", nbytes, comm.flat)
+            flat_dcn = flat_c.program.fabric_wire_bytes(
+                nbytes, comm.flat)["dcn"]
+            # best hierarchical composition (rendezvous-only, inner-
+            # fabric segment floors — mirrors _choose_product)
+            hier_best = None
+            for intra in H.INTRA_ALGOS:
+                for inter in H.inter_candidates("allreduce",
+                                                comm.outer.size):
+                    sched = H.hierarchical_schedule(
+                        "allreduce", comm, intra=intra, inter=inter)
+                    segs = sel.fit_candidate_segments(
+                        sched, nbytes,
+                        sel.admissible_segments(sched, nbytes,
+                                                comm.inner))
+                    for k in segs:
+                        prog = sched.with_segments(k).compile()
+                        t = sel.price_program(prog, "rendezvous",
+                                              nbytes, comm)
+                        if t is not None and (hier_best is None
+                                              or t < hier_best[0]):
+                            hier_best = (t, sched.name, k, prog)
+            hier_s, hier_algo, hier_k, hier_prog = hier_best
+            hier_dcn = hier_prog.fabric_wire_bytes(nbytes, comm)["dcn"]
+            record_hier({
+                "collective": "allreduce",
+                "nranks": nranks,
+                "pod_size": int(pod),
+                "msg_bytes": int(nbytes),
+                "flat_s": flat_c.predicted_s,
+                "flat_algorithm": flat_c.algorithm,
+                "hier_s": hier_s,
+                "hier_algorithm": hier_algo,
+                "hier_segments": int(hier_k),
+                "speedup": flat_c.predicted_s / hier_s,
+                "dcn_ratio": hier_dcn / flat_dcn,
+            })
+            row(f"hiersweep/allreduce/pod{pod}/{nbytes>>10}KB/"
+                f"{nranks}ranks", hier_s * 1e6,
+                f"hier={hier_algo}(k={hier_k}) "
+                f"flat={flat_c.algorithm}={flat_c.predicted_s*1e6:.1f}us "
+                f"speedup={flat_c.predicted_s/hier_s:.2f}x "
+                f"dcn_ratio={hier_dcn/flat_dcn:.3f}")
 
 
 # -- Fig 13: engine vs baseline (ACCL+ vs ACCL vs MPI analogue) ---------------

@@ -36,7 +36,7 @@ def main(argv=None) -> dict:
     ap.add_argument("--quick", action="store_true",
                     help="run only the deterministic model benchmarks "
                          "(fig12_scaling + seg_sweep + queue_sweep + "
-                         "fault_sweep) — "
+                         "fault_sweep + hier_sweep) — "
                          "the CI bench-gate mode; still writes the JSON "
                          "results file")
     default_segments = ",".join(
@@ -84,6 +84,7 @@ def main(argv=None) -> dict:
         "seg_sweep": seg_sweep,
         "queue_sweep": figures.queue_sweep,
         "fault_sweep": figures.fault_sweep,
+        "hier_sweep": figures.hier_sweep,
         "fig16_vecmat": figures.fig16_vecmat,
         "fig17_dlrm": figures.fig17_dlrm,
         "table3_resources": figures.table3_resources,
@@ -98,7 +99,8 @@ def main(argv=None) -> dict:
         benches = {"fig12_scaling": benches["fig12_scaling"],
                    "seg_sweep": benches["seg_sweep"],
                    "queue_sweep": benches["queue_sweep"],
-                   "fault_sweep": benches["fault_sweep"]}
+                   "fault_sweep": benches["fault_sweep"],
+                   "hier_sweep": benches["hier_sweep"]}
     for fn in benches.values():
         fn()
 
@@ -108,6 +110,7 @@ def main(argv=None) -> dict:
         "segment_sweep": list(RESULTS["segment_sweep"]),
         "queue_sweep": list(RESULTS["queue_sweep"]),
         "fault_sweep": list(RESULTS["fault_sweep"]),
+        "hier_sweep": list(RESULTS["hier_sweep"]),
     }
     if args.json:
         with open(args.json, "w") as f:
@@ -115,7 +118,8 @@ def main(argv=None) -> dict:
         print(f"# wrote {args.json}: {len(results['rows'])} rows, "
               f"{len(results['segment_sweep'])} sweep points, "
               f"{len(results['queue_sweep'])} queue points, "
-              f"{len(results['fault_sweep'])} fault points")
+              f"{len(results['fault_sweep'])} fault points, "
+              f"{len(results['hier_sweep'])} hier points")
     return results
 
 

@@ -1,14 +1,16 @@
 #!/usr/bin/env python
 """CI perf gate: fail when the predicted-time model drifts from baseline.
 
-Compares the `segment_sweep`, `queue_sweep` AND `fault_sweep` records
-of a fresh benchmark run (the deterministic `python -m benchmarks.run
---quick` output) against the committed baseline in
-benchmarks/baseline.json — sweep points gate `predicted_s`, queue
-points gate BOTH `makespan_s` (the sequencer's queue-level overlap
+Compares the `segment_sweep`, `queue_sweep`, `fault_sweep` AND
+`hier_sweep` records of a fresh benchmark run (the deterministic
+`python -m benchmarks.run --quick` output) against the committed
+baseline in benchmarks/baseline.json — sweep points gate `predicted_s`,
+queue points gate BOTH `makespan_s` (the sequencer's queue-level overlap
 model) and `serial_s` (the blocking reference it is measured against),
 fault points gate the retransmission-priced `makespan_s` per
-(tier, drop_rate). The gate is symmetric:
+(tier, drop_rate), hier points gate BOTH `hier_s` (the two-level
+cross-fabric composition) and `flat_s` (the all-DCN flat reference) —
+so the modeled hierarchical speedup is pinned from both sides. The gate is symmetric:
 
   * every baseline point must still exist (MISSING fails — coverage must
     not silently shrink),
@@ -55,6 +57,11 @@ def _fault_key(e: dict) -> tuple:
             e["tier"], float(e["drop_rate"]))
 
 
+def _hier_key(e: dict) -> tuple:
+    return (e["collective"], int(e["nranks"]), int(e["pod_size"]),
+            int(e["msg_bytes"]))
+
+
 def _sweep(path: str) -> dict:
     """Every gated point of a results file, one flat dict: segment-sweep
     points keyed ('seg', ...) -> predicted_s, queue-sweep points keyed
@@ -72,6 +79,10 @@ def _sweep(path: str) -> dict:
         pts[base + ("serial_s",)] = float(e["serial_s"])
     for e in data.get("fault_sweep", []):
         pts[("fault",) + _fault_key(e)] = float(e["makespan_s"])
+    for e in data.get("hier_sweep", []):
+        base = ("hier",) + _hier_key(e)
+        pts[base + ("hier_s",)] = float(e["hier_s"])
+        pts[base + ("flat_s",)] = float(e["flat_s"])
     return pts
 
 
@@ -106,7 +117,8 @@ def main(argv=None) -> int:
         out = {"meta": data.get("meta", {}),
                "segment_sweep": data["segment_sweep"],
                "queue_sweep": data.get("queue_sweep", []),
-               "fault_sweep": data.get("fault_sweep", [])}
+               "fault_sweep": data.get("fault_sweep", []),
+               "hier_sweep": data.get("hier_sweep", [])}
         with open(args.write_baseline, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.write_baseline}: {len(new)} sweep points")

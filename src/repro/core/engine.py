@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 from repro.core.compat import shard_map
 
-from repro.core import plugins
+from repro.core import hierarchical, plugins
 from repro.core.algorithms import GENERATORS
 from repro.core.program import (
     SRC_BUFFER, SRC_ORIGINAL, Copy, Compress, Decompress, Loop, Program,
@@ -48,7 +48,9 @@ from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel,
 )
 from repro.core.selector import Selector
-from repro.core.topology import Communicator, axis_comm
+from repro.core.topology import (
+    Communicator, ProductComm, axis_comm, product_comm,
+)
 from repro.core.hw_spec import HwSpec, TPU_V5E
 
 
@@ -146,7 +148,26 @@ def _split_wire(mid_ops: tuple):
     raise ValueError("exchange without a SEND op")
 
 
-def _send_chain(send_ops: tuple, seg, axis: str, use_pallas: bool):
+def _send_axis(op: Send, axis):
+    """(mesh axis, permutation) one SEND ppermutes on.
+
+    A flat execution passes `axis` as the axis NAME and every SEND uses
+    its flat-rank perm. A two-level execution passes a dict
+    {"inter": outer_axis, "intra": inner_axis}: each SEND then permutes
+    its level-local perm on its level's own mesh axis (a single-axis
+    ppermute replicates across the orthogonal axis — exactly the
+    per-pod / per-slot replication the composed schedule encodes in its
+    flat perms)."""
+    if isinstance(axis, dict):
+        if op.level is None:
+            raise ValueError(
+                "flat (level=None) SEND inside a two-axis execution — "
+                "only hierarchical programs run on an axis dict")
+        return axis[op.level], op.level_perm
+    return axis, op.perm
+
+
+def _send_chain(send_ops: tuple, seg, axis, use_pallas: bool):
     """[COMPRESS?] SEND — payload in, (possibly compressed) arrival out."""
     cur = seg
     for op in send_ops:
@@ -154,8 +175,9 @@ def _send_chain(send_ops: tuple, seg, axis: str, use_pallas: bool):
             cur = plugins.get_codec(op.codec).compress(
                 cur, use_pallas=use_pallas)
         elif isinstance(op, Send):
+            ax, perm = _send_axis(op, axis)
             cur = jax.tree.map(
-                lambda leaf, p=op.perm: lax.ppermute(leaf, axis, p), cur)
+                lambda leaf, a=ax, p=perm: lax.ppermute(leaf, a, p), cur)
         else:
             raise ValueError(f"bad send op {op}")
     return cur
@@ -535,7 +557,8 @@ def _exec_stacked(op: StackedRecv, buf, orig, chunks: int, rank, axis: str):
     arrivals, idxs = [], []
     for (load, send, recv) in op.bodies:
         payload = _select(orig, chunks, load.sel, rank, load.step)
-        arrivals.append(lax.ppermute(payload, axis, send.perm))
+        ax, perm = _send_axis(send, axis)
+        arrivals.append(lax.ppermute(payload, ax, perm))
         idxs.append(jnp.asarray(recv.sel.fn(rank, recv.step), jnp.int32))
     stacked = jnp.stack(arrivals, axis=0)
     pos = jnp.stack(idxs)
@@ -544,11 +567,18 @@ def _exec_stacked(op: StackedRecv, buf, orig, chunks: int, rank, axis: str):
     return grp.reshape(buf.shape)
 
 
-def execute_program(prog: Program, buf, axis: str, *,
+def execute_program(prog: Program, buf, axis, *,
                     use_pallas: bool = False):
     """Execute a compiled micro-op Program on the local shard `buf` inside
     shard_map. `buf` leading dim must be divisible by prog.chunks; returns
     the final buffer (meaning depends on the schedule's `result`).
+
+    `axis` is the mesh axis name for flat programs, or a dict
+    {"inter": outer_axis, "intra": inner_axis} for two-level hierarchical
+    programs: the flat rank is then composed inner-major
+    (intra_index * pod_size + pod_index, matching the schedule's rank
+    map) and every SEND ppermutes its level-local perm on its level's
+    own mesh axis.
 
     This is the single data plane: every collective the engine issues —
     whatever the algorithm, codec, or segment count — runs through here.
@@ -557,7 +587,16 @@ def execute_program(prog: Program, buf, axis: str, *,
         raise ValueError(
             f"buffer leading dim {buf.shape[0]} not divisible by "
             f"{prog.chunks} chunks")
-    rank = lax.axis_index(axis)
+    if isinstance(axis, dict):
+        sizes = dict(prog.level_sizes or ())
+        if "inter" not in sizes:
+            raise ValueError(
+                "two-axis execution needs a hierarchical program "
+                "(prog.level_sizes is unset)")
+        rank = (lax.axis_index(axis["intra"]) * sizes["inter"]
+                + lax.axis_index(axis["inter"]))
+    else:
+        rank = lax.axis_index(axis)
     ops = prog.ops
     i = 0
     if ops and isinstance(ops[0], Copy) and ops[0].kind == "bruck_pre":
@@ -685,8 +724,23 @@ def _find_generator(collective: str, algorithm: str):
     return gen
 
 
-def _gen_schedule(collective: str, algorithm: str, comm: Communicator,
+def _gen_schedule(collective: str, algorithm: str, comm,
                   root: int = 0, op: str = "add") -> Schedule:
+    levels = hierarchical.parse_hier_name(algorithm) \
+        if isinstance(algorithm, str) else None
+    if levels is not None:
+        if not isinstance(comm, ProductComm):
+            raise ValueError(
+                f"{algorithm!r} needs a two-axis (ProductComm) "
+                f"communicator, got {comm!r}")
+        intra, inter = levels
+        return hierarchical.hierarchical_schedule(
+            collective, comm, intra=intra, inter=inter, root=root, op=op)
+    if isinstance(comm, ProductComm):
+        # a flat algorithm requested over the product group: generate over
+        # the equivalent flat communicator — the engine executes it
+        # sequentially per axis (level_sizes stays None)
+        comm = comm.flat
     gen = _find_generator(collective, algorithm)
     params = inspect.signature(gen).parameters
     kw = {}
@@ -724,8 +778,27 @@ class CollectiveEngine:
     _queue: object = dataclasses.field(default=None, repr=False)
 
     # -- infrastructure ------------------------------------------------------
-    def comm(self, axis: str) -> Communicator:
+    def comm(self, axis):
+        """Communicator for one mesh axis, or a `ProductComm` for a
+        two-axis tuple (outer pod-crossing axis first)."""
+        if isinstance(axis, tuple):
+            outer_ax, inner_ax = axis
+            return product_comm(self.mesh, outer_ax, inner_ax, self.hw)
         return axis_comm(self.mesh, axis, self.hw)
+
+    def _axis_size(self, axis) -> int:
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[axis]
+
+    def _product_rank(self, axis: tuple):
+        """Flat inner-major rank inside shard_map: intra * P + pod."""
+        outer_ax, inner_ax = axis
+        return (lax.axis_index(inner_ax) * self.mesh.shape[outer_ax]
+                + lax.axis_index(outer_ax))
 
     @property
     def queue(self):
@@ -736,8 +809,12 @@ class CollectiveEngine:
         return self._queue
 
     def _cached_schedule(self, collective: str, algorithm: str,
-                         comm: Communicator, root: int, op: str) -> Schedule:
-        key = (collective, algorithm, comm.size, root, op)
+                         comm, root: int, op: str) -> Schedule:
+        # a product communicator keys on its level split, not just the
+        # flat rank count — a 4x4 product and a flat 16 must not collide
+        shape = ((comm.outer.size, comm.inner.size)
+                 if isinstance(comm, ProductComm) else comm.size)
+        key = (collective, algorithm, shape, root, op)
         sched = self._sched_cache.get(key)
         if sched is not None:
             self.stats["sched_cache_hits"] += 1
@@ -788,10 +865,13 @@ class CollectiveEngine:
                                int(x.size * x.dtype.itemsize)))
         return sched
 
-    def _execute(self, sched: Schedule, buf, axis: str,
+    def _execute(self, sched: Schedule, buf, axis,
                  compression: Optional[str] = None):
         """Compile (memoized) and run through the one data plane."""
         prog = sched.compile(codec=compression)
+        if isinstance(axis, tuple):
+            outer_ax, inner_ax = axis
+            axis = {"inter": outer_ax, "intra": inner_ax}
         return execute_program(prog, buf, axis, use_pallas=self.use_pallas)
 
     def run(self, fn, in_specs, out_specs):
@@ -800,11 +880,126 @@ class CollectiveEngine:
             fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
             check_vma=False))
 
+    # -- two-axis (hierarchical) dispatch ------------------------------------
+    def _sequential_product(self, collective: str, x, axis: tuple, *,
+                            op: str = "add", root: int = 0,
+                            compression: Optional[str] = None):
+        """Per-axis composition over (outer, inner): the fallback the
+        engine executes when a FLAT algorithm wins the product pricing
+        (or the backend is native) — one single-axis collective per
+        level, each re-resolved on its own fabric."""
+        outer_ax, inner_ax = axis
+        P = self.mesh.shape[outer_ax]
+        if collective == "allreduce":
+            M = self.mesh.shape[inner_ax]
+            flat, shape, size = _flatten_pad(x, M)
+            shard = self.reduce_scatter(flat, inner_ax, op=op,
+                                        compression=compression)
+            shard = self.allreduce(shard, outer_ax, op=op,
+                                   compression=compression)
+            full = self.allgather(shard, inner_ax)
+            return full[:size].reshape(shape)
+        if collective == "reduce_scatter":
+            # inner-major rank map: slice r of (RS inner -> RS outer) is
+            # exactly flat slice r = intra * P + pod
+            shard = self.reduce_scatter(x, inner_ax, op=op,
+                                        compression=compression)
+            return self.reduce_scatter(shard, outer_ax, op=op,
+                                       compression=compression)
+        if collective == "allgather":
+            part = self.allgather(x, outer_ax)
+            return self.allgather(part, inner_ax)
+        if collective == "bcast":
+            # inner first: after it every member of the root's pod
+            # (pod index root % P) holds the data; the outer bcast then
+            # fans each intra slot's copy across pods
+            y = self.bcast(x, inner_ax, root=root // P)
+            return self.bcast(y, outer_ax, root=root % P)
+        raise ValueError(f"no two-axis composition for {collective!r}")
+
+    def _product_collective(self, collective: str, x, axis: tuple, *,
+                            op: str = "add", root: int = 0,
+                            algorithm: str = "auto",
+                            compression: Optional[str] = None,
+                            segments: Optional[int] = None):
+        """Collective over a two-axis (outer, inner) product group.
+
+        Resolves against the `ProductComm`: a hierarchical pick executes
+        as ONE two-level program (intra steps ppermute on the inner mesh
+        axis, inter steps on the outer one — DCN carries 1/ici_size of
+        the bytes); a flat pick executes as the sequential per-axis
+        composition it was priced against. A size-1 level degenerates to
+        the ordinary single-axis path.
+        """
+        outer_ax, inner_ax = axis
+
+        def single(ax):
+            if collective == "allreduce":
+                return self.allreduce(x, ax, op=op, algorithm=algorithm,
+                                      compression=compression,
+                                      segments=segments)
+            if collective == "reduce_scatter":
+                return self.reduce_scatter(x, ax, op=op,
+                                           algorithm=algorithm,
+                                           compression=compression,
+                                           segments=segments)
+            if collective == "allgather":
+                return self.allgather(x, ax, algorithm=algorithm,
+                                      segments=segments)
+            return self.bcast(x, ax, root=root, algorithm=algorithm,
+                              segments=segments)
+
+        if self.mesh.shape[outer_ax] == 1:
+            return single(inner_ax)
+        if self.mesh.shape[inner_ax] == 1:
+            return single(outer_ax)
+        if self.backend == "native" and algorithm in (None, "auto"):
+            return self._sequential_product(collective, x, axis, op=op,
+                                            root=root,
+                                            compression=compression)
+        if collective == "bcast" and root != 0:
+            # the two-level bcast composition is root=0 only (see
+            # hierarchical.hier_bcast); other roots run per axis
+            return self._sequential_product("bcast", x, axis, root=root)
+        sched = self._resolve(collective, x, axis, algorithm, root=root,
+                              op=op, segments=segments,
+                              compression=compression)
+        if sched.level_sizes is None:
+            return self._sequential_product(collective, x, axis, op=op,
+                                            root=root,
+                                            compression=compression)
+        if collective == "reduce_scatter":
+            if x.size % sched.chunks:
+                raise ValueError(
+                    f"reduce_scatter size {x.size} % {sched.chunks} != 0")
+            flat = x.reshape(-1)
+            out = self._execute(sched, flat, axis, compression)
+            rank = self._product_rank(axis)
+            csize = flat.shape[0] // sched.chunks
+            own = sched.owned_chunk(rank)
+            return lax.dynamic_slice_in_dim(out, own * csize, csize, 0)
+        if collective == "allgather":
+            n = self._axis_size(axis)
+            flat = x.reshape(-1)
+            rank = self._product_rank(axis)
+            buf = jnp.zeros((n * flat.shape[0],), flat.dtype)
+            buf = lax.dynamic_update_slice_in_dim(
+                buf, flat, rank * flat.shape[0], 0)
+            return self._execute(sched, buf, axis)
+        # allreduce / bcast: full result, chunk-padded like the flat path
+        flat, shape, size = _flatten_pad(x, sched.chunks)
+        out = self._execute(sched, flat, axis, compression)
+        return out[:size].reshape(shape)
+
     # -- MPI-like API (paper Listing 1) --------------------------------------
-    def allreduce(self, x, axis: str, op: str = "add",
+    def allreduce(self, x, axis, op: str = "add",
                   algorithm: str = "auto",
                   compression: Optional[str] = None,
                   segments: Optional[int] = None):
+        if isinstance(axis, tuple):
+            return self._product_collective(
+                "allreduce", x, axis, op=op, algorithm=algorithm,
+                compression=compression, segments=segments)
         n = self.mesh.shape[axis]
         if n == 1:
             return x
@@ -826,12 +1021,16 @@ class CollectiveEngine:
         out = self._execute(sched, flat, axis, compression)
         return out[:size].reshape(shape)
 
-    def reduce_scatter(self, x, axis: str, op: str = "add",
+    def reduce_scatter(self, x, axis, op: str = "add",
                        algorithm: str = "auto",
                        compression: Optional[str] = None,
                        segments: Optional[int] = None):
         """Tiled semantics on the flattened array: rank r gets slice r of
         the reduction. Input size must be divisible by the rank count."""
+        if isinstance(axis, tuple):
+            return self._product_collective(
+                "reduce_scatter", x, axis, op=op, algorithm=algorithm,
+                compression=compression, segments=segments)
         n = self.mesh.shape[axis]
         if n == 1:
             return x
@@ -850,10 +1049,14 @@ class CollectiveEngine:
         own = sched.owned_chunk(rank)
         return lax.dynamic_slice_in_dim(out, own * csize, csize, 0)
 
-    def allgather(self, x, axis: str, algorithm: str = "auto",
+    def allgather(self, x, axis, algorithm: str = "auto",
                   segments: Optional[int] = None):
         """Tiled: returns concat of every rank's flat x (own shard at
         position rank)."""
+        if isinstance(axis, tuple):
+            return self._product_collective(
+                "allgather", x, axis, algorithm=algorithm,
+                segments=segments)
         n = self.mesh.shape[axis]
         if n == 1:
             return x.reshape(-1)
@@ -869,8 +1072,12 @@ class CollectiveEngine:
             buf, flat, rank * flat.shape[0], 0)
         return self._execute(sched, buf, axis)
 
-    def bcast(self, x, axis: str, root: int = 0, algorithm: str = "auto",
+    def bcast(self, x, axis, root: int = 0, algorithm: str = "auto",
               segments: Optional[int] = None):
+        if isinstance(axis, tuple):
+            return self._product_collective(
+                "bcast", x, axis, root=root, algorithm=algorithm,
+                segments=segments)
         n = self.mesh.shape[axis]
         if n == 1:
             return x
@@ -1042,6 +1249,14 @@ class CollectiveEngine:
             return x
         if len(axes) == 1:
             return self.allreduce(x, axes[0], op=op, algorithm=algorithm,
+                                  compression=compression)
+        if len(axes) == 2:
+            # two-level case: ONE hierarchical program over the
+            # (outer x inner) product replaces the RS/recurse/AG
+            # sandwich (axes are ordered fastest first, so the slow
+            # pod-crossing axis is the last one)
+            return self.allreduce(x, (axes[1], axes[0]), op=op,
+                                  algorithm=algorithm,
                                   compression=compression)
         n0 = self.mesh.shape[axes[0]]
         flat, shape, size = _flatten_pad(x, n0)

@@ -37,6 +37,14 @@ class HwSpec:
     dcn_min_segment_bytes: float = 256 * 1024
     # Eager-protocol modeled staging-copy bandwidth (HBM copy at receiver).
     eager_copy_bw: float = 819e9
+    # Eager-protocol cutoffs: the Rx staging pool is per-fabric, and the
+    # DCN pool is provisioned smaller (more peers share it), so a DCN
+    # communicator rejects eager at sizes the ICI one still accepts.
+    ici_eager_max_bytes: float = 64 * 1024
+    dcn_eager_max_bytes: float = 32 * 1024
+    # Mesh axes that cross the pod boundary (priced on DCN). Renamed or
+    # additional DCN axes belong here rather than in string compares.
+    dcn_axes: tuple = ("pod",)
     # Rendezvous handshake: one extra round trip before payload.
     rendezvous_rtt: float = 2e-6
 

@@ -116,6 +116,13 @@ class Send:
     # fraction of the full message this crossing moves per rank — the
     # static cost term the alpha-beta walk (`Program.cost`) prices.
     bytes_frac: float = 1.0
+    # Two-level programs: which level's fabric this crossing rides
+    # ("intra" | "inter", None = the communicator's own fabric) and the
+    # permutation in that level's rank space (the engine ppermutes this
+    # on the level's own mesh axis; `perm` stays the flat-rank pairs the
+    # simulator executes).
+    level: Optional[str] = None
+    level_perm: Optional[tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,6 +260,9 @@ class Program:
     # >1 when uniform slots use independent links concurrently (bidi ring);
     # carried from the schedule so the cost walk needs no schedule access.
     overlap_factor: float = 1.0
+    # Two-level programs: (("inter", P), ("intra", M)) level rank counts,
+    # carried from the schedule; None for flat programs.
+    level_sizes: Optional[tuple] = None
 
     def describe(self) -> str:
         """One line per op — the firmware disassembly (tests, debugging)."""
@@ -406,15 +416,55 @@ class Program:
             wire = wire * e
         return lat, wire
 
+    def _level_fabrics(self, comm) -> dict:
+        """level tag -> (alpha, bw, floor) for this comm. A flat
+        communicator resolves every level to itself (`level_comm`), so
+        flat pricing is bitwise-unchanged; a `ProductComm` routes "intra"
+        exchanges to the ICI group and "inter" ones to the DCN group."""
+        fabrics = {}
+        for level in (None, "intra", "inter"):
+            c = comm.level_comm(level) if hasattr(comm, "level_comm") \
+                else comm
+            fabrics[level] = (c.hop_latency, c.link_bw, c.min_segment_bytes)
+        return fabrics
+
+    def fabric_wire_bytes(self, msg_bytes: float, comm,
+                          elem_bytes: int = 4) -> dict:
+        """Per-fabric wire bytes per rank: {"ici": ..., "dcn": ...}.
+
+        The honest byte accounting behind the hierarchical claim — the
+        priced DCN bytes of a two-level allreduce are exactly
+        flat / ici_size. Segmentation does not change wire bytes; codec
+        compression does (same scaling as `cost`)."""
+        out = {"ici": 0.0, "dcn": 0.0}
+        for mult, _k, body, _region in self.exchange_terms():
+            scale = 1.0
+            send = None
+            for op in body:
+                if isinstance(op, Compress):
+                    from repro.core import plugins  # lazy: keep IR jax-free
+                    scale = (plugins.get_codec(op.codec).wire_bytes_per_elem
+                             / float(elem_bytes))
+                elif isinstance(op, Send):
+                    send = op
+            c = comm.level_comm(send.level) if hasattr(comm, "level_comm") \
+                else comm
+            fabric = "dcn" if c.is_dcn else "ici"
+            out[fabric] += mult * float(msg_bytes) * send.bytes_frac * scale
+        return out
+
     def _cost_walk(self, msg_bytes: float, comm, elem_bytes: int) -> tuple:
         """(total, latency, wire, crossings) over the ops. `total`
         accumulates in the exact historical order (golden parity is
         asserted bitwise); the split halves accumulate alongside it.
         `crossings` counts per-segment wire crossings (mult * k_eff) —
-        the unit the retransmission surcharge is charged per."""
-        alpha = comm.hop_latency
-        bw = comm.link_bw
-        floor = comm.min_segment_bytes
+        the unit the retransmission surcharge is charged per. Each
+        exchange prices on `comm.level_comm(send.level)`'s fabric, so a
+        two-level program's intra steps ride ICI alpha/bandwidth/floor
+        and its inter steps ride DCN's; flat programs (level=None)
+        resolve to `comm` itself and price bitwise-identically to the
+        single-fabric walk."""
+        fabrics = self._level_fabrics(comm)
         total = 0.0
         lat = 0.0
         wir = 0.0
@@ -430,6 +480,7 @@ class Program:
                              / float(elem_bytes))
                 elif isinstance(op, Send):
                     send = op
+            alpha, bw, floor = fabrics[send.level]
             wire = float(msg_bytes) * send.bytes_frac * scale
             k_eff = int(k)
             while k_eff > 1 and wire / k_eff < floor:
@@ -500,7 +551,10 @@ def _exchange_ops(step: Step, relay: str, step_idx: Optional[int],
                   k_req: int, codec: Optional[str]) -> tuple:
     """The micro-op sequence for one schedule step."""
     ops = [Copy("load", sel=step.send_sel, source=relay, step=step_idx)]
-    send = Send(tuple(step.perm), bytes_frac=step.bytes_frac)
+    send = Send(tuple(step.perm), bytes_frac=step.bytes_frac,
+                level=step.level,
+                level_perm=(tuple(step.level_perm)
+                            if step.level_perm is not None else None))
     if codec is not None and step.op != "copy":
         # codecs compress the wire of combine exchanges (the RS phase);
         # copy-only relays ship already-reduced chunks uncompressed, the
@@ -665,12 +719,15 @@ def _stream_eligible(loop: Loop, k_req: int, nranks: int) -> bool:
         return False
     track = False
     needs_proof = False
+    levels = set()
     for slot in loop.slots:
         if not (len(slot) == 1 and isinstance(slot[0], SegLoop)):
             return False
         seg = slot[0]
         if seg.segments != k_req:
             return False
+        levels.add(next(o for o in seg.body
+                        if isinstance(o, Send)).level)
         load, recv = seg.body[0], seg.body[-1]
         if recv.dsts is not None:
             return False
@@ -689,6 +746,11 @@ def _stream_eligible(loop: Loop, k_req: int, nranks: int) -> bool:
         else:  # SRC_ORIGINAL payloads never read mutable state
             if recv.sel.kind == SEL_RANGE:
                 needs_proof = True
+    if len(levels) > 1:
+        # cross-step streaming only within one level: a region spanning
+        # fabrics would earn a drain credit priced on one fabric while
+        # its exchanges ride another
+        return False
     if track and loop.period != 1:
         return False
     if needs_proof:
@@ -747,6 +809,9 @@ def fuse_chains(ops: tuple, k_req: int, nranks: int) -> tuple:
         load, recv = body[0], body[-1]
         return (load.sel, recv.sel, load.source, load.step)
 
+    def level_of(body):
+        return next(o for o in body if isinstance(o, Send)).level
+
     out: list = []
     i = 0
     while i < len(ops):
@@ -757,10 +822,13 @@ def fuse_chains(ops: tuple, k_req: int, nranks: int) -> tuple:
         # extend pairwise: each call proves both bodies' within-step
         # condition and the boundary between them, so an accepted run of
         # length >= 2 is fully proven — no whole-run re-check needed
-        # (condition 2 only ever relates consecutive steps)
+        # (condition 2 only ever relates consecutive steps). Runs never
+        # cross a level boundary: the chain's drain credit must price on
+        # one fabric.
         run = [ops[i]]
         j = i + 1
         while (j < len(ops) and _chain_body_eligible(ops[j], k_req)
+               and level_of(ops[j].body) == level_of(run[-1].body)
                and _regions_stream_safe(
                    [seq_of(run[-1].body), seq_of(ops[j].body)],
                    k_req, nranks)):
@@ -899,7 +967,8 @@ def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
         name=schedule.name, collective=schedule.collective,
         nranks=schedule.nranks, chunks=schedule.chunks,
         relay=schedule.relay, segments=k_req, codec=codec,
-        ops=ops, overlap_factor=schedule.overlap_factor)
+        ops=ops, overlap_factor=schedule.overlap_factor,
+        level_sizes=schedule.level_sizes)
     if len(_COMPILE_CACHE) >= _COMPILE_CACHE_MAX:
         _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))  # FIFO eviction
     _COMPILE_CACHE[key] = prog

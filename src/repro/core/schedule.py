@@ -95,6 +95,14 @@ class Step:
     mask_recv: bool = False
     uniform: bool = False
     segmentable: Optional[bool] = None
+    # Hierarchical (two-level) schedules tag each step with the level it
+    # runs on ("intra" = inner/ICI group, "inter" = outer/DCN group) and
+    # the permutation in that level's own rank space. The cost walk prices
+    # the exchange on `comm.level_comm(level)`'s fabric; the engine
+    # ppermutes `level_perm` on the level's own mesh axis. Flat schedules
+    # leave both None.
+    level: Optional[str] = None
+    level_perm: Optional[tuple] = None
 
     def __post_init__(self):
         if self.op not in COMBINE_OPS:
@@ -104,7 +112,8 @@ class Step:
         """Loop-coalescing identity: steps with equal signatures execute
         the same micro-ops and differ only in the step index."""
         return (self.perm, self.op, self.send_sel, self.recv_sel,
-                self.mask_recv, self.uniform, self.segmentable)
+                self.mask_recv, self.uniform, self.segmentable,
+                self.level, self.level_perm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +150,9 @@ class Schedule:
     # Rx-buffer-sized segments and pipelined (segment s+1 rides the wire
     # while segment s is combined — ACCL+ §4.4.3). 1 = unsegmented.
     segments: int = 1
+    # Two-level hierarchical schedules record the level rank counts here,
+    # e.g. {"inter": pod_size, "intra": ici_size}; None for flat.
+    level_sizes: Optional[tuple] = None
 
     # ---- static cost terms (selector + EXPERIMENTS tables) ---------------
     def n_steps(self) -> int:

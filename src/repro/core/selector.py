@@ -23,10 +23,11 @@ import dataclasses
 from typing import Optional
 
 from repro.core import algorithms as algos
+from repro.core import hierarchical
 from repro.core import plugins
 from repro.core.program import Program, Stream, StreamChain, fit_segments
 from repro.core.schedule import Schedule
-from repro.core.topology import Communicator
+from repro.core.topology import Communicator, ProductComm
 
 # Which algorithms may run under which protocol (paper Table 1 + [+] ours).
 ALGO_PROTOCOLS = {
@@ -93,9 +94,13 @@ class Selector:
     #: segment counts the selector sweeps (1 = unsegmented baseline).
     DEFAULT_SEGMENT_CANDIDATES = (1, 2, 4, 8, 16, 32)
 
-    def __init__(self, eager_max_bytes: int = 64 * 1024,
+    def __init__(self, eager_max_bytes: Optional[int] = None,
                  segment_candidates: tuple = DEFAULT_SEGMENT_CANDIDATES,
                  min_segment_bytes: int = 8 * 1024):
+        # None (default) = use the communicator's per-fabric cap
+        # (`Communicator.eager_max_bytes`: the DCN Rx staging pool is
+        # smaller than the ICI one). An explicit value overrides both —
+        # the pre-per-fabric behaviour, kept for tests/tools that pin it.
         self.eager_max_bytes = eager_max_bytes
         self.segment_candidates = tuple(segment_candidates)
         # Rx-buffer floor: never cut a step's payload below this many bytes
@@ -146,7 +151,12 @@ class Selector:
     def _protocol_overhead(self, protocol: str, msg_bytes: float,
                            comm: Communicator) -> Optional[float]:
         if protocol == "eager":
-            if msg_bytes > self.eager_max_bytes:
+            cap = self.eager_max_bytes
+            if cap is None:
+                # per-fabric Rx staging pool: DCN comms reject eager at
+                # sizes the ICI pool still accepts
+                cap = comm.eager_max_bytes
+            if msg_bytes > cap:
                 return None  # Rx-buffer pool exceeded
             return msg_bytes / comm.hw.eager_copy_bw
         return comm.hw.rendezvous_rtt
@@ -328,6 +338,9 @@ class Selector:
                          comm: Communicator, codec: Optional[str] = None,
                          elem_bytes: int = 4,
                          lead_dim: Optional[int] = None) -> Choice:
+        if isinstance(comm, ProductComm):
+            return self._choose_product(collective, msg_bytes, comm,
+                                        codec, elem_bytes, lead_dim)
         tuned_algo, tuned_segs = self._tuned(collective, msg_bytes,
                                              comm.size, codec)
         custom_algos = {a for a, _g, _p
@@ -360,6 +373,94 @@ class Selector:
                 # engine's memoized compile of choice.schedule returns
                 # THIS program object — priced and executed artifacts are
                 # identical, not merely equal
+                sched_k = sched.with_segments(k)
+                prog = sched_k.compile(codec=codec)
+                for proto in protos:
+                    t = self.price_program(prog, proto, msg_bytes, comm,
+                                           elem_bytes=elem_bytes)
+                    if t is None:
+                        continue
+                    cand = Choice(collective, algo, proto, t, sched_k,
+                                  segments=k, codec=codec, program=prog)
+                    if tuned_algo == algo:
+                        if tuned_best is None or t < tuned_best.predicted_s:
+                            tuned_best = cand
+                    if best is None or t < best.predicted_s:
+                        best = cand
+            if tuned_best is not None:
+                return tuned_best
+        if best is None:
+            raise ValueError(
+                f"no applicable algorithm for {collective} over {comm}")
+        return best
+
+    def _choose_product(self, collective: str, msg_bytes: int,
+                        comm: ProductComm, codec: Optional[str] = None,
+                        elem_bytes: int = 4,
+                        lead_dim: Optional[int] = None) -> Choice:
+        """Two-level candidate family for a (pod x intra-pod) product.
+
+        The `hierarchical:<intra>+<inter>` compositions are priced
+        head-to-head against the flat algorithms over the product's
+        bottleneck view (`ProductComm.flat`: full rank count, pod
+        fabric). The hierarchical programs put 1/ici_size of the bytes
+        on DCN, so they dominate from well below 1 MiB; the flat rows
+        keep the comparison honest and remain the fallback the engine
+        executes per axis when one is picked. A degenerate level
+        (pod_size == 1 or intra == 1) delegates to the flat chooser
+        over the one real level — flat wins by construction there.
+        """
+        if comm.outer.size < 2:
+            return self._choose_uncached(collective, msg_bytes, comm.inner,
+                                         codec, elem_bytes, lead_dim)
+        if comm.inner.size < 2:
+            return self._choose_uncached(collective, msg_bytes, comm.outer,
+                                         codec, elem_bytes, lead_dim)
+        if collective not in hierarchical.INTER_ALGOS:
+            # no two-level composition (alltoall, reduce, gather):
+            # price flat over the bottleneck view
+            return self._choose_uncached(collective, msg_bytes, comm.flat,
+                                         codec, elem_bytes, lead_dim)
+        tuned_algo, tuned_segs = self._tuned(collective, msg_bytes,
+                                             comm.size, codec)
+        cands = []
+        for intra in hierarchical.INTRA_ALGOS:
+            for inter in hierarchical.inter_candidates(
+                    collective, comm.outer.size):
+                self.stats["gen_calls"] += 1
+                sched = hierarchical.hierarchical_schedule(
+                    collective, comm, intra=intra, inter=inter)
+                # hierarchical programs span fabrics: rendezvous only
+                # (per-region eager staging is not modeled)
+                cands.append((sched.name, sched, ("rendezvous",), True))
+        flat = comm.flat
+        custom_algos = {a for a, _g, _p
+                        in plugins.custom_candidates(collective)}
+        for algo, gen in self.candidates(collective, flat):
+            self.stats["gen_calls"] += 1
+            try:
+                sched = gen(flat)
+            except ValueError:
+                if algo in custom_algos:
+                    continue
+                raise
+            cands.append((algo, sched, self._protocols(collective, algo),
+                          False))
+        best: Optional[Choice] = None
+        for algo, sched, protos, is_hier in cands:
+            # per-level segment floors: a hierarchical candidate's ladder
+            # comes from the inner (ICI) fabric — the cost walk and the
+            # executor clamp each inter exchange to the DCN floor anyway
+            floor_comm = comm.inner if is_hier else flat
+            seg_space = ((tuned_segs,) if tuned_algo == algo
+                         and tuned_segs is not None
+                         else self.admissible_segments(
+                             sched, msg_bytes, floor_comm, codec,
+                             elem_bytes))
+            seg_space = self.fit_candidate_segments(
+                sched, msg_bytes, seg_space, codec, elem_bytes, lead_dim)
+            tuned_best: Optional[Choice] = None
+            for k in seg_space:
                 sched_k = sched.with_segments(k)
                 prog = sched_k.compile(codec=codec)
                 for proto in protos:

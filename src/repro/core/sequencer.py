@@ -300,10 +300,12 @@ class Sequencer:
                     algorithm: str = "auto",
                     compression: Optional[str] = None) -> Request:
         """Non-blocking hierarchical allreduce: `engine.allreduce_multi`
-        as a request chain (RS over axes[0] -> recurse -> AG back), each
-        stage a queued request depending on the previous one. The
-        returned request's wait() yields the fully reduced array in the
-        operand's shape."""
+        as queued work. Two live axes fold into ONE tuple-axis request
+        (a single two-level hierarchical program); more than two fall
+        back to the request chain (RS over axes[0] -> recurse -> AG
+        back), each stage depending on the previous one. The returned
+        request's wait() yields the fully reduced array in the operand's
+        shape."""
         eng = self.engine
         axes = [a for a in axes if eng.mesh.shape[a] > 1]
         src_shape = x.shape if isinstance(x, Request) else tuple(x.shape)
@@ -321,6 +323,14 @@ class Sequencer:
                            _result=x)
         if len(axes) == 1:
             return self.issue("allreduce", x, axes[0], op=op,
+                              algorithm=algorithm, compression=compression)
+        if len(axes) == 2:
+            # two-level case: ONE tuple-axis request — the engine runs it
+            # as a single hierarchical program (or the priced flat
+            # fallback), the queue prices it on the ProductComm's
+            # per-level fabrics, and no pad/trim hooks are needed (so
+            # simulate_drain can execute it)
+            return self.issue("allreduce", x, (axes[1], axes[0]), op=op,
                               algorithm=algorithm, compression=compression)
         n0 = eng.mesh.shape[axes[0]]
         size = _size_of(src_shape)

@@ -67,6 +67,22 @@ class Communicator:
         return (self.hw.dcn_min_segment_bytes if self.is_dcn
                 else self.hw.ici_min_segment_bytes)
 
+    @property
+    def eager_max_bytes(self) -> float:
+        """Per-fabric eager-protocol cutoff (Rx staging-pool capacity)."""
+        return (self.hw.dcn_eager_max_bytes if self.is_dcn
+                else self.hw.ici_eager_max_bytes)
+
+    def level_comm(self, level) -> "Communicator":
+        """The communicator that prices exchanges tagged `level`.
+
+        A flat communicator has one fabric, so every level resolves to
+        itself; `ProductComm` overrides this to route "intra" exchanges to
+        the inner (ICI) communicator and "inter" ones to the outer (DCN)
+        communicator. `Program._cost_walk` calls this per exchange.
+        """
+        return self
+
     # -- neighbour maps used by schedule generators ------------------------
     def ring_perm(self, step: int = 1) -> list[tuple[int, int]]:
         """src->dst pairs rotating by `step` (bidirectional rings use ±1)."""
@@ -127,12 +143,119 @@ class Communicator:
             raise ValueError(f"ranks {sorted(bad)} not in communicator")
         return self.shrunk(self.size - len(dead))
 
+    # -- hierarchical factoring --------------------------------------------
+    def factor(self, pod_size: int) -> "ProductComm":
+        """Factor a flat communicator into a (pod x intra-pod) product.
+
+        The outer level keeps this communicator's fabric (typically DCN)
+        at `pod_size` ranks; the inner level is the remaining ICI group.
+        Flat rank r maps inner-major: r = intra_rank * pod_size + pod_rank,
+        so contiguous chunk ranges stay contiguous at both levels.
+        """
+        pod_size = int(pod_size)
+        if pod_size < 1 or self.size % pod_size:
+            raise ValueError(
+                f"cannot factor {self.size} ranks into pods of {pod_size}")
+        outer = dataclasses.replace(self, size=pod_size)
+        inner = Communicator(
+            axis=self.axis, size=self.size // pod_size,
+            is_dcn=False, hw=self.hw,
+        )
+        return ProductComm(outer=outer, inner=inner)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProductComm:
+    """A two-level (outer x inner) product communicator.
+
+    `outer` is the slow pod-crossing level (usually DCN), `inner` the
+    fast intra-pod level (ICI). Flat rank numbering is inner-major:
+
+        r = intra_rank * P + pod_rank      (P = outer.size)
+
+    so every contiguous coarse chunk [i*P, (i+1)*P) belongs to intra
+    rank i's pod-local shard. Delegating scalar properties report the
+    outer (bottleneck) fabric so flat candidates priced over this comm
+    see the slow link; `level_comm` routes per-exchange pricing to the
+    correct level.
+    """
+
+    outer: Communicator
+    inner: Communicator
+
+    @property
+    def size(self) -> int:
+        return self.outer.size * self.inner.size
+
+    @property
+    def axis(self) -> str:
+        return self.outer.axis
+
+    @property
+    def hw(self) -> HwSpec:
+        return self.outer.hw
+
+    # Bottleneck view: a flat algorithm over the product group crosses
+    # the pod boundary, so price its links on the outer fabric.
+    @property
+    def is_dcn(self) -> bool:
+        return self.outer.is_dcn
+
+    @property
+    def link_bw(self) -> float:
+        return self.outer.link_bw
+
+    @property
+    def hop_latency(self) -> float:
+        return self.outer.hop_latency
+
+    @property
+    def min_segment_bytes(self) -> float:
+        return self.outer.min_segment_bytes
+
+    @property
+    def eager_max_bytes(self) -> float:
+        return self.outer.eager_max_bytes
+
+    @property
+    def flat(self) -> Communicator:
+        """The equivalent single-level communicator (bottleneck fabric)."""
+        return Communicator(
+            axis=self.outer.axis, size=self.size,
+            is_dcn=self.outer.is_dcn, hw=self.outer.hw,
+        )
+
+    def level_comm(self, level) -> Communicator:
+        if level == "intra":
+            return self.inner
+        if level == "inter":
+            return self.outer
+        return self.flat
+
+    @property
+    def is_pow2(self) -> bool:
+        return self.size & (self.size - 1) == 0
+
 
 def axis_comm(mesh, axis: str, hw: HwSpec = TPU_V5E) -> Communicator:
-    """Build a Communicator for one axis of a jax Mesh."""
+    """Build a Communicator for one axis of a jax Mesh.
+
+    The axis→fabric map lives in `HwSpec.dcn_axes` (default: "pod"), so
+    renamed or multiple pod-crossing axes price on DCN without editing
+    this function.
+    """
     return Communicator(
         axis=axis,
         size=mesh.shape[axis],
-        is_dcn=(axis == "pod"),
+        is_dcn=(axis in hw.dcn_axes),
         hw=hw,
+    )
+
+
+def product_comm(mesh, outer_axis: str, inner_axis: str,
+                 hw: HwSpec = TPU_V5E) -> ProductComm:
+    """Product communicator over two mesh axes (outer = pod-crossing)."""
+    return ProductComm(
+        outer=axis_comm(mesh, outer_axis, hw),
+        inner=axis_comm(mesh, inner_axis, hw),
     )

@@ -127,7 +127,11 @@ def grad_sync(grads, specs, ctx: ParCtx,
         if not missing:
             continue
         leaves = [l for _, l in entries]
-        # fastest (ICI) axes first, pod (DCN) last — hierarchical AR
+        # fastest (ICI) axes first, pod (DCN) last. A two-axis group
+        # (("data", "pod") — the cross-pod data-parallel bucket) folds
+        # into ONE hierarchical request over the product communicator:
+        # a single two-level program whose DCN phase carries 1/|data|
+        # of the bucket bytes (engine.allreduce_multi / issue_multi).
         order = [a for a in ("data", "model") if a in missing] + \
                 [a for a in missing if a not in ("data", "model")]
         if use_queue:

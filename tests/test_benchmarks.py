@@ -37,6 +37,7 @@ def test_json_written_and_matches_returned(sweep_results):
     assert on_disk["rows"] == returned["rows"]
     assert on_disk["segment_sweep"] == returned["segment_sweep"]
     assert on_disk["queue_sweep"] == returned["queue_sweep"]
+    assert on_disk["hier_sweep"] == returned["hier_sweep"]
     assert {"jax", "backend", "device_count"} <= set(on_disk["meta"])
 
 
@@ -161,6 +162,53 @@ def test_queue_sweep_small_requests_coalesce(sweep_results):
     assert not any(e["coalesced"] for e in queue
                    if e["msg_bytes"] > 64 * 1024)
     assert not any(e["coalesced"] for e in queue if e["requests"] == 1)
+
+
+# -- the hier sweep (two-level cross-fabric allreduce model) ------------------
+
+def test_hier_sweep_schema(sweep_results):
+    _, on_disk = sweep_results
+    hier = on_disk["hier_sweep"]
+    assert hier
+    required = {"collective", "nranks", "pod_size", "msg_bytes", "flat_s",
+                "flat_algorithm", "hier_s", "hier_algorithm", "speedup",
+                "dcn_ratio"}
+    for entry in hier:
+        assert required <= set(entry)
+        assert entry["hier_algorithm"].startswith("hierarchical:")
+    # both pod counts sweep the full size ladder
+    for pod in (2, 4):
+        sizes = {e["msg_bytes"] for e in hier if e["pod_size"] == pod}
+        assert min(sizes) <= 1 << 16 and max(sizes) >= 1 << 26
+
+
+def test_hier_sweep_hier_wins_at_bandwidth_sizes(sweep_results):
+    """Acceptance (bench form): the two-level composition prices strictly
+    below the best flat algorithm from 64 KiB through 16 MiB at both pod
+    counts, and always moves fewer bytes over DCN."""
+    _, on_disk = sweep_results
+    checked = 0
+    for e in on_disk["hier_sweep"]:
+        assert e["dcn_ratio"] < 1.0, e
+        if 1 << 16 <= e["msg_bytes"] <= 16 << 20:
+            assert e["hier_s"] < e["flat_s"], e
+            checked += 1
+    assert checked >= 8
+
+
+def test_check_bench_gates_hier_metrics(sweep_results, tmp_path):
+    """hier_sweep points gate like queue points: a drifted hier_s (or
+    flat_s) fails the build until the baseline is refreshed."""
+    _, on_disk = sweep_results
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    for metric in ("hier_s", "flat_s"):
+        drifted = json.loads(json.dumps(on_disk))
+        drifted["hier_sweep"][0][metric] *= 1.25
+        results = tmp_path / f"hier_drift_{metric}.json"
+        results.write_text(json.dumps(drifted))
+        assert cb.main([str(results), "--baseline", str(baseline)]) == 1
 
 
 # -- the CI perf gate (scripts/check_bench.py) --------------------------------
