@@ -31,7 +31,7 @@ def timeit(fn, *args, warmup=2, iters=10):
 # run.py serializes this into BENCH_collectives.json so the perf
 # trajectory is diffable across PRs.
 RESULTS = {"rows": [], "segment_sweep": [], "queue_sweep": [],
-           "fault_sweep": [], "hier_sweep": []}
+           "fault_sweep": [], "hier_sweep": [], "contention_sweep": []}
 
 
 def row(name: str, us: float, derived: str = ""):
@@ -61,12 +61,19 @@ def record_hier(entry: dict):
     RESULTS["hier_sweep"].append(entry)
 
 
+def record_contention(entry: dict):
+    """Attach one structured contention-sweep record (see
+    figures.contention_sweep)."""
+    RESULTS["contention_sweep"].append(entry)
+
+
 def reset_results():
     RESULTS["rows"].clear()
     RESULTS["segment_sweep"].clear()
     RESULTS["queue_sweep"].clear()
     RESULTS["fault_sweep"].clear()
     RESULTS["hier_sweep"].clear()
+    RESULTS["contention_sweep"].clear()
 
 
 def header():

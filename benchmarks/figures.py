@@ -6,9 +6,12 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import (
-    record_fault, record_hier, record_queue, record_sweep, row, timeit,
+    record_contention, record_fault, record_hier, record_queue,
+    record_sweep, row, timeit,
 )
-from repro.core import CollectiveEngine, Communicator, Selector
+from repro.core import (
+    CollectiveEngine, Communicator, MeshMakespan, PricingEnv, Selector,
+)
 from repro.core.hw_spec import ACCL_CLUSTER, TPU_V5E
 from repro.core.topology import make_mesh
 from repro.core import algorithms as A
@@ -282,7 +285,7 @@ def queue_sweep(request_counts=(1, 2, 4, 8), nranks: int = 8,
                 seq.issue("allreduce",
                           np.zeros((nbytes // 4,), np.float32), "x")
             plan = seq.plan("x")
-            makespan = seq.makespan("x", comm=comm)
+            makespan = seq.makespan("x", env=PricingEnv(comm=comm))
             serial = seq.serial_cost("x", comm=comm)
             coalesced = any(it.coalesced for it in plan)
             record_queue({
@@ -327,12 +330,12 @@ def fault_sweep(drop_rates=(0.0, 0.01, 0.05, 0.2), nranks: int = 8,
         for _ in range(4):
             seq.issue("allreduce", np.zeros((nbytes // 4,), np.float32),
                       "x")
-        base = seq.makespan("x", comm=comm)
+        base = seq.makespan("x", env=PricingEnv(comm=comm))
         for tier_name in tiers:
             tier = TIERS[tier_name]
             for p in drop_rates:
-                makespan = seq.makespan("x", comm=comm, tier=tier,
-                                        drop_prob=p)
+                makespan = seq.makespan("x", env=PricingEnv(
+                    comm=comm, tier=tier, drop_prob=p))
                 record_fault({
                     "collective": "allreduce",
                     "nranks": nranks,
@@ -425,6 +428,73 @@ def hier_sweep(pod_sizes=(2, 4), nranks: int = 16,
                 f"flat={flat_c.algorithm}={flat_c.predicted_s*1e6:.1f}us "
                 f"speedup={flat_c.predicted_s/hier_s:.2f}x "
                 f"dcn_ratio={hier_dcn/flat_dcn:.3f}")
+
+
+# -- Contention sweep: mesh-level makespan across concurrent queues ----------
+
+def contention_sweep(queue_counts=(1, 2, 4),
+                     sizes=(1 << 16, 1 << 20, 1 << 24),
+                     requests_per_queue: int = 8):
+    """Mesh-level contention-aware makespan vs per-queue optimism.
+
+    Pure model (no device timing): `q` concurrent `Sequencer` queues of
+    independent allreduces are composed by `MeshMakespan` over the
+    physical links (`topology.FabricOccupancy`). Two modes:
+
+      * `shared` — every queue runs on the SAME ICI axis, so their wire
+        seconds serialize on one link: the mesh makespan approaches the
+        serial sum (two saturating queues price ~2x one queue, not
+        ~1x — the honest shared-fabric accounting per-queue pricing
+        cannot see).
+      * `disjoint` — queues alternate between an ICI axis and the DCN
+        pod axis; the busiest link bounds, so the mesh makespan tracks
+        the SLOWER queue (~1x max, not the sum).
+
+    `mesh_s` (the composition) and `max_queue_s` (the largest isolated
+    per-queue makespan — the old model's answer) both land in the
+    `contention_sweep` section of BENCH_collectives.json, gated by
+    `scripts/check_bench.py`.
+    """
+    from repro.core.sequencer import Sequencer
+
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    eng = CollectiveEngine(mesh)
+    for nbytes in sizes:
+        for q in queue_counts:
+            for mode in ("shared", "disjoint"):
+                axes = ["data" if mode == "shared" else
+                        ("data", "pod")[i % 2] for i in range(q)]
+                mm = MeshMakespan()
+                seqs = []
+                per_queue = []
+                for axis in axes:
+                    seq = Sequencer(eng)
+                    for _ in range(requests_per_queue):
+                        seq.issue("allreduce",
+                                  np.zeros((nbytes // 4,), np.float32),
+                                  axis)
+                    seqs.append((seq, axis))
+                    per_queue.append(seq.makespan(axis))
+                    mm.add(seq, axis)
+                mesh_s = mm.total()
+                max_queue = max(per_queue)
+                for seq, _axis in seqs:
+                    seq.clear()
+                record_contention({
+                    "collective": "allreduce",
+                    "nranks": int(np.prod(list(mesh.shape.values()))),
+                    "queues": int(q),
+                    "mode": mode,
+                    "msg_bytes": int(nbytes),
+                    "requests": int(requests_per_queue),
+                    "mesh_s": mesh_s,
+                    "max_queue_s": max_queue,
+                    "ratio": mesh_s / max_queue,
+                })
+                row(f"contention/allreduce/{q}q/{mode}/{nbytes>>10}KB",
+                    mesh_s * 1e6,
+                    f"max_queue={max_queue*1e6:.1f}us "
+                    f"ratio={mesh_s/max_queue:.2f}x")
 
 
 # -- Fig 13: engine vs baseline (ACCL+ vs ACCL vs MPI analogue) ---------------

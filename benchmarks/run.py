@@ -36,7 +36,7 @@ def main(argv=None) -> dict:
     ap.add_argument("--quick", action="store_true",
                     help="run only the deterministic model benchmarks "
                          "(fig12_scaling + seg_sweep + queue_sweep + "
-                         "fault_sweep + hier_sweep) — "
+                         "fault_sweep + hier_sweep + contention_sweep) — "
                          "the CI bench-gate mode; still writes the JSON "
                          "results file")
     default_segments = ",".join(
@@ -85,6 +85,7 @@ def main(argv=None) -> dict:
         "queue_sweep": figures.queue_sweep,
         "fault_sweep": figures.fault_sweep,
         "hier_sweep": figures.hier_sweep,
+        "contention_sweep": figures.contention_sweep,
         "fig16_vecmat": figures.fig16_vecmat,
         "fig17_dlrm": figures.fig17_dlrm,
         "table3_resources": figures.table3_resources,
@@ -100,7 +101,8 @@ def main(argv=None) -> dict:
                    "seg_sweep": benches["seg_sweep"],
                    "queue_sweep": benches["queue_sweep"],
                    "fault_sweep": benches["fault_sweep"],
-                   "hier_sweep": benches["hier_sweep"]}
+                   "hier_sweep": benches["hier_sweep"],
+                   "contention_sweep": benches["contention_sweep"]}
     for fn in benches.values():
         fn()
 
@@ -111,6 +113,7 @@ def main(argv=None) -> dict:
         "queue_sweep": list(RESULTS["queue_sweep"]),
         "fault_sweep": list(RESULTS["fault_sweep"]),
         "hier_sweep": list(RESULTS["hier_sweep"]),
+        "contention_sweep": list(RESULTS["contention_sweep"]),
     }
     if args.json:
         with open(args.json, "w") as f:
@@ -119,7 +122,8 @@ def main(argv=None) -> dict:
               f"{len(results['segment_sweep'])} sweep points, "
               f"{len(results['queue_sweep'])} queue points, "
               f"{len(results['fault_sweep'])} fault points, "
-              f"{len(results['hier_sweep'])} hier points")
+              f"{len(results['hier_sweep'])} hier points, "
+              f"{len(results['contention_sweep'])} contention points")
     return results
 
 

@@ -10,7 +10,11 @@ model) and `serial_s` (the blocking reference it is measured against),
 fault points gate the retransmission-priced `makespan_s` per
 (tier, drop_rate), hier points gate BOTH `hier_s` (the two-level
 cross-fabric composition) and `flat_s` (the all-DCN flat reference) —
-so the modeled hierarchical speedup is pinned from both sides. The gate is symmetric:
+so the modeled hierarchical speedup is pinned from both sides —
+and contention points gate BOTH `mesh_s` (the mesh-level shared-fabric
+composition from MeshMakespan) and `max_queue_s` (the slowest queue
+priced alone), pinning the contention model from both sides too.
+The gate is symmetric:
 
   * every baseline point must still exist (MISSING fails — coverage must
     not silently shrink),
@@ -62,6 +66,11 @@ def _hier_key(e: dict) -> tuple:
             int(e["msg_bytes"]))
 
 
+def _contention_key(e: dict) -> tuple:
+    return (e["collective"], int(e["nranks"]), int(e["queues"]),
+            e["mode"], int(e["msg_bytes"]))
+
+
 def _sweep(path: str) -> dict:
     """Every gated point of a results file, one flat dict: segment-sweep
     points keyed ('seg', ...) -> predicted_s, queue-sweep points keyed
@@ -83,6 +92,10 @@ def _sweep(path: str) -> dict:
         base = ("hier",) + _hier_key(e)
         pts[base + ("hier_s",)] = float(e["hier_s"])
         pts[base + ("flat_s",)] = float(e["flat_s"])
+    for e in data.get("contention_sweep", []):
+        base = ("contention",) + _contention_key(e)
+        pts[base + ("mesh_s",)] = float(e["mesh_s"])
+        pts[base + ("max_queue_s",)] = float(e["max_queue_s"])
     return pts
 
 
@@ -118,7 +131,8 @@ def main(argv=None) -> int:
                "segment_sweep": data["segment_sweep"],
                "queue_sweep": data.get("queue_sweep", []),
                "fault_sweep": data.get("fault_sweep", []),
-               "hier_sweep": data.get("hier_sweep", [])}
+               "hier_sweep": data.get("hier_sweep", []),
+               "contention_sweep": data.get("contention_sweep", [])}
         with open(args.write_baseline, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {args.write_baseline}: {len(new)} sweep points")

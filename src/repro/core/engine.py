@@ -1188,49 +1188,84 @@ class CollectiveEngine:
         return jnp.zeros((), jnp.int32)
 
     # -- non-blocking request API (the collective offload queue) -------------
+    #
+    # SIGNATURE CONTRACT: `CollectiveEngine.issue` / `issue_multi` are
+    # thin delegates of `Sequencer.issue` / `Sequencer.issue_multi` and
+    # accept the identical public call shapes — same parameter order,
+    # same `after=None` / `timeout=None` keyword-only defaults (the
+    # sequencer's `_pre`/`_post`/`_shape` hooks are private plumbing the
+    # engine surface does not expose). The `i*` helpers fix the
+    # collective name and otherwise take `issue`'s keywords. Asserted by
+    # `tests/test_api_surface.py`.
     def issue(self, collective: str, x, axis: str, *, after=None,
-              **kwargs):
+              timeout: Optional[float] = None, **kwargs):
         """Enqueue a collective without executing it; returns a `Request`
         handle immediately (the CCLO request-queue contract — paper use
         case 1). `x` may be an array or another `Request` (a dependency
         edge: this call consumes that request's result). Materialize
         with `Request.wait()` or `engine.queue.drain()`; the queue keeps
         per-communicator FIFO order, infers conflict edges from buffer
-        identity (override with `after=`), and coalesces consecutive
-        small same-(op, dtype) reductions into one bucketed program —
-        see `core/sequencer.py`. Keywords are those of the blocking
-        method (`op`, `root`, `algorithm`, `compression`, `segments`).
+        identity (override with `after=`), enforces `timeout` (virtual
+        seconds) on the simulated drain's clock, and coalesces
+        consecutive small same-(op, dtype) reductions into one bucketed
+        program — see `core/sequencer.py`. Remaining keywords are those
+        of the blocking method (`op`, `root`, `algorithm`,
+        `compression`, `segments`).
         """
         return self.queue.issue(collective, x, axis, after=after,
-                                **kwargs)
+                                timeout=timeout, **kwargs)
 
-    def iallreduce(self, x, axis: str, **kwargs):
+    def issue_multi(self, x, axes, op: str = "add",
+                    algorithm: str = "auto",
+                    compression: Optional[str] = None):
+        """Non-blocking `allreduce_multi`: the hierarchical multi-axis
+        allreduce as queued work (`Sequencer.issue_multi` — two live
+        axes fold into one tuple-axis request; more chain RS ->
+        recurse -> AG with dependency edges)."""
+        return self.queue.issue_multi(x, axes, op=op, algorithm=algorithm,
+                                      compression=compression)
+
+    def iallreduce(self, x, axis: str, *, after=None,
+                   timeout: Optional[float] = None, **kwargs):
         """Non-blocking `allreduce` (MPI_Iallreduce analogue)."""
-        return self.issue("allreduce", x, axis, **kwargs)
+        return self.issue("allreduce", x, axis, after=after,
+                          timeout=timeout, **kwargs)
 
-    def ireduce_scatter(self, x, axis: str, **kwargs):
+    def ireduce_scatter(self, x, axis: str, *, after=None,
+                        timeout: Optional[float] = None, **kwargs):
         """Non-blocking `reduce_scatter`."""
-        return self.issue("reduce_scatter", x, axis, **kwargs)
+        return self.issue("reduce_scatter", x, axis, after=after,
+                          timeout=timeout, **kwargs)
 
-    def iallgather(self, x, axis: str, **kwargs):
+    def iallgather(self, x, axis: str, *, after=None,
+                   timeout: Optional[float] = None, **kwargs):
         """Non-blocking `allgather`."""
-        return self.issue("allgather", x, axis, **kwargs)
+        return self.issue("allgather", x, axis, after=after,
+                          timeout=timeout, **kwargs)
 
-    def ibcast(self, x, axis: str, **kwargs):
+    def ibcast(self, x, axis: str, *, after=None,
+               timeout: Optional[float] = None, **kwargs):
         """Non-blocking `bcast`."""
-        return self.issue("bcast", x, axis, **kwargs)
+        return self.issue("bcast", x, axis, after=after,
+                          timeout=timeout, **kwargs)
 
-    def ireduce(self, x, axis: str, **kwargs):
+    def ireduce(self, x, axis: str, *, after=None,
+                timeout: Optional[float] = None, **kwargs):
         """Non-blocking `reduce`."""
-        return self.issue("reduce", x, axis, **kwargs)
+        return self.issue("reduce", x, axis, after=after,
+                          timeout=timeout, **kwargs)
 
-    def ialltoall(self, x, axis: str, **kwargs):
+    def ialltoall(self, x, axis: str, *, after=None,
+                  timeout: Optional[float] = None, **kwargs):
         """Non-blocking `alltoall`."""
-        return self.issue("alltoall", x, axis, **kwargs)
+        return self.issue("alltoall", x, axis, after=after,
+                          timeout=timeout, **kwargs)
 
-    def icollective(self, name: str, x, axis: str, **kwargs):
+    def icollective(self, name: str, x, axis: str, *, after=None,
+                    timeout: Optional[float] = None, **kwargs):
         """Non-blocking plugin-registered collective (`collective`)."""
-        return self.issue(name, x, axis, **kwargs)
+        return self.issue(name, x, axis, after=after,
+                          timeout=timeout, **kwargs)
 
     # -- hierarchical multi-axis collectives (multi-pod path) ----------------
     def allreduce_multi(self, x, axes: Sequence[str], op: str = "add",

@@ -1,0 +1,132 @@
+"""Mesh-level contention-aware makespan (the shared-engine cost view).
+
+`Sequencer.makespan` prices ONE communicator's queue in isolation. Real
+training/serving steps run grad-sync, pipeline p2p, and offloaded app
+collectives concurrently over the same chips and fabrics — ACCL+'s whole
+premise is the engine as a *shared* offload resource — and per-queue
+isolation prices two saturating queues on one fabric as if they ran 2x
+parallel. `MeshMakespan` composes ALL queues over the physical links
+(`topology.FabricOccupancy`):
+
+  mesh = max( max over queues of the queue's own makespan,
+              max over GLOBAL dependency chains of sum(full_i),
+              max over physical links of sum(wire on that link)
+                  + max over items of latency_i )
+
+  * Per-queue term: each queue still prices at least its own pipelined
+    drain (`Sequencer._compose`) — composition never discounts below a
+    queue running alone, and a single-queue mesh makespan is BITWISE
+    equal to `Sequencer.makespan`.
+  * Global chain term: dependency chains crossing communicators (e.g.
+    `issue_multi`'s RS -> recurse -> AG over `("pod", "data")`) price as
+    one DAG — full costs serialize along the chain exactly as within one
+    queue, instead of each axis's FIFO pretending the other is free.
+  * Link term: wire seconds attributed per physical link by
+    `Program.cost_terms(per_link=True)` SERIALIZE when queues share the
+    link (two saturating same-fabric queues price ~the serial sum), and
+    stay independent on disjoint fabrics (the busiest link bounds).
+    Queued alpha still hides: only the single largest item latency is
+    added, the same credit the per-queue model grants.
+
+All prices come from `Sequencer._priced_plan` — the same compiled
+programs, the same `PricingEnv` — so the composition never re-walks a
+program. Nothing here mutates queue state: composing is a read.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.pricing import PricingEnv
+from repro.core.topology import FabricOccupancy
+
+
+class MeshMakespan:
+    """Composes many sequencer queues' prices over shared fabric links.
+
+    Usage::
+
+        mm = MeshMakespan()
+        mm.add(seq_a, "data", env)      # one call per (queue, axis)
+        mm.add(seq_b, "data", env)
+        total = mm.total()              # contention-aware seconds
+
+    or, for every outstanding axis of one sequencer::
+
+        total = MeshMakespan.of(seq, env).total()
+    """
+
+    def __init__(self, occupancy: Optional[FabricOccupancy] = None):
+        self.occupancy = occupancy if occupancy is not None \
+            else FabricOccupancy()
+        self._queues: list = []    # (sequencer, axis, env)
+
+    def add(self, seq, axis, env: Optional[PricingEnv] = None
+            ) -> "MeshMakespan":
+        """Register one communicator queue; returns self for chaining."""
+        self._queues.append((seq, axis,
+                             env if env is not None else PricingEnv()))
+        return self
+
+    @classmethod
+    def of(cls, seq, env: Optional[PricingEnv] = None,
+           occupancy: Optional[FabricOccupancy] = None) -> "MeshMakespan":
+        """Every outstanding axis of `seq` (cross-axis chains included),
+        in first-issue order."""
+        mm = cls(occupancy=occupancy)
+        for axis in seq.axes_outstanding():
+            mm.add(seq, axis, env)
+        return mm
+
+    def report(self) -> dict:
+        """The composition, with its terms exposed for telemetry.
+
+        {"mesh_makespan_s", "chain_s", "queues": [...], "links": {...}}
+        — `queues` holds each registered queue's isolated makespan,
+        `links` the per-physical-link busy seconds and capacity.
+        """
+        occ = self.occupancy
+        queues = []
+        entries = []   # (min_rid, item, full_s, lat_s, links)
+        for seq, axis, env in self._queues:
+            _comm, items, recs = seq._priced_plan(axis, env)
+            own = seq._compose(items, recs) if items else 0.0
+            queues.append({"axis": axis, "items": len(items),
+                           "makespan_s": own})
+            for it, (full, lat, _wire, links) in zip(items, recs):
+                entries.append((min(r.rid for r in it.requests),
+                                it, full, lat, links))
+        # global dependency DAG: items in issue order, chains serialize
+        # full costs across queues (the within-queue recurrence, widened)
+        entries.sort(key=lambda e: e[0])
+        pos = {r: i for i, e in enumerate(entries) for r in e[1].requests}
+        chain = [0.0] * len(entries)
+        for i, (_rid, it, full, _lat, _links) in enumerate(entries):
+            best = 0.0
+            for r in it.requests:
+                for d in r.deps:
+                    j = pos.get(d)
+                    if j is not None and j < i:
+                        best = max(best, chain[j])
+            chain[i] = best + full
+        # per-physical-link busy time: wire serializes on a shared link
+        busy: dict = {}
+        for _rid, _it, _full, _lat, links in entries:
+            for key, w in links.items():
+                ck = occ.canonical(key)
+                busy[ck] = busy.get(ck, 0.0) + w
+        max_lat = max((e[3] for e in entries), default=0.0)
+        link_term = max(busy.values(), default=0.0) + max_lat
+        terms = [q["makespan_s"] for q in queues]
+        terms.append(max(chain, default=0.0))
+        terms.append(link_term)
+        return {
+            "mesh_makespan_s": max(terms, default=0.0),
+            "chain_s": max(chain, default=0.0),
+            "queues": queues,
+            "links": {k: {"busy_s": v, "capacity_Bps": occ.capacity(k)}
+                      for k, v in busy.items()},
+        }
+
+    def total(self) -> float:
+        """Contention-aware seconds to drain every registered queue."""
+        return self.report()["mesh_makespan_s"]

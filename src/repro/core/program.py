@@ -338,7 +338,7 @@ class Program:
                 i = j + 1
 
     def cost(self, msg_bytes: float, comm, elem_bytes: int = 4,
-             tier=None, drop_prob: float = 0.0) -> float:
+             tier=None, drop_prob: float = 0.0, env=None) -> float:
         """Predicted seconds for THIS compiled program on `comm`'s fabric.
 
         The SPLIT pipelining model, priced off the ops that will actually
@@ -371,14 +371,18 @@ class Program:
         to the retired schedule-walk `predict_time` — asserted (with the
         intentional divergences) by the golden pricing tests.
 
-        `tier`/`drop_prob` (a `faults.ReliabilityTier` and a segment
-        drop probability) add the honest retransmission surcharge: every
-        alpha and wire term is scaled by the tier's expected
-        transmissions under that loss rate, and the expected exponential
-        backoff per wire crossing is added on top. `tier=None` (the
-        default) is bitwise-neutral — fault-free pricing is unchanged.
+        A `pricing.PricingEnv` (`env=`) is the preferred way to carry
+        the reliability surcharge (and a comm override): `env.tier` /
+        `env.drop_prob` scale every alpha and wire term by the tier's
+        expected transmissions under that loss rate and add the expected
+        exponential backoff per wire crossing. The bare `tier=` /
+        `drop_prob=` kwargs are a deprecation shim with identical
+        semantics; mixing them with `env=` raises. A default env (or
+        `tier=None`) is bitwise-neutral — fault-free pricing unchanged.
         """
-        total, _lat, _wir, crossings = \
+        if env is not None:
+            comm, tier, drop_prob = env.apply(comm, tier, drop_prob)
+        total, _lat, _wir, crossings, _links = \
             self._cost_walk(msg_bytes, comm, elem_bytes)
         total = total / self.overlap_factor
         if tier is not None:
@@ -388,7 +392,8 @@ class Program:
 
     def cost_terms(self, msg_bytes: float, comm,
                    elem_bytes: int = 4, tier=None,
-                   drop_prob: float = 0.0) -> tuple:
+                   drop_prob: float = 0.0, env=None,
+                   per_link: bool = False) -> tuple:
         """`cost` decomposed as (latency_s, wire_s).
 
         latency_s collects every per-hop alpha term of the walk; wire_s
@@ -401,31 +406,51 @@ class Program:
         half of a QUEUED request hides behind the wire time of the one
         in flight.
 
-        With a reliability `tier` and a `drop_prob`, both halves scale
-        by the tier's expected transmissions and the expected backoff
-        lands in the latency half (backoff occupies no wire). The
-        default `tier=None` is bitwise-neutral.
+        With `per_link=True` the return grows a third element: a dict
+        attributing wire_s across the physical links the bytes cross —
+        keys are `("ici"|"dcn", axis)` from the exchange's
+        `level_comm`, values sum (over a single-link program, bitwise)
+        to wire_s. The mesh-level composition (`core/mesh_cost.py`)
+        serializes THESE per shared link across queues, so it never
+        re-walks programs.
+
+        A reliability tier (via `env=PricingEnv(tier=..., drop_prob=...)`
+        or the deprecated bare kwargs) scales both halves — and every
+        link's share — by the tier's expected transmissions; the
+        expected backoff lands in the latency half (backoff occupies no
+        wire). The default is bitwise-neutral.
         """
-        _total, lat, wire, crossings = \
+        if env is not None:
+            comm, tier, drop_prob = env.apply(comm, tier, drop_prob)
+        _total, lat, wire, crossings, links = \
             self._cost_walk(msg_bytes, comm, elem_bytes)
         lat = lat / self.overlap_factor
         wire = wire / self.overlap_factor
+        links = {key: v / self.overlap_factor for key, v in links.items()}
         if tier is not None:
             e = tier.expected_transmissions(drop_prob)
             lat = lat * e + crossings * tier.expected_backoff(drop_prob)
             wire = wire * e
+            links = {key: v * e for key, v in links.items()}
+        if per_link:
+            return lat, wire, links
         return lat, wire
 
     def _level_fabrics(self, comm) -> dict:
-        """level tag -> (alpha, bw, floor) for this comm. A flat
+        """level tag -> (alpha, bw, floor, link) for this comm. A flat
         communicator resolves every level to itself (`level_comm`), so
         flat pricing is bitwise-unchanged; a `ProductComm` routes "intra"
-        exchanges to the ICI group and "inter" ones to the DCN group."""
+        exchanges to the ICI group and "inter" ones to the DCN group.
+        `link` is the physical-link attribution key — `("dcn"|"ici",
+        axis)` — that `cost_terms(per_link=True)` reports wire seconds
+        under (see `topology.FabricOccupancy` for canonicalization)."""
         fabrics = {}
         for level in (None, "intra", "inter"):
             c = comm.level_comm(level) if hasattr(comm, "level_comm") \
                 else comm
-            fabrics[level] = (c.hop_latency, c.link_bw, c.min_segment_bytes)
+            link = ("dcn" if c.is_dcn else "ici", c.axis)
+            fabrics[level] = (c.hop_latency, c.link_bw,
+                              c.min_segment_bytes, link)
         return fabrics
 
     def fabric_wire_bytes(self, msg_bytes: float, comm,
@@ -454,7 +479,7 @@ class Program:
         return out
 
     def _cost_walk(self, msg_bytes: float, comm, elem_bytes: int) -> tuple:
-        """(total, latency, wire, crossings) over the ops. `total`
+        """(total, latency, wire, crossings, links) over the ops. `total`
         accumulates in the exact historical order (golden parity is
         asserted bitwise); the split halves accumulate alongside it.
         `crossings` counts per-segment wire crossings (mult * k_eff) —
@@ -463,13 +488,18 @@ class Program:
         two-level program's intra steps ride ICI alpha/bandwidth/floor
         and its inter steps ride DCN's; flat programs (level=None)
         resolve to `comm` itself and price bitwise-identically to the
-        single-fabric walk."""
+        single-fabric walk. `links` splits the wire half by physical
+        link key (see `_level_fabrics`); it is a PARALLEL accumulator —
+        the total/lat/wire float-op sequence is untouched, so adding it
+        cannot perturb golden parity."""
         fabrics = self._level_fabrics(comm)
         total = 0.0
         lat = 0.0
         wir = 0.0
         crossings = 0.0
-        drains: dict = {}          # region id -> [k_max, t_max, a_max, b_max]
+        links: dict = {}
+        # region id -> [k_max, t_max, a_max, b_max, link_of_max]
+        drains: dict = {}
         for mult, k, body, region in self.exchange_terms():
             scale = 1.0
             send = None
@@ -480,7 +510,7 @@ class Program:
                              / float(elem_bytes))
                 elif isinstance(op, Send):
                     send = op
-            alpha, bw, floor = fabrics[send.level]
+            alpha, bw, floor, link = fabrics[send.level]
             wire = float(msg_bytes) * send.bytes_frac * scale
             k_eff = int(k)
             while k_eff > 1 and wire / k_eff < floor:
@@ -492,18 +522,30 @@ class Program:
                 total += mult * t
                 lat += mult * alpha
                 wir += mult * b
-                d = drains.setdefault(region, [1, 0.0, 0.0, 0.0])
+                links[link] = links.get(link, 0.0) + mult * b
+                d = drains.setdefault(region, [1, 0.0, 0.0, 0.0, link])
                 d[0] = max(d[0], k_eff)
                 if t > d[1]:
-                    d[1], d[2], d[3] = t, alpha, b
+                    d[1], d[2], d[3], d[4] = t, alpha, b, link
             else:
                 total += mult * k_eff * t
                 lat += mult * k_eff * alpha
                 wir += mult * k_eff * b
-        total += sum((k_r - 1) * t_r for k_r, t_r, _a, _b in drains.values())
-        lat += sum((k_r - 1) * a_r for k_r, _t, a_r, _b in drains.values())
-        wir += sum((k_r - 1) * b_r for k_r, _t, _a, b_r in drains.values())
-        return total, lat, wir, crossings
+                links[link] = links.get(link, 0.0) + mult * k_eff * b
+        total += sum((k_r - 1) * t_r
+                     for k_r, t_r, _a, _b, _l in drains.values())
+        lat += sum((k_r - 1) * a_r
+                   for k_r, _t, a_r, _b, _l in drains.values())
+        wir += sum((k_r - 1) * b_r
+                   for k_r, _t, _a, b_r, _l in drains.values())
+        drain_by_link: dict = {}
+        for k_r, _t, _a, b_r, l_r in drains.values():
+            drain_by_link.setdefault(l_r, []).append((k_r - 1) * b_r)
+        for l_r, vals in drain_by_link.items():
+            # sum-then-add mirrors wir's association, so a single-link
+            # program's links[key] stays bitwise-equal to wir
+            links[l_r] = links.get(l_r, 0.0) + sum(vals)
+        return total, lat, wir, crossings, links
 
 
 # --------------------------------------------------------------------------

@@ -149,12 +149,19 @@ class Selector:
 
     # -- pricing ------------------------------------------------------------
     def _protocol_overhead(self, protocol: str, msg_bytes: float,
-                           comm: Communicator) -> Optional[float]:
+                           comm: Communicator,
+                           eager_cap: Optional[float] = None
+                           ) -> Optional[float]:
         if protocol == "eager":
-            cap = self.eager_max_bytes
+            # cap precedence: the pricing env's per-call override
+            # (`PricingEnv.eager_max_bytes`), then the selector-level
+            # constructor override, then the communicator's per-fabric
+            # Rx staging pool (DCN comms reject eager at sizes the ICI
+            # pool still accepts)
+            cap = eager_cap
             if cap is None:
-                # per-fabric Rx staging pool: DCN comms reject eager at
-                # sizes the ICI pool still accepts
+                cap = self.eager_max_bytes
+            if cap is None:
                 cap = comm.eager_max_bytes
             if msg_bytes > cap:
                 return None  # Rx-buffer pool exceeded
@@ -170,8 +177,8 @@ class Selector:
             elem_bytes)
 
     def price_program(self, prog: Program, protocol: str, msg_bytes: float,
-                      comm: Communicator,
-                      elem_bytes: int = 4) -> Optional[float]:
+                      comm: Communicator, elem_bytes: int = 4,
+                      eager_cap: Optional[float] = None) -> Optional[float]:
         """Protocol overhead + `Program.cost` — the hot-path pricer.
 
         The program IS the costed artifact: LOOP trip counts, SEG_LOOP /
@@ -180,19 +187,20 @@ class Selector:
         selector prices exactly what the engine will execute (the retired
         `predict_time` priced the schedule instead).
         """
-        ov = self._protocol_overhead(protocol, msg_bytes, comm)
+        ov = self._protocol_overhead(protocol, msg_bytes, comm,
+                                     eager_cap=eager_cap)
         if ov is None:
             return None
         return prog.cost(msg_bytes, comm, elem_bytes=elem_bytes) + ov
 
     def price(self, schedule: Schedule, protocol: str, msg_bytes: float,
               comm: Communicator, segments: int = 1,
-              codec: Optional[str] = None,
-              elem_bytes: int = 4) -> Optional[float]:
+              codec: Optional[str] = None, elem_bytes: int = 4,
+              eager_cap: Optional[float] = None) -> Optional[float]:
         """Compile (memoized) then price — see `price_program`."""
         return self.price_program(
             schedule.compile(segments=segments, codec=codec), protocol,
-            msg_bytes, comm, elem_bytes=elem_bytes)
+            msg_bytes, comm, elem_bytes=elem_bytes, eager_cap=eager_cap)
 
     def admissible_segments(self, schedule: Schedule, msg_bytes: float,
                             comm: Optional[Communicator] = None,
@@ -316,31 +324,50 @@ class Selector:
 
     def choose(self, collective: str, msg_bytes: int, comm: Communicator,
                codec: Optional[str] = None, elem_bytes: int = 4,
-               lead_dim: Optional[int] = None) -> Choice:
+               lead_dim: Optional[int] = None, env=None) -> Choice:
+        """Pick the cheapest (algorithm, protocol, segments) for a call.
+
+        A `pricing.PricingEnv` (`env=`) threads the unified pricing
+        knobs: `env.comm` overrides the positional comm, `env.lead_dim`
+        fills `lead_dim` when not given, and `env.eager_max_bytes` caps
+        the eager protocol for this call (precedence over the
+        selector-level constructor override). The default env is
+        bitwise-neutral.
+        """
         self.stats["choose_calls"] += 1
+        eager_cap = None
+        if env is not None:
+            if env.comm is not None:
+                comm = env.comm
+            if lead_dim is None:
+                lead_dim = env.lead_dim
+            eager_cap = env.eager_max_bytes
         # registry_version: (un)registering a custom collective must not
         # serve picks cached against the old candidate set; lead_dim is
         # part of the key because alltoall's executable segment grid is
         # its caller's leading dim, not just the byte count
         key = (collective, int(msg_bytes), comm, codec, int(elem_bytes),
-               None if lead_dim is None else int(lead_dim),
+               None if lead_dim is None else int(lead_dim), eager_cap,
                plugins.registry_version())
         hit = self._cache.get(key)
         if hit is not None:
             self.stats["cache_hits"] += 1
             return hit
         choice = self._choose_uncached(collective, msg_bytes, comm, codec,
-                                       elem_bytes, lead_dim)
+                                       elem_bytes, lead_dim,
+                                       eager_cap=eager_cap)
         self._cache[key] = choice
         return choice
 
     def _choose_uncached(self, collective: str, msg_bytes: int,
                          comm: Communicator, codec: Optional[str] = None,
                          elem_bytes: int = 4,
-                         lead_dim: Optional[int] = None) -> Choice:
+                         lead_dim: Optional[int] = None,
+                         eager_cap: Optional[float] = None) -> Choice:
         if isinstance(comm, ProductComm):
             return self._choose_product(collective, msg_bytes, comm,
-                                        codec, elem_bytes, lead_dim)
+                                        codec, elem_bytes, lead_dim,
+                                        eager_cap=eager_cap)
         tuned_algo, tuned_segs = self._tuned(collective, msg_bytes,
                                              comm.size, codec)
         custom_algos = {a for a, _g, _p
@@ -377,7 +404,8 @@ class Selector:
                 prog = sched_k.compile(codec=codec)
                 for proto in protos:
                     t = self.price_program(prog, proto, msg_bytes, comm,
-                                           elem_bytes=elem_bytes)
+                                           elem_bytes=elem_bytes,
+                                           eager_cap=eager_cap)
                     if t is None:
                         continue
                     cand = Choice(collective, algo, proto, t, sched_k,
@@ -397,7 +425,8 @@ class Selector:
     def _choose_product(self, collective: str, msg_bytes: int,
                         comm: ProductComm, codec: Optional[str] = None,
                         elem_bytes: int = 4,
-                        lead_dim: Optional[int] = None) -> Choice:
+                        lead_dim: Optional[int] = None,
+                        eager_cap: Optional[float] = None) -> Choice:
         """Two-level candidate family for a (pod x intra-pod) product.
 
         The `hierarchical:<intra>+<inter>` compositions are priced
@@ -412,15 +441,18 @@ class Selector:
         """
         if comm.outer.size < 2:
             return self._choose_uncached(collective, msg_bytes, comm.inner,
-                                         codec, elem_bytes, lead_dim)
+                                         codec, elem_bytes, lead_dim,
+                                         eager_cap=eager_cap)
         if comm.inner.size < 2:
             return self._choose_uncached(collective, msg_bytes, comm.outer,
-                                         codec, elem_bytes, lead_dim)
+                                         codec, elem_bytes, lead_dim,
+                                         eager_cap=eager_cap)
         if collective not in hierarchical.INTER_ALGOS:
             # no two-level composition (alltoall, reduce, gather):
             # price flat over the bottleneck view
             return self._choose_uncached(collective, msg_bytes, comm.flat,
-                                         codec, elem_bytes, lead_dim)
+                                         codec, elem_bytes, lead_dim,
+                                         eager_cap=eager_cap)
         tuned_algo, tuned_segs = self._tuned(collective, msg_bytes,
                                              comm.size, codec)
         cands = []
@@ -465,7 +497,8 @@ class Selector:
                 prog = sched_k.compile(codec=codec)
                 for proto in protos:
                     t = self.price_program(prog, proto, msg_bytes, comm,
-                                           elem_bytes=elem_bytes)
+                                           elem_bytes=elem_bytes,
+                                           eager_cap=eager_cap)
                     if t is None:
                         continue
                     cand = Choice(collective, algo, proto, t, sched_k,

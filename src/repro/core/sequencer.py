@@ -80,6 +80,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.pricing import resolve_env
+
 
 class RequestCancelled(RuntimeError):
     """Typed terminal error raised when a CANCELLED request is waited."""
@@ -365,6 +367,11 @@ class Sequencer:
         return sorted((r for q in self._queues.values() for r in q),
                       key=lambda r: r.rid)
 
+    def axes_outstanding(self) -> list:
+        """Axis keys (str or tuple) with outstanding requests, in
+        first-issue order — what `MeshMakespan.of` composes over."""
+        return [a for a, q in self._queues.items() if q]
+
     def clear(self) -> None:
         """Drop every outstanding request WITHOUT executing (model-only
         uses: makespan sweeps over hypothetical queues)."""
@@ -538,34 +545,39 @@ class Sequencer:
         sched = sched.with_segments(segments)
         return sched, sched.compile(codec=codec), nbytes, elem
 
-    def makespan(self, axis: str, comm=None, tier=None,
-                 drop_prob: float = 0.0) -> float:
-        """Predicted seconds to drain `axis`'s outstanding queue.
-
-        The queue-level pipelining model (module docstring): wire
-        occupancy serializes across the plan, queued requests' alpha
-        halves hide behind it, dependency chains serialize their full
-        costs and lower-bound the result. Priced off the same compiled
-        programs the drain executes. Cross-communicator dependencies are
-        priced on their own axis's makespan and treated as satisfied
-        here. A reliability `tier` + `drop_prob` add the per-program
-        retransmission surcharge (`Program.cost` / `cost_terms`), so the
-        queue's price reflects the chosen reliability contract; the
-        default is bitwise-neutral fault-free pricing."""
-        comm = comm if comm is not None else self.engine.comm(axis)
+    def _priced_plan(self, axis: str, env) -> tuple:
+        """(comm, items, recs) for `axis`'s outstanding queue under a
+        `PricingEnv`: `items` is the drain's `PlanItem` partition and
+        `recs[i] = (full_s, lat_s, wire_s, links)` prices item i off the
+        same compiled program the drain executes (`links` is the
+        per-physical-link wire attribution from
+        `Program.cost_terms(per_link=True)`). The shared source of
+        truth for the single-queue `makespan` and the mesh-level
+        composition (`core/mesh_cost.py`) — the latter never re-walks
+        programs."""
+        comm = env.comm if env.comm is not None else self.engine.comm(axis)
         items = self._partition(axis, comm)
-        if not items:
-            return 0.0
-        pos = {r: i for i, it in enumerate(items) for r in it.requests}
-        fulls, lats, wires = [], [], []
+        recs = []
         for it in items:
             _sched, prog, nbytes, elem = self._resolve_item(it, comm)
-            fulls.append(prog.cost(nbytes, comm, elem_bytes=elem,
-                                   tier=tier, drop_prob=drop_prob))
-            lat, wire = prog.cost_terms(nbytes, comm, elem_bytes=elem,
-                                        tier=tier, drop_prob=drop_prob)
-            lats.append(lat)
-            wires.append(wire)
+            full = prog.cost(nbytes, comm, elem_bytes=elem, env=env)
+            lat, wire, links = prog.cost_terms(
+                nbytes, comm, elem_bytes=elem, env=env, per_link=True)
+            recs.append((full, lat, wire, links))
+        return comm, items, recs
+
+    @staticmethod
+    def _compose(items: list, recs: list) -> float:
+        """The queue-level pipelining composition over priced items:
+        wire occupancy serializes across the plan, queued requests'
+        alpha halves hide behind it, dependency chains serialize their
+        full costs and lower-bound the result. Exactly the historical
+        `makespan` arithmetic (values and summation order), so the
+        refactor is bitwise-neutral."""
+        pos = {r: i for i, it in enumerate(items) for r in it.requests}
+        fulls = [rec[0] for rec in recs]
+        lats = [rec[1] for rec in recs]
+        wires = [rec[2] for rec in recs]
         chain = [0.0] * len(items)
         for i, it in enumerate(items):
             best = 0.0
@@ -576,6 +588,30 @@ class Sequencer:
                         best = max(best, chain[j])
             chain[i] = best + fulls[i]
         return max(max(chain), sum(wires) + max(lats))
+
+    def makespan(self, axis: str, comm=None,
+                 tier=None, drop_prob: float = 0.0, env=None) -> float:
+        """Predicted seconds to drain `axis`'s outstanding queue.
+
+        The queue-level pipelining model (module docstring), priced off
+        the same compiled programs the drain executes.
+        Cross-communicator dependencies are priced on their own axis's
+        makespan and treated as satisfied here — `core/mesh_cost.py`
+        composes ALL axes' queues (shared-link contention + cross-axis
+        chains) when that isolation is too optimistic.
+
+        Pricing parameters arrive in a `pricing.PricingEnv` (`env=`):
+        a comm override and the reliability surcharge
+        (`Program.cost`/`cost_terms`), so the queue's price reflects
+        the chosen reliability contract. The bare `comm=`/`tier=`/
+        `drop_prob=` kwargs are a deprecation shim with identical
+        semantics; the default env is bitwise-neutral fault-free
+        pricing."""
+        env = resolve_env(env, comm=comm, tier=tier, drop_prob=drop_prob)
+        _comm, items, recs = self._priced_plan(axis, env)
+        if not items:
+            return 0.0
+        return self._compose(items, recs)
 
     def serial_cost(self, axis: str, comm=None) -> float:
         """Sum of the blocking `Program.cost`s of the outstanding
@@ -700,9 +736,11 @@ class Sequencer:
         VIRTUAL clock (priced program cost + retry alphas + the tier's
         deterministic backoff); no wall-clock is consulted anywhere.
         With `degrade=True` a dead rank additionally shrinks the
-        communicator to the survivors (`Communicator.shrunk`), the
-        selector replans every still-queued collective on the degraded
-        fabric, and surviving ranks' feeds carry on — the
+        communicator to the survivors (`Communicator.without_ranks` — the
+        degraded comm's rank table keeps every survivor's ORIGINAL id,
+        so mid-mesh, non-contiguous survivors keep their data shards),
+        the selector replans every still-queued collective on the
+        degraded fabric, and surviving ranks' feeds carry on — the
         shrink-and-continue path the trainer demo rides."""
         from repro.core import simulator as sim
         from repro.core.faults import (
@@ -721,7 +759,6 @@ class Sequencer:
                 tier=tier if tier is not None else TIERS["tcp-like"])
         results: dict = {}
         comm_override: dict = {}   # axis -> degraded communicator
-        survivors: dict = {}       # axis -> surviving ORIGINAL rank ids
         while any(self._queues.values()):
             # global issue order: among queue heads, run the item whose
             # head request was issued first — dependencies always point
@@ -746,13 +783,16 @@ class Sequencer:
                         f"{bad.rid} ended {bad.status}"))
                 continue
             sched, prog, nbytes, elem = self._resolve_item(item, comm)
-            surv = survivors.get(axis)
 
-            def _fit(v, surv=surv, n=comm.size):
+            def _fit(v, comm=comm):
                 # a feed recorded at the pre-shrink size is sliced to
-                # the survivors; post-shrink results already fit
-                if surv is not None and len(v) != n:
-                    return [v[i] for i in surv]
+                # the survivors' ORIGINAL rank ids (the degraded comm's
+                # rank table); post-shrink results already fit.
+                # ProductComm has no rank table (degradation is flat-
+                # comm only), so tuple axes pass through.
+                if getattr(comm, "ranks", None) is not None \
+                        and len(v) != comm.size:
+                    return [v[g] for g in comm.global_ranks]
                 return list(v)
 
             vals = []
@@ -769,10 +809,10 @@ class Sequencer:
                     sim, item, sched, prog, vals, comm, transport)
             except PeerFailedError as e:
                 if degrade:
-                    prev = survivors.get(axis, list(range(comm.size)))
-                    survivors[axis] = [r for i, r in enumerate(prev)
-                                       if i != e.rank]
-                    comm_override[axis] = comm.shrunk(len(survivors[axis]))
+                    # e.rank is local to the CURRENT comm; the rank
+                    # table composes the original ids across repeated
+                    # shrinks
+                    comm_override[axis] = comm.without_ranks([e.rank])
                     if transport is not None:
                         # rank-keyed schedule entries do not survive the
                         # renumbering; background loss (drop_prob) does

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 
@@ -45,12 +45,32 @@ class Communicator:
     count. `is_dcn` marks pod-crossing axes (slower links) for the cost
     model. Hardware constants ride along so the selector can price
     schedules without global state.
+
+    `ranks` is the rank-id table (ACCL+ keeps exactly this list in CCLO
+    configuration memory): local rank i is global rank `ranks[i]`. The
+    default `None` means the identity mapping `0..size-1` — every
+    pre-degradation communicator, so hashes/cache keys are unchanged.
+    A degraded communicator built by `without_ranks` carries the
+    surviving global ids, which need NOT be a prefix: survivor i keeps
+    its global shard `ranks[i]` however mid-mesh the failure was.
     """
 
     axis: str
     size: int
     is_dcn: bool = False
     hw: HwSpec = TPU_V5E
+    ranks: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.ranks is not None and len(self.ranks) != self.size:
+            raise ValueError(
+                f"rank table {self.ranks} does not match size {self.size}")
+
+    @property
+    def global_ranks(self) -> tuple:
+        """Local -> global rank-id mapping (identity when undegraded)."""
+        return self.ranks if self.ranks is not None \
+            else tuple(range(self.size))
 
     @property
     def link_bw(self) -> float:
@@ -125,23 +145,33 @@ class Communicator:
 
     # -- graceful degradation ----------------------------------------------
     def shrunk(self, size: int) -> "Communicator":
-        """The degraded communicator after ranks died: same axis and
-        fabric, `size` survivors renumbered 0..size-1 (ACCL+ rebuilds
-        the communicator's rank table in configuration memory; here the
-        survivor list lives with the caller and the selector replans
-        every queued collective against this smaller group)."""
+        """The degraded communicator after ranks died, keyed by survivor
+        COUNT: same axis and fabric, the first `size` entries of the
+        rank table kept (ACCL+ rebuilds the communicator's rank table
+        in configuration memory). For dead ranks identified by id —
+        including mid-mesh, non-prefix failures — use `without_ranks`,
+        which keeps every survivor's global id so its data shard stays
+        addressable."""
         if not 1 <= int(size) <= self.size:
             raise ValueError(
                 f"cannot shrink {self.size}-rank communicator to {size}")
-        return dataclasses.replace(self, size=int(size))
+        ranks = None if self.ranks is None else self.ranks[:int(size)]
+        return dataclasses.replace(self, size=int(size), ranks=ranks)
 
     def without_ranks(self, dead) -> "Communicator":
-        """`shrunk` keyed by the dead rank ids instead of the count."""
+        """The degraded communicator with the CURRENT-local ranks `dead`
+        removed: survivors renumber to 0..n-1 but keep their global ids
+        in `ranks`, so non-contiguous survivors keep their data shards."""
         dead = {int(r) for r in dead}
         bad = dead - set(range(self.size))
         if bad:
             raise ValueError(f"ranks {sorted(bad)} not in communicator")
-        return self.shrunk(self.size - len(dead))
+        survivors = tuple(g for i, g in enumerate(self.global_ranks)
+                          if i not in dead)
+        if not survivors:
+            raise ValueError("cannot remove every rank")
+        return dataclasses.replace(self, size=len(survivors),
+                                   ranks=survivors)
 
     # -- hierarchical factoring --------------------------------------------
     def factor(self, pod_size: int) -> "ProductComm":
@@ -156,7 +186,7 @@ class Communicator:
         if pod_size < 1 or self.size % pod_size:
             raise ValueError(
                 f"cannot factor {self.size} ranks into pods of {pod_size}")
-        outer = dataclasses.replace(self, size=pod_size)
+        outer = dataclasses.replace(self, size=pod_size, ranks=None)
         inner = Communicator(
             axis=self.axis, size=self.size // pod_size,
             is_dcn=False, hw=self.hw,
@@ -259,3 +289,48 @@ def product_comm(mesh, outer_axis: str, inner_axis: str,
         outer=axis_comm(mesh, outer_axis, hw),
         inner=axis_comm(mesh, inner_axis, hw),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricOccupancy:
+    """The per-chip physical-link capacity map for mesh-level pricing.
+
+    `Program.cost_terms(per_link=True)` attributes each program's wire
+    seconds to link keys `("ici"|"dcn", axis)` — the fabric and mesh
+    axis its bytes cross. This model says which of those keys name the
+    SAME physical resource, so `core/mesh_cost.py` can serialize wire
+    time across queues that share a link while leaving disjoint fabrics
+    independent:
+
+      * ICI: each mesh axis rides its own torus direction (a chip has
+        `hw.ici_links_per_chip` ports), so `("ici", "data")` and
+        `("ici", "model")` are distinct links — queues on different ICI
+        axes overlap.
+      * DCN: every pod-crossing axis funnels through the chip's ONE
+        shared uplink, so all `("dcn", *)` keys canonicalize to
+        `DCN_UPLINK` — any two DCN queues contend.
+    """
+
+    hw: HwSpec = TPU_V5E
+
+    DCN_UPLINK = ("dcn", "uplink")
+
+    def link_key(self, comm) -> tuple:
+        """The link a (flat) communicator's wire bytes occupy."""
+        return self.canonical(
+            ("dcn" if comm.is_dcn else "ici", comm.axis))
+
+    def canonical(self, key: tuple) -> tuple:
+        """Collapse link keys naming one physical resource: every DCN
+        key is the shared uplink; ICI keys stay per-axis directions."""
+        return self.DCN_UPLINK if key[0] == "dcn" else key
+
+    def capacity(self, key: tuple) -> float:
+        """Bytes/s the physical link behind `key` can carry."""
+        return (self.hw.dcn_bw if key[0] == "dcn"
+                else self.hw.ici_link_bw)
+
+    def ports(self) -> dict:
+        """Per-chip port counts by fabric (ICI torus directions + the
+        DCN uplink)."""
+        return {"ici": self.hw.ici_links_per_chip, "dcn": 1}

@@ -141,6 +141,16 @@ def grad_sync(grads, specs, ctx: ParCtx,
             tickets[missing] = ctx.engine.tree_allreduce(
                 leaves, order, compression=compression)
 
+    if use_queue and tickets:
+        # mesh-level price of the outstanding gradient exchange: every
+        # sync group's queue composed over the shared fabrics (the
+        # contention-aware view, not per-axis optimism). Trace-time
+        # telemetry off static shapes — no tracers involved; the trainer
+        # surfaces it per step (`Trainer._queue_stats`).
+        from repro.core.mesh_cost import MeshMakespan
+        ctx.engine.stats["grad_sync_makespan_s"] = MeshMakespan.of(
+            ctx.engine.queue).total()
+
     out = {}
     sq = jnp.zeros((), jnp.float32)
     for missing, entries in buckets.items():

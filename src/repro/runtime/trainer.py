@@ -57,6 +57,9 @@ class Trainer:
         self.watchdog = StragglerWatchdog()
         self.heartbeat = Heartbeat()
         self._preempted = False
+        # axis -> rank-id-aware degraded Communicator (built up by
+        # _shrink_to_survivors as failures accumulate; absent = intact)
+        self._axis_comms: dict = {}
         self.ts = stages.build_train_step(arch, pcfg, mesh, opt_cfg,
                                           lr_schedule)
 
@@ -135,8 +138,11 @@ class Trainer:
                 # degraded mesh, and the IN-MEMORY state carries on
                 log.extend(getattr(e, "partial_log", None) or [])
                 state = self._shrink_to_survivors(e)
+                comm = self._axis_comms.get(e.axis)
                 log.append({"event": "rank_failure", "error": str(e),
                             "rank": e.rank, "axis": e.axis,
+                            "survivors": list(comm.global_ranks)
+                            if comm is not None else [],
                             "mesh_shape": dict(self.mesh.shape),
                             "restart": restarts})
                 continue
@@ -150,17 +156,30 @@ class Trainer:
         shrunk communicators), and re-place the in-memory params/opt on
         the surviving devices. Returns the (params, opt, step) state the
         next `_run_once` continues from — training never goes back to a
-        checkpoint."""
+        checkpoint.
+
+        The failed rank's POSITION along the axis is removed — not a
+        prefix — and the surviving original rank ids are tracked in a
+        rank-id-aware degraded `Communicator` (`without_ranks`, chained
+        across repeated failures), so a mid-mesh failure leaves every
+        non-contiguous survivor holding its own devices; the host
+        round-trip in `place` then re-shards state onto exactly those
+        survivors."""
         import numpy as np
+        from repro.core.topology import Communicator
         if failure.state is None:
             raise failure  # failed outside the step loop: nothing to save
         if self.mesh.shape[failure.axis] <= 1:
             raise failure  # no survivors to shrink onto
         params, opt, step = failure.state
         idx = self.mesh.axis_names.index(failure.axis)
-        devices = np.delete(np.asarray(self.mesh.devices),
-                            failure.rank % self.mesh.shape[failure.axis],
-                            axis=idx)
+        pos = failure.rank % self.mesh.shape[failure.axis]
+        comm = self._axis_comms.get(failure.axis)
+        if comm is None:
+            comm = Communicator(axis=failure.axis,
+                                size=self.mesh.shape[failure.axis])
+        self._axis_comms[failure.axis] = comm.without_ranks([pos])
+        devices = np.delete(np.asarray(self.mesh.devices), pos, axis=idx)
         self.mesh = jax.sharding.Mesh(devices, self.mesh.axis_names)
         self.ts = stages.build_train_step(self.arch, self.pcfg, self.mesh,
                                           self.opt_cfg, self.lr_schedule)
@@ -186,8 +205,14 @@ class Trainer:
         q = self.ts.ctx.engine._queue  # no queue was created -> no stats
         if q is None:
             return {}
-        return {"queue_issued": q.stats["issued"],
-                "queue_coalesced": q.stats["coalesced_requests"]}
+        out = {"queue_issued": q.stats["issued"],
+               "queue_coalesced": q.stats["coalesced_requests"]}
+        # the mesh-level (contention-aware) price of the step's gradient
+        # exchange, recorded at trace time by stages.grad_sync
+        ms = self.ts.ctx.engine.stats.get("grad_sync_makespan_s")
+        if ms is not None:
+            out["grad_sync_makespan_s"] = ms
+        return out
 
     def _run_once(self, state=None):
         if state is not None:

@@ -1,0 +1,184 @@
+"""The pricing/issue API contracts this PR's redesign pins:
+
+  * `PricingEnv` is the ONE bundle of pricing parameters, accepted
+    everywhere pricing happens (Program.cost/cost_terms,
+    Sequencer.makespan, Selector.choose, MeshMakespan) — default env is
+    bitwise-neutral, the old bare kwargs are a deprecation shim that
+    prices identically, and mixing the two is a TypeError;
+  * `CollectiveEngine.issue`/`issue_multi`/`i*` expose the SAME public
+    call shapes as the `Sequencer` methods they delegate to (the
+    signature contract comment in core/engine.py);
+  * degraded `Communicator`s carry a rank-id table (`without_ranks`),
+    so non-contiguous survivors keep their global shards.
+"""
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CollectiveEngine, Communicator, PricingEnv, Selector, Sequencer,
+    TIERS, resolve_env,
+)
+
+
+@pytest.fixture()
+def eng8(mesh8):
+    return CollectiveEngine(mesh8)
+
+
+def _public_params(fn):
+    """(name, kind, default) for every public parameter — the call
+    shape a caller sees. Private `_pre`/`_post`/`_shape` plumbing and
+    `self` are not part of the contract."""
+    return [(p.name, p.kind, p.default)
+            for p in inspect.signature(fn).parameters.values()
+            if p.name != "self" and not p.name.startswith("_")]
+
+
+# -- engine <-> sequencer signature parity ------------------------------------
+
+def test_engine_issue_matches_sequencer_issue():
+    assert _public_params(CollectiveEngine.issue) == \
+        _public_params(Sequencer.issue)
+
+
+def test_engine_issue_multi_matches_sequencer_issue_multi():
+    assert _public_params(CollectiveEngine.issue_multi) == \
+        _public_params(Sequencer.issue_multi)
+
+
+def test_i_helpers_share_issue_defaults():
+    """Every i* convenience helper takes keyword-only after=None and
+    timeout=None — the same deferred-execution knobs as issue()."""
+    helpers = [CollectiveEngine.iallreduce, CollectiveEngine.ireduce_scatter,
+               CollectiveEngine.iallgather, CollectiveEngine.ibcast,
+               CollectiveEngine.ireduce, CollectiveEngine.ialltoall,
+               CollectiveEngine.icollective]
+    for fn in helpers:
+        params = inspect.signature(fn).parameters
+        for knob in ("after", "timeout"):
+            p = params[knob]
+            assert p.kind == inspect.Parameter.KEYWORD_ONLY, fn.__name__
+            assert p.default is None, fn.__name__
+
+
+def test_issue_and_helpers_accept_identical_shapes(eng8):
+    """The contract in practice: the engine surface and the queue
+    surface take the same call, including after=/timeout=."""
+    x = np.zeros((64,), np.float32)
+    r1 = eng8.issue("allreduce", x, "x", timeout=1.0)
+    r2 = eng8.iallreduce(np.zeros((64,), np.float32), "x",
+                         after=[r1], timeout=2.0)
+    assert r2.deps == (r1,) and r2.timeout == 2.0
+    seq = eng8.queue
+    r3 = seq.issue("allreduce", np.zeros((64,), np.float32), "x",
+                   after=[r2], timeout=3.0)
+    assert r3.deps == (r2,) and r3.timeout == 3.0
+    seq.clear()
+
+
+# -- PricingEnv: one bundle, neutral default, shimmed past ---------------------
+
+def _program(eng, nbytes):
+    comm = eng.comm("x")
+    choice = eng.selector.choose("allreduce", nbytes, comm)
+    return choice.program, comm
+
+
+def test_default_env_is_bitwise_neutral(eng8):
+    prog, comm = _program(eng8, 1 << 20)
+    assert prog.cost(1 << 20, comm) == \
+        prog.cost(1 << 20, comm, env=PricingEnv())
+    assert prog.cost_terms(1 << 20, comm) == \
+        prog.cost_terms(1 << 20, comm, env=PricingEnv())
+
+
+def test_bare_kwargs_shim_prices_identically(eng8):
+    prog, comm = _program(eng8, 1 << 20)
+    tier = TIERS["tcp-like"]
+    assert prog.cost(1 << 20, comm, tier=tier, drop_prob=0.1) == \
+        prog.cost(1 << 20, comm, env=PricingEnv(tier=tier, drop_prob=0.1))
+    seq = Sequencer(eng8)
+    seq.issue("allreduce", np.zeros((1 << 16,), np.float32), "x")
+    assert seq.makespan("x", tier=tier, drop_prob=0.1) == \
+        seq.makespan("x", env=PricingEnv(tier=tier, drop_prob=0.1))
+    seq.clear()
+
+
+def test_mixing_env_and_bare_kwargs_raises(eng8):
+    prog, comm = _program(eng8, 1 << 16)
+    env = PricingEnv(tier=TIERS["tcp-like"])
+    with pytest.raises(TypeError):
+        prog.cost(1 << 16, comm, tier=TIERS["udp-like"], env=env)
+    with pytest.raises(TypeError):
+        prog.cost(1 << 16, comm, drop_prob=0.5, env=env)
+    seq = Sequencer(eng8)
+    seq.issue("allreduce", np.zeros((1 << 12,), np.float32), "x")
+    with pytest.raises(TypeError):
+        seq.makespan("x", tier=TIERS["udp-like"], env=env)
+    seq.clear()
+    with pytest.raises(TypeError):
+        resolve_env(env, tier=TIERS["udp-like"])
+
+
+def test_resolve_env_wraps_bare_kwargs():
+    tier = TIERS["rdma-like"]
+    env = resolve_env(None, tier=tier, drop_prob=0.2)
+    assert env == PricingEnv(tier=tier, drop_prob=0.2)
+    same = PricingEnv(drop_prob=0.1)
+    assert resolve_env(same) is same
+
+
+def test_env_comm_overrides_positional(eng8):
+    prog, comm = _program(eng8, 1 << 20)
+    slow = Communicator(axis="x", size=8, is_dcn=True)
+    assert prog.cost(1 << 20, comm, env=PricingEnv(comm=slow)) == \
+        prog.cost(1 << 20, slow)
+    assert prog.cost(1 << 20, slow) > prog.cost(1 << 20, comm)
+
+
+def test_selector_env_carries_eager_cap_and_lead_dim(mesh8):
+    """The selector's per-call pricing knobs ride the env: an
+    eager_max_bytes override and the alltoall lead_dim clamp each price
+    identically to their pre-env spellings."""
+    eng = CollectiveEngine(mesh8)
+    comm = eng.comm("x")
+    capped = Selector(eager_max_bytes=0.0)
+    via_ctor = capped.choose("allreduce", 1 << 10, comm)
+    via_env = Selector().choose("allreduce", 1 << 10, comm,
+                                env=PricingEnv(eager_max_bytes=0.0))
+    assert (via_ctor.protocol, via_ctor.predicted_s) == \
+        (via_env.protocol, via_env.predicted_s)
+    assert via_env.protocol == "rendezvous"  # cap 0 rejects eager
+    by_kwarg = Selector().choose("alltoall", 1 << 18, comm, lead_dim=64)
+    by_env = Selector().choose("alltoall", 1 << 18, comm,
+                               env=PricingEnv(lead_dim=64))
+    assert (by_kwarg.algorithm, by_kwarg.segments,
+            by_kwarg.predicted_s) == \
+        (by_env.algorithm, by_env.segments, by_env.predicted_s)
+
+
+# -- rank-id-aware degraded communicators -------------------------------------
+
+def test_without_ranks_keeps_global_ids():
+    comm = Communicator(axis="x", size=4)
+    assert comm.global_ranks == (0, 1, 2, 3)
+    d = comm.without_ranks([1])
+    assert d.size == 3 and d.global_ranks == (0, 2, 3)
+    # chained mid-mesh failures compose through the rank table:
+    # local rank 1 of the degraded group is global rank 2
+    dd = d.without_ranks([1])
+    assert dd.global_ranks == (0, 3)
+    with pytest.raises(ValueError):
+        dd.without_ranks([0, 1])  # cannot remove every rank
+
+
+def test_shrunk_and_rank_table_validation():
+    comm = Communicator(axis="x", size=4, ranks=(0, 2, 3, 5))
+    assert comm.shrunk(2).global_ranks == (0, 2)
+    with pytest.raises(ValueError):
+        Communicator(axis="x", size=3, ranks=(0, 1))
+    # factor() rebuilds identity-mapped level comms
+    prod = Communicator(axis="x", size=8).factor(2)
+    assert prod.outer.ranks is None and prod.inner.ranks is None

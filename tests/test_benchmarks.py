@@ -38,6 +38,7 @@ def test_json_written_and_matches_returned(sweep_results):
     assert on_disk["segment_sweep"] == returned["segment_sweep"]
     assert on_disk["queue_sweep"] == returned["queue_sweep"]
     assert on_disk["hier_sweep"] == returned["hier_sweep"]
+    assert on_disk["contention_sweep"] == returned["contention_sweep"]
     assert {"jax", "backend", "device_count"} <= set(on_disk["meta"])
 
 
@@ -207,6 +208,84 @@ def test_check_bench_gates_hier_metrics(sweep_results, tmp_path):
         drifted = json.loads(json.dumps(on_disk))
         drifted["hier_sweep"][0][metric] *= 1.25
         results = tmp_path / f"hier_drift_{metric}.json"
+        results.write_text(json.dumps(drifted))
+        assert cb.main([str(results), "--baseline", str(baseline)]) == 1
+
+
+# -- the contention sweep (mesh-level shared-fabric makespan) -----------------
+
+def test_contention_sweep_schema(sweep_results):
+    _, on_disk = sweep_results
+    cont = on_disk["contention_sweep"]
+    assert cont
+    required = {"collective", "nranks", "queues", "mode", "msg_bytes",
+                "requests", "mesh_s", "max_queue_s", "ratio"}
+    for entry in cont:
+        assert required <= set(entry)
+        assert entry["mode"] in ("shared", "disjoint")
+    # both modes sweep every (queue count, size) grid point
+    for mode in ("shared", "disjoint"):
+        pts = {(e["queues"], e["msg_bytes"]) for e in cont
+               if e["mode"] == mode}
+        assert {q for q, _ in pts} == {1, 2, 4}
+        assert min(s for _, s in pts) <= 1 << 16
+        assert max(s for _, s in pts) >= 1 << 24
+
+
+def test_contention_single_queue_matches_sequencer(sweep_results):
+    """Acceptance (bench form, single-queue): one queue composes to
+    exactly its own isolated makespan — the mesh view is bitwise free
+    when there is nothing to contend with."""
+    _, on_disk = sweep_results
+    ones = [e for e in on_disk["contention_sweep"] if e["queues"] == 1]
+    assert ones
+    for e in ones:
+        assert e["mesh_s"] == e["max_queue_s"]
+        assert e["ratio"] == 1.0
+
+
+def test_contention_shared_fabric_serializes(sweep_results):
+    """Acceptance (bench form, shared): at the bandwidth-dominated
+    16 MiB point, two queues on one fabric price >= 1.9x one queue and
+    never above the serial sum; four queues >= 3.5x."""
+    _, on_disk = sweep_results
+    cont = on_disk["contention_sweep"]
+
+    def pt(q, mode, nbytes=1 << 24):
+        (e,) = [x for x in cont if x["queues"] == q and x["mode"] == mode
+                and x["msg_bytes"] == nbytes]
+        return e
+
+    one = pt(1, "shared")
+    two, four = pt(2, "shared"), pt(4, "shared")
+    assert two["mesh_s"] >= 1.9 * one["mesh_s"]
+    assert two["mesh_s"] <= 2.0 * one["mesh_s"]
+    assert four["mesh_s"] >= 3.5 * one["mesh_s"]
+
+
+def test_contention_disjoint_fabrics_stay_independent(sweep_results):
+    """Acceptance (bench form, disjoint): two queues on different
+    fabrics (ICI data axis vs the DCN pod axis) track the SLOWER queue
+    — within [max, 1.05 * max] at every size."""
+    _, on_disk = sweep_results
+    pts = [e for e in on_disk["contention_sweep"]
+           if e["queues"] == 2 and e["mode"] == "disjoint"]
+    assert pts
+    for e in pts:
+        assert e["max_queue_s"] <= e["mesh_s"] <= 1.05 * e["max_queue_s"]
+
+
+def test_check_bench_gates_contention_metrics(sweep_results, tmp_path):
+    """contention_sweep points gate like the others: a drifted mesh_s
+    (or max_queue_s) fails the build until the baseline is refreshed."""
+    _, on_disk = sweep_results
+    baseline = (pathlib.Path(__file__).resolve().parent.parent
+                / "benchmarks" / "baseline.json")
+    cb = _load_check_bench()
+    for metric in ("mesh_s", "max_queue_s"):
+        drifted = json.loads(json.dumps(on_disk))
+        drifted["contention_sweep"][0][metric] *= 1.25
+        results = tmp_path / f"contention_drift_{metric}.json"
         results.write_text(json.dumps(drifted))
         assert cb.main([str(results), "--baseline", str(baseline)]) == 1
 

@@ -236,6 +236,14 @@ def test_communicator_shrink_helpers():
         comm.shrunk(0)
     with pytest.raises(ValueError):
         comm.without_ranks({11})
+    # rank-id-aware remap: mid-mesh survivors keep their GLOBAL ids,
+    # and repeated failures compose through the rank table
+    assert comm.global_ranks == tuple(range(8))
+    d = comm.without_ranks({3, 5})
+    assert d.global_ranks == (0, 1, 2, 4, 6, 7)
+    assert d.without_ranks({0}).global_ranks == (1, 2, 4, 6, 7)
+    with pytest.raises(ValueError):
+        d.without_ranks({6})  # local ids index the CURRENT group (0..5)
 
 
 def test_dead_rank_shrinks_communicator_and_replans(eng8):

@@ -1,0 +1,236 @@
+"""Mesh-level contention-aware makespan (core/mesh_cost.MeshMakespan)
+over the physical-link capacity map (topology.FabricOccupancy).
+
+The contention invariants the model must keep (ISSUE acceptance):
+
+  * a single queue composes BITWISE equal to `Sequencer.makespan` —
+    the mesh view never reprices what the queue view already priced;
+  * two saturating queues on ONE fabric price ~the serial sum (within
+    [0.95 * serial, serial]), >= 1.9x one queue at bandwidth sizes;
+  * queues on DISJOINT fabrics stay independent: the composition tracks
+    the slower queue (<= 1.05x max), never below it;
+  * fault tiers compose monotonically at mesh level, and drop_prob=0 is
+    bitwise-identical to fault-free.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CollectiveEngine, Communicator, FabricOccupancy, MeshMakespan,
+    PricingEnv, TIERS,
+)
+from repro.core.sequencer import Sequencer
+
+
+@pytest.fixture()
+def eng8(mesh8):
+    return CollectiveEngine(mesh8)
+
+
+@pytest.fixture()
+def eng222(mesh222):
+    return CollectiveEngine(mesh222)
+
+
+def _fill(seq, axis, nbytes, n=4, collective="allreduce"):
+    for _ in range(n):
+        seq.issue(collective, np.zeros((nbytes // 4,), np.float32), axis)
+
+
+# -- the capacity map ---------------------------------------------------------
+
+def test_fabric_occupancy_links(eng222):
+    occ = FabricOccupancy()
+    ici = eng222.comm("data")
+    dcn = eng222.comm("pod")
+    assert not ici.is_dcn and dcn.is_dcn
+    assert occ.link_key(ici) == ("ici", "data")
+    # every DCN axis funnels through the chip's one shared uplink
+    assert occ.link_key(dcn) == FabricOccupancy.DCN_UPLINK
+    assert occ.canonical(("dcn", "pod")) == FabricOccupancy.DCN_UPLINK
+    assert occ.canonical(("ici", "model")) == ("ici", "model")
+    assert occ.capacity(("ici", "data")) == occ.hw.ici_link_bw
+    assert occ.capacity(FabricOccupancy.DCN_UPLINK) == occ.hw.dcn_bw
+    ports = occ.ports()
+    assert ports["ici"] == occ.hw.ici_links_per_chip and ports["dcn"] == 1
+
+
+# -- single queue: the composition is a no-op ---------------------------------
+
+def test_single_queue_bitwise_equals_sequencer_makespan(eng8):
+    seq = Sequencer(eng8)
+    _fill(seq, "x", 1 << 20)
+    assert MeshMakespan.of(seq).total() == seq.makespan("x")
+    seq.clear()
+
+
+def test_single_queue_bitwise_with_tier_env(eng8):
+    env = PricingEnv(tier=TIERS["tcp-like"], drop_prob=0.1)
+    seq = Sequencer(eng8)
+    _fill(seq, "x", 1 << 18)
+    assert MeshMakespan.of(seq, env).total() == seq.makespan("x", env=env)
+    seq.clear()
+
+
+def test_single_queue_bitwise_hierarchical_tuple_axis(eng222):
+    """A two-axis issue_multi folds into ONE tuple-axis request whose
+    program crosses both fabrics; the mesh composition must still return
+    the queue's own price bitwise (multi-link programs make the link
+    term strictly smaller than the full queue makespan)."""
+    seq = Sequencer(eng222)
+    for _ in range(3):
+        seq.issue_multi(np.zeros((1 << 16,), np.float32), ["pod", "data"])
+    (axis,) = seq.axes_outstanding()
+    assert isinstance(axis, tuple)  # the folded two-level request
+    assert MeshMakespan.of(seq).total() == seq.makespan(axis)
+    seq.clear()
+
+
+def test_single_queue_bitwise_with_dep_chain(eng8):
+    seq = Sequencer(eng8)
+    r = seq.issue("reduce_scatter", np.zeros((1 << 18,), np.float32), "x")
+    seq.issue("allgather", r, "x")
+    assert MeshMakespan.of(seq).total() == seq.makespan("x")
+    seq.clear()
+
+
+# -- shared fabric: wire serializes -------------------------------------------
+
+def test_two_shared_queues_price_near_serial(eng8):
+    """Two saturating queues on the SAME ICI axis: the link term pushes
+    the composition to ~the serial sum of the two isolated makespans
+    (alpha still hides, so it lands just under), and >= 1.9x one queue
+    at bandwidth-dominated depths (8 x 16 MiB per queue: the hidden
+    alpha is ONE request's latency credit, fixed while wire scales, so
+    shallower/smaller queues sit further from serial — the 4-request
+    1 MiB point composes at ~1.6x, by design)."""
+    nbytes = 1 << 24
+    a, b = Sequencer(eng8), Sequencer(eng8)
+    _fill(a, "x", nbytes, n=8)
+    _fill(b, "x", nbytes, n=8)
+    ms_a, ms_b = a.makespan("x"), b.makespan("x")
+    total = MeshMakespan().add(a, "x").add(b, "x").total()
+    serial = ms_a + ms_b
+    assert 0.95 * serial <= total <= serial
+    assert total >= 1.9 * ms_a
+    a.clear(), b.clear()
+
+
+def test_shared_contention_grows_with_queue_count(eng8):
+    nbytes = 1 << 24
+    totals = []
+    for q in (1, 2, 4):
+        seqs = []
+        mm = MeshMakespan()
+        for _ in range(q):
+            s = Sequencer(eng8)
+            _fill(s, "x", nbytes, n=8)
+            seqs.append(s)
+            mm.add(s, "x")
+        totals.append(mm.total())
+        for s in seqs:
+            s.clear()
+    assert totals[0] < totals[1] < totals[2]
+    assert totals[2] >= 3.5 * totals[0]  # 4 queues ~4x, alpha hides
+
+
+# -- disjoint fabrics: independent --------------------------------------------
+
+def test_disjoint_fabrics_track_the_slower_queue(eng222):
+    """One queue on the ICI data axis, one on the DCN pod axis: no
+    shared physical link, so the composition is the slower queue (up to
+    the cross-queue alpha term), never the sum."""
+    d, p = Sequencer(eng222), Sequencer(eng222)
+    _fill(d, "data", 1 << 22)
+    _fill(p, "pod", 1 << 22)
+    md, mp = d.makespan("data"), p.makespan("pod")
+    total = MeshMakespan().add(d, "data").add(p, "pod").total()
+    assert max(md, mp) <= total <= 1.05 * max(md, mp)
+    assert total < 0.75 * (md + mp)  # nowhere near serialized
+    d.clear(), p.clear()
+
+
+def test_two_dcn_queues_share_the_uplink(eng222):
+    """Queues on DIFFERENT pod-crossing axes still contend: all DCN
+    keys canonicalize to the one chip uplink."""
+    a, b = Sequencer(eng222), Sequencer(eng222)
+    _fill(a, "pod", 1 << 24, n=8)
+    _fill(b, "pod", 1 << 24, n=8)
+    ms = a.makespan("pod")
+    total = MeshMakespan().add(a, "pod").add(b, "pod").total()
+    assert total >= 1.9 * ms
+    rep = MeshMakespan().add(a, "pod").add(b, "pod").report()
+    assert set(rep["links"]) == {FabricOccupancy.DCN_UPLINK}
+    a.clear(), b.clear()
+
+
+# -- cross-queue dependency chains --------------------------------------------
+
+def test_issue_multi_chain_prices_as_one_dag(eng222):
+    """A 3-axis issue_multi spans three queues (RS on data -> folded
+    ("model","pod") middle -> AG on data) chained by dataflow deps; the
+    mesh view serializes the chain's full costs across queues, so it
+    prices strictly above any single queue's isolated makespan."""
+    seq = Sequencer(eng222)
+    seq.issue_multi(np.zeros((1 << 18,), np.float32),
+                    ["data", "pod", "model"])
+    axes = seq.axes_outstanding()
+    assert len(axes) == 2  # "data" + the folded tuple axis
+    rep = MeshMakespan.of(seq).report()
+    per_queue = max(q["makespan_s"] for q in rep["queues"])
+    assert rep["chain_s"] > per_queue
+    assert rep["mesh_makespan_s"] >= rep["chain_s"]
+    seq.clear()
+
+
+# -- fault tiers at mesh level ------------------------------------------------
+
+def test_mesh_tier_pricing_monotone_and_neutral_at_zero(eng8):
+    a, b = Sequencer(eng8), Sequencer(eng8)
+    _fill(a, "x", 1 << 20)
+    _fill(b, "x", 1 << 20)
+
+    def total(env=None):
+        return MeshMakespan().add(a, "x", env).add(b, "x", env).total()
+
+    base = total()
+    tiered = [total(PricingEnv(tier=TIERS["tcp-like"], drop_prob=p))
+              for p in (0.0, 0.1, 0.3)]
+    assert tiered[0] == base  # p=0 is bitwise fault-free
+    assert base < tiered[1] < tiered[2]
+    a.clear(), b.clear()
+
+
+# -- report structure ---------------------------------------------------------
+
+def test_report_exposes_terms(eng8):
+    a, b = Sequencer(eng8), Sequencer(eng8)
+    _fill(a, "x", 1 << 20, n=2)
+    _fill(b, "x", 1 << 20, n=2)
+    rep = MeshMakespan().add(a, "x").add(b, "x").report()
+    assert {"mesh_makespan_s", "chain_s", "queues", "links"} <= set(rep)
+    assert len(rep["queues"]) == 2
+    assert all(q["items"] == 2 and q["makespan_s"] > 0
+               for q in rep["queues"])
+    link = rep["links"][("ici", "x")]
+    assert link["busy_s"] > 0 and link["capacity_Bps"] > 0
+    assert rep["mesh_makespan_s"] >= max(q["makespan_s"]
+                                         for q in rep["queues"])
+    a.clear(), b.clear()
+
+
+def test_empty_composition_is_zero():
+    assert MeshMakespan().total() == 0.0
+
+
+def test_custom_comm_via_env(eng8):
+    """`PricingEnv.comm` reprices a queue on a hypothetical fabric
+    without an engine rebuild — the what-if hook the old comm= kwarg
+    provided."""
+    seq = Sequencer(eng8)
+    _fill(seq, "x", 1 << 20)
+    slow = Communicator(axis="x", size=8, is_dcn=True)  # DCN-priced links
+    env = PricingEnv(comm=slow)
+    assert MeshMakespan.of(seq, env).total() == seq.makespan("x", env=env)
+    assert seq.makespan("x", env=env) > seq.makespan("x")
+    seq.clear()

@@ -60,6 +60,37 @@ def test_rank_failure_shrink_and_continue(tmp_path, mesh222):
     assert all(np.isfinite(r["ce_mean"]) for r in post)
 
 
+def test_rank_failure_nonprefix_survivor_keeps_shard(tmp_path, mesh222):
+    """Rank 0 of the data axis dies — a mid-mesh failure in the sense
+    that the SURVIVORS are not a prefix of the original ranks. The
+    rank-id-aware remap must keep global rank 1 as the survivor — its
+    own device column, its own shard — where the old count-only shrink
+    would have handed it rank 0's slot. (The model's hardcoded 'data'
+    FSDP specs need the shrunk axis to divide d_model, so the axis goes
+    2 -> 1 here; the deeper chained {0,2,3} mid-mesh case is covered at
+    Communicator level in test_api_surface.py.)"""
+    orig_devices = np.asarray(mesh222.devices)
+    t = _trainer(mesh222, str(tmp_path / "m"), total=8,
+                 injector=FailureInjector(rank_fail_at=((4, 0),)))
+    t.tcfg.ckpt_every = 100
+    log = t.run()
+    events = [r for r in log if "event" in r]
+    assert len(events) == 1 and events[0]["event"] == "rank_failure"
+    # the event records WHICH global ranks survive, from the degraded
+    # communicator's rank table
+    assert events[0]["survivors"] == [1]
+    assert t._axis_comms["data"].global_ranks == (1,)
+    # the dead POSITION was deleted, not the tail: the survivor keeps
+    # its own physical devices
+    want = np.delete(orig_devices, 0, axis=1)
+    np.testing.assert_array_equal(np.asarray(t.mesh.devices), want)
+    assert dict(t.mesh.shape)["data"] == 1
+    steps = [r["step"] for r in log if "step" in r]
+    assert steps == list(range(8))
+    post = [r for r in log if r.get("step", -1) >= 4]
+    assert post and all(np.isfinite(r["ce_mean"]) for r in post)
+
+
 def test_rank_failure_no_survivors_reraises(tmp_path, mesh111):
     # data axis already 1: nothing to shrink onto -> the failure
     # propagates (after max_restarts) instead of silently looping
