@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""AST-based convention linter for in-tree source (stdlib-only).
+
+Replaces the CI grep guards with real syntax-aware rules — greps can
+be fooled by multi-line calls (a bare `tier=` on a call's continuation
+line) and false-positive on docstrings mentioning a retired name; an
+AST visitor sees neither problem.
+
+Rules (each failure prints `path:line: RULE message`):
+
+  LC001 resurrected-legacy
+        References in src/ to retired data-plane / pricing entry points.
+        The data plane is ONE executor (`engine.execute_program` over a
+        compiled `Program`) and pricing is ONE program walk
+        (`Program.cost`); the pre-IR per-algorithm lowerings and the
+        schedule-walk pricer live only under tests/ as golden oracles.
+
+  LC002 bare-pricing-kwargs
+        In-src *calls* to cost/cost_terms/makespan/price_program passing
+        the deprecated bare `tier=` / `drop_prob=` kwargs instead of
+        `env=PricingEnv(...)`. (Definition sites keep the kwargs — they
+        are the out-of-tree deprecation shim.)
+
+  LC003 schedule-direct-execution
+        `execute_program(...)` whose program argument is produced by
+        anything other than `compile()` / `compile_schedule(...)` inline
+        — e.g. `execute_program(gen(comm), ...)` or
+        `execute_program(Schedule(...), ...)` — i.e. executing a
+        Schedule while skipping the compiler (and with it the static
+        verifier). Passing an already-compiled variable is fine.
+
+Usage: python scripts/lint_conventions.py PATH [PATH ...]
+Exits 1 if any violation is found. Self-tested by tests/test_lint.py.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+from typing import List, NamedTuple
+
+LEGACY_NAMES = frozenset({
+    "interpret_schedule",
+    "ring_reduce_scatter_loop",
+    "ring_allgather_loop",
+    "ring_allreduce_loop",
+    "bidi_ring_allreduce_loop",
+    "linear_alltoall_collect",
+    "predict_time",
+})
+LEGACY_KWARGS = frozenset({"wire_scale"})
+
+PRICING_FNS = frozenset({"cost", "cost_terms", "makespan", "price_program"})
+BARE_PRICING_KWARGS = frozenset({"tier", "drop_prob"})
+
+EXECUTORS = frozenset({"execute_program"})
+COMPILERS = frozenset({"compile", "compile_schedule"})
+
+
+class Violation(NamedTuple):
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _callee_name(func: ast.expr):
+    """Trailing name of a call target: `f(...)` -> "f", `a.b.f(...)` ->
+    "f"; None for anything fancier (subscripts, lambdas, calls)."""
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def check_source(text: str, path: str) -> List[Violation]:
+    out: List[Violation] = []
+    tree = ast.parse(text, filename=path)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name in LEGACY_NAMES:
+            out.append(Violation(
+                path, node.lineno, "LC001",
+                f"definition of retired entry point {node.name!r}"))
+        elif isinstance(node, ast.Name) and node.id in LEGACY_NAMES:
+            out.append(Violation(
+                path, node.lineno, "LC001",
+                f"reference to retired entry point {node.id!r}"))
+        elif isinstance(node, ast.Attribute) and node.attr in LEGACY_NAMES:
+            out.append(Violation(
+                path, node.lineno, "LC001",
+                f"reference to retired entry point {node.attr!r}"))
+        elif isinstance(node, ast.keyword) and node.arg in LEGACY_KWARGS:
+            out.append(Violation(
+                path, node.lineno, "LC001",
+                f"retired keyword argument {node.arg!r}="))
+        if not isinstance(node, ast.Call):
+            continue
+        name = _callee_name(node.func)
+        if name in PRICING_FNS:
+            bare = sorted(kw.arg for kw in node.keywords
+                          if kw.arg in BARE_PRICING_KWARGS)
+            if bare:
+                out.append(Violation(
+                    path, node.lineno, "LC002",
+                    f"call to {name}() with deprecated bare kwarg(s) "
+                    f"{bare} — pricing parameters travel in "
+                    f"env=PricingEnv(...)"))
+        if name in EXECUTORS and node.args:
+            first = node.args[0]
+            if isinstance(first, ast.Call):
+                inner = _callee_name(first.func)
+                if inner not in COMPILERS:
+                    out.append(Violation(
+                        path, node.lineno, "LC003",
+                        f"{name}() called on {inner or 'an expression'}"
+                        f"(...) — execute compiled programs only "
+                        f"(Schedule.compile() / compile_schedule()), "
+                        f"never a raw Schedule"))
+    return out
+
+
+def check_paths(paths) -> List[Violation]:
+    out: List[Violation] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            out.extend(check_source(f.read_text(), str(f)))
+    return out
+
+
+def main(argv) -> int:
+    if not argv:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: lint_conventions.py PATH [PATH ...]")
+        return 2
+    violations = check_paths(argv)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"{len(violations)} convention violation(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -764,6 +764,10 @@ class CollectiveEngine:
     hw: HwSpec = TPU_V5E
     selector: Selector = dataclasses.field(default_factory=Selector)
     use_pallas: bool = False
+    # static-verifier level applied to every program this engine compiles
+    # ("off" | "structural" | "full"; None = REPRO_VERIFY env default) —
+    # see core/verify.py
+    verify: Optional[str] = None
     # trace-time log of issued collectives (for tests / EXPERIMENTS tables)
     trace_log: list = dataclasses.field(default_factory=list)
     # trace-time schedule cache: (collective, algorithm, n, root, op) ->
@@ -868,7 +872,7 @@ class CollectiveEngine:
     def _execute(self, sched: Schedule, buf, axis,
                  compression: Optional[str] = None):
         """Compile (memoized) and run through the one data plane."""
-        prog = sched.compile(codec=compression)
+        prog = sched.compile(codec=compression, verify=self.verify)
         if isinstance(axis, tuple):
             outer_ax, inner_ax = axis
             axis = {"inter": outer_ax, "intra": inner_ax}

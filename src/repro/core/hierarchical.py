@@ -58,6 +58,12 @@ INTER_POW2_ONLY = frozenset({"recursive_doubling", "recursive_halving"})
 # Intra level is the bandwidth-optimal chunked ring (any rank count).
 INTRA_ALGOS = ("ring",)
 
+# The only level names a two-level program may carry; `Step.level` tags
+# and `Schedule.level_sizes` entries outside this set are rejected here
+# at composition time and by the static verifier (LV_ORPHAN_LEVEL) on
+# every compiled program.
+LEVELS = ("intra", "inter")
+
 
 def hier_name(intra: str, inter: str) -> str:
     return f"hierarchical:{intra}+{inter}"
@@ -135,6 +141,8 @@ def _remap_phase(steps: tuple, level: str, P: int, M: int, C: int,
     Wrapped selectors and expanded perms are shared by identity across
     the phase (memoized per source object), so uniform runs keep equal
     signatures and still coalesce into LOOP/STREAM micro-ops."""
+    if level not in LEVELS:
+        raise ValueError(f"unknown level {level!r}; must be one of {LEVELS}")
     wrap_sel = _wrap_intra_sel if level == "intra" else _wrap_inter_sel
     sel_memo: dict = {}
     perm_memo: dict = {}

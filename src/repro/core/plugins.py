@@ -163,9 +163,69 @@ def registry_version() -> int:
     return _REGISTRY_VERSION
 
 
+# Registration probe grid: the sizes x segments x codecs a user schedule
+# generator must verify on BEFORE it enters the registry — the "no
+# re-synthesis, still safe" property. Pow2 and non-pow2 sizes so both
+# generator branches are exercised; int8 exercises the blocked-codec
+# rules. Generators are free to ValueError on sizes they don't serve.
+_PROBE_SIZES = (4, 5, 8)
+_PROBE_SEGMENTS = (1, 4)
+_PROBE_CODECS = (None, "int8")
+
+
+def _probe_verify(name: str, algorithm: str, schedule_fn: Callable) -> None:
+    """Compile + fully verify the generator across the probe grid.
+
+    Raises `VerifyError` (chained, with the failing probe point named)
+    so a broken user schedule is rejected at registration time with an
+    actionable diagnostic instead of hanging the fabric at run time.
+    """
+    import inspect
+
+    from repro.core.topology import Communicator
+    from repro.core.verify import VerifyError, verify_program
+
+    try:
+        params = inspect.signature(schedule_fn).parameters
+        extra_required = [
+            p.name for p in list(params.values())[1:]
+            if p.default is inspect.Parameter.empty
+            and p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD,
+                           inspect.Parameter.KEYWORD_ONLY)]
+    except (TypeError, ValueError):
+        extra_required = None
+    if extra_required:
+        # Can't probe a generator whose extra arguments we can't supply;
+        # it still verifies on every compile (structural) and under
+        # REPRO_VERIFY=full.
+        return
+    for n in _PROBE_SIZES:
+        comm = Communicator(axis="x", size=n)
+        try:
+            sched = schedule_fn(comm)
+        except ValueError:
+            continue  # generator declares it cannot serve this size
+        for segments in _PROBE_SEGMENTS:
+            for codec in _PROBE_CODECS:
+                try:
+                    prog = sched.compile(segments=segments, codec=codec,
+                                         verify="off")
+                    verify_program(prog, sched, level="full")
+                except VerifyError as e:
+                    raise VerifyError(
+                        e.rule,
+                        f"cannot register collective {name!r} "
+                        f"(algorithm {algorithm!r}): verification failed "
+                        f"at probe nranks={n} segments={segments} "
+                        f"codec={codec!r}: {e}",
+                        op_index=e.op_index, rank=e.rank,
+                        step=e.step) from e
+
+
 def register_collective(name: str, schedule_fn: Callable,
                         algorithm: str = "custom",
-                        protocols: tuple = ("rendezvous",)) -> None:
+                        protocols: tuple = ("rendezvous",),
+                        verify: bool = True) -> None:
     """Register an out-of-tree collective.
 
     schedule_fn(comm, **kwargs) -> Schedule; `root`/`op` keyword
@@ -176,10 +236,18 @@ def register_collective(name: str, schedule_fn: Callable,
     under one collective name — the selector prices them all (under
     `protocols`) and `algorithm="auto"` picks the cheapest, exactly like
     the built-in table.
+
+    Unless `verify=False`, the generator is compiled and FULLY verified
+    (core/verify.py) across a probe grid of communicator sizes x
+    segment counts x codecs before it enters the registry: a malformed
+    schedule is rejected here, with rule/op/rank diagnostics, not
+    discovered as wrong numerics or a hang at trace time.
     """
     global _REGISTRY_VERSION
     if not callable(schedule_fn):
         raise TypeError(f"schedule_fn for {name!r} must be callable")
+    if verify:
+        _probe_verify(name, algorithm, schedule_fn)
     CUSTOM_COLLECTIVES.setdefault(name, {})[algorithm] = (
         schedule_fn, tuple(protocols))
     _REGISTRY_VERSION += 1

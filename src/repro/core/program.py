@@ -949,10 +949,43 @@ def fuse_stacked_recv(ops: tuple, nranks: int) -> tuple:
 _COMPILE_CACHE: dict = {}
 _COMPILE_CACHE_MAX = 512
 
+# Verification achieved per compile-cache key ("structural" | "full") —
+# a cache hit upgrades to a stronger level at most once, so always-on
+# verification adds one dict lookup to the steady-state compile path.
+_VERIFIED: dict = {}
+
+
+def _verify_mode(explicit: Optional[str]) -> str:
+    """Resolve the verification level: an explicit `verify=` argument
+    wins; otherwise the REPRO_VERIFY env var (CI's verify lane sets
+    "full"); default "structural" — the cheap selector-free rules run
+    on every compile."""
+    import os
+    mode = explicit if explicit is not None \
+        else os.environ.get("REPRO_VERIFY", "structural")
+    from repro.core.verify import VERIFY_LEVELS
+    if mode not in VERIFY_LEVELS:
+        raise ValueError(
+            f"verify must be one of {VERIFY_LEVELS}, got {mode!r}")
+    return mode
+
+
+def _ensure_verified(prog: Program, schedule: Schedule, mode: str,
+                     key) -> None:
+    if mode == "off":
+        return
+    done = _VERIFIED.setdefault(key, set())
+    if mode in done or "full" in done:
+        return
+    from repro.core import verify as _verify
+    _verify.verify_program(prog, schedule, level=mode)
+    done.add(mode)
+
 
 def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
                      codec: Optional[str] = None, stream: bool = True,
-                     stacked: bool = True) -> Program:
+                     stacked: bool = True,
+                     verify: Optional[str] = None) -> Program:
     """Lower a Schedule to a Program (memoized — compilation is trace-time
     control-plane work, like the uC caching assembled microcode).
 
@@ -966,13 +999,20 @@ def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
       stacked  collapse relay='original' copy runs into one STACKED_RECV
                scatter (`fuse_stacked_recv`) — only at segments == 1
                (segmented copy runs stream through `fuse_chains`).
+
+    `verify` selects the static-verifier level applied to the compiled
+    program ("off" | "structural" | "full"; None = REPRO_VERIFY env var,
+    default "structural") — see `core/verify.py`. A program that fails
+    verification raises `VerifyError` and is never cached.
     """
     k_req = int(segments if segments is not None else schedule.segments)
     if k_req < 1:
         raise ValueError(f"segments must be >= 1, got {k_req}")
+    mode = _verify_mode(verify)
     key = (schedule, k_req, codec, bool(stream), bool(stacked))
     hit = _COMPILE_CACHE.get(key)
     if hit is not None:
+        _ensure_verified(hit, schedule, mode, key)
         return hit
 
     ops: list = []
@@ -1011,7 +1051,10 @@ def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
         relay=schedule.relay, segments=k_req, codec=codec,
         ops=ops, overlap_factor=schedule.overlap_factor,
         level_sizes=schedule.level_sizes)
+    _ensure_verified(prog, schedule, mode, key)
     if len(_COMPILE_CACHE) >= _COMPILE_CACHE_MAX:
-        _COMPILE_CACHE.pop(next(iter(_COMPILE_CACHE)))  # FIFO eviction
+        evicted = next(iter(_COMPILE_CACHE))  # FIFO eviction
+        _COMPILE_CACHE.pop(evicted)
+        _VERIFIED.pop(evicted, None)
     _COMPILE_CACHE[key] = prog
     return prog

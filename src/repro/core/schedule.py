@@ -170,7 +170,7 @@ class Schedule:
 
     def compile(self, segments: Optional[int] = None,
                 codec: Optional[str] = None, stream: bool = True,
-                stacked: bool = True):
+                stacked: bool = True, verify: Optional[str] = None):
         """Lower this schedule to a micro-op `Program` (core/program.py).
 
         The program is the single artifact of BOTH execution and cost:
@@ -179,11 +179,14 @@ class Schedule:
         schedule-walk pricing any more). `segments` overrides the
         schedule's own knob; `codec` names a wire compressor from
         `plugins.CODECS`; `stream`/`stacked` gate the optimization
-        passes (tests hold the unfused program as a bitwise reference).
+        passes (tests hold the unfused program as a bitwise reference);
+        `verify` sets the static-verifier level ("off" | "structural" |
+        "full", None = REPRO_VERIFY env var — see `core/verify.py`).
         """
         from repro.core import program as prog  # local: avoid import cycle
         return prog.compile_schedule(self, segments=segments, codec=codec,
-                                     stream=stream, stacked=stacked)
+                                     stream=stream, stacked=stacked,
+                                     verify=verify)
 
     def validate(self) -> None:
         """Structural checks (the 'firmware assembler')."""

@@ -87,6 +87,14 @@ class RequestCancelled(RuntimeError):
     """Typed terminal error raised when a CANCELLED request is waited."""
 
 
+class DrainModeError(RuntimeError):
+    """A sequencer drains either through its engine (inside a trace) or
+    through the numpy simulator — never both. Mixing the two on one
+    queue would interleave trace-time tracers with per-rank numpy
+    buffers and silently corrupt whichever drain ran second; the first
+    drain claims the queue and the other path raises this instead."""
+
+
 def _size_of(shape) -> int:
     n = 1
     for d in shape:
@@ -239,6 +247,9 @@ class Sequencer:
         self._queues: dict = {}        # axis -> list[Request] (FIFO)
         self._rids = itertools.count()
         self._buffer_owner: dict = {}  # id(array) -> last touching Request
+        # "engine" | "simulator" once a drain path has touched the queue;
+        # the other path then raises DrainModeError (PR 5 watch item)
+        self._drain_mode: Optional[str] = None
         # control-plane telemetry, asserted on by tests / trainer logs
         self.stats = {"issued": 0, "executed": 0,
                       "coalesced_buckets": 0, "coalesced_requests": 0}
@@ -651,7 +662,27 @@ class Sequencer:
                 and self._buffer_owner.get(id(r.operand)) is r:
             del self._buffer_owner[id(r.operand)]
 
+    def _claim_drain(self, mode: str) -> None:
+        if self._drain_mode is None:
+            self._drain_mode = mode
+        elif self._drain_mode != mode:
+            raise DrainModeError(
+                f"this sequencer already drained through the "
+                f"{self._drain_mode}; it cannot also drain through the "
+                f"{mode} (use a fresh Sequencer per drain path)")
+
+    def _check_dag(self) -> None:
+        """DL_DEP_CYCLE (core/verify.py): prove the outstanding request
+        DAG acyclic before draining. `issue` keeps it acyclic by
+        construction (deps always point at earlier rids), so this guards
+        tampered handles and future edge sources — including cross-axis
+        `issue_multi` chains, whose stage edges all live in `deps`."""
+        from repro.core.verify import check_request_dag
+        check_request_dag(
+            [r for q in self._queues.values() for r in q if not r._done])
+
     def _run_item(self, item: PlanItem) -> None:
+        self._claim_drain("engine")
         for r in item.requests:
             for d in r.deps:
                 self._materialize(d)
@@ -698,6 +729,7 @@ class Sequencer:
         communicators in global issue order). Returns the drained
         requests; results hang off each `Request.result`."""
         drained = []
+        self._check_dag()
         if axis is not None:
             comm = self.engine.comm(axis)
             while self._queues.get(axis):
@@ -752,6 +784,9 @@ class Sequencer:
             raise NotImplementedError(
                 "simulate_drain does not execute issue_multi chains "
                 "(their pad/trim hooks are trace-time jnp closures)")
+        if any(self._queues.values()):
+            self._claim_drain("simulator")
+        self._check_dag()
         transport = None
         if fault_plan is not None:
             transport = FaultyTransport(

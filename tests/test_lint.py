@@ -1,0 +1,136 @@
+"""Self-tests for scripts/lint_conventions.py (the AST linter that
+replaced the CI grep guards), plus the clean-tree check over src/."""
+import importlib.util
+import pathlib
+import textwrap
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_SCRIPT = _ROOT / "scripts" / "lint_conventions.py"
+
+spec = importlib.util.spec_from_file_location("lint_conventions", _SCRIPT)
+lint = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(lint)
+
+
+def _rules(snippet):
+    text = textwrap.dedent(snippet)
+    return [v.rule for v in lint.check_source(text, "<test>")]
+
+
+# --------------------------------------------------------------------------
+# LC001 — resurrected legacy entry points
+# --------------------------------------------------------------------------
+
+def test_lc001_flags_legacy_call():
+    assert _rules("interpret_schedule(sched, xs)") == ["LC001"]
+
+
+def test_lc001_flags_definition_site():
+    assert "LC001" in _rules("""
+        def ring_allreduce_loop(comm, xs):
+            return xs
+    """)
+
+
+def test_lc001_flags_attribute_reference():
+    assert _rules("simulator.interpret_schedule(s, xs)") == ["LC001"]
+
+
+def test_lc001_flags_wire_scale_kwarg():
+    assert _rules("cost_model(prog, wire_scale=2.0)") == ["LC001"]
+
+
+def test_lc001_clean_on_docstring_mention():
+    """The grep guard false-positived on prose; the AST linter doesn't."""
+    assert _rules('''
+        def f():
+            """This replaced interpret_schedule long ago."""
+            return 1
+    ''') == []
+
+
+# --------------------------------------------------------------------------
+# LC002 — bare pricing kwargs on call sites
+# --------------------------------------------------------------------------
+
+def test_lc002_flags_bare_tier_kwarg():
+    assert _rules("prog.cost(nbytes, tier='dcn')") == ["LC002"]
+
+
+def test_lc002_flags_multiline_call():
+    """A continuation-line kwarg — invisible to a line-based grep."""
+    assert _rules("""
+        t = makespan(
+            programs,
+            drop_prob=0.1,
+        )
+    """) == ["LC002"]
+
+
+def test_lc002_clean_on_env_and_def_sites():
+    assert _rules("prog.cost(nbytes, env=PricingEnv(tier='dcn'))") == []
+    # definition sites legitimately keep the deprecation-shim params
+    assert _rules("""
+        def cost(self, nbytes, env=None, *, tier=None, drop_prob=None):
+            return 0.0
+    """) == []
+
+
+def test_lc002_ignores_unrelated_fns():
+    assert _rules("draw(tier=3)") == []
+
+
+# --------------------------------------------------------------------------
+# LC003 — executing a raw Schedule (skipping the compiler + verifier)
+# --------------------------------------------------------------------------
+
+def test_lc003_flags_generator_inline():
+    assert _rules("execute_program(ring_allreduce(comm), xs, axis)") \
+        == ["LC003"]
+
+
+def test_lc003_flags_schedule_literal():
+    assert "LC003" in _rules(
+        "execute_program(Schedule(name='s', steps=()), xs, axis)")
+
+
+def test_lc003_clean_on_compiled_inline_and_variables():
+    assert _rules("execute_program(sched.compile(), xs, axis)") == []
+    assert _rules(
+        "execute_program(compile_schedule(sched, 4), xs, axis)") == []
+    assert _rules("execute_program(prog, xs, axis)") == []
+
+
+# --------------------------------------------------------------------------
+# Harness behaviour
+# --------------------------------------------------------------------------
+
+def test_violation_rendering():
+    (v,) = lint.check_source("prog.cost(1, tier='ici')", "a/b.py")
+    assert str(v) == ("a/b.py:1: LC002 call to cost() with deprecated "
+                      "bare kwarg(s) ['tier'] — pricing parameters "
+                      "travel in env=PricingEnv(...)")
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("interpret_schedule(s, xs)\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert lint.main([str(good)]) == 0
+    assert lint.main([str(bad)]) == 1
+    assert "LC001" in capsys.readouterr().out
+    assert lint.main([]) == 2
+
+
+def test_src_tree_is_clean():
+    """The shipped source obeys its own conventions."""
+    violations = lint.check_paths([str(_ROOT / "src")])
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+@pytest.mark.parametrize("rule", ["LC001", "LC002", "LC003"])
+def test_every_rule_documented(rule):
+    assert rule in _SCRIPT.read_text()

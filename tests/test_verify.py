@@ -1,0 +1,511 @@
+"""Static verifier (core/verify.py): builtin sweep + mutation matrix.
+
+Two halves:
+
+  1. `test_builtin_programs_all_verify` — every built-in algorithm x
+     rank count x segments x codec x hierarchical composition compiles
+     AND fully verifies (the sweep the CI verify lane runs; set
+     VERIFY_EXHAUSTIVE=1 to widen the grid). The sweep was clean when
+     the verifier landed — this test pins that fact.
+
+  2. Mutation matrix — for each rule id, a minimally broken
+     schedule/program that the owning pass (and ONLY that pass) rejects,
+     with the rule id asserted. This is the verifier's own regression
+     net: a pass that silently stops firing fails here.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms, hierarchical, plugins, verify
+from repro.core.program import (
+    Copy, Compress, Decompress, Program, RecvCombine, Send, StreamChain,
+)
+from repro.core.schedule import Schedule, Sel, Step
+from repro.core.sequencer import DrainModeError, Sequencer
+from repro.core.topology import Communicator, ProductComm
+from repro.core.verify import RULES, VerifyError, verify_program
+
+
+def _comm(n):
+    return Communicator(axis="x", size=n)
+
+
+def _pcomm(P, M):
+    return ProductComm(
+        outer=Communicator(axis="pod", size=P, is_dcn=True),
+        inner=Communicator(axis="x", size=M))
+
+
+# --------------------------------------------------------------------------
+# 1. The exhaustive built-in sweep (CI verify lane)
+# --------------------------------------------------------------------------
+
+def test_builtin_programs_all_verify():
+    """Every built-in collective program passes full verification.
+
+    The sweep that landed with the verifier found NO latent IR
+    inconsistency in the existing lowerings; this test pins that."""
+    exhaustive = bool(os.environ.get("VERIFY_EXHAUSTIVE"))
+    sizes = (2, 3, 4, 5, 8) + ((16, 12) if exhaustive else ())
+    seg_grid = (1, 2, 4) + ((8,) if exhaustive else ())
+    codecs = (None, "bf16", "int8")
+    checked = 0
+    for (coll, algo), gen in algorithms.GENERATORS.items():
+        for n in sizes:
+            try:
+                sched = gen(_comm(n))
+            except ValueError:
+                continue  # pow2-only generator on a non-pow2 size
+            for segments in seg_grid:
+                for codec in codecs:
+                    sched.compile(segments=segments, codec=codec,
+                                  verify="full")
+                    checked += 1
+    shapes = ((2, 2), (2, 4), (4, 2), (3, 4)) + \
+        (((4, 4), (2, 8)) if exhaustive else ())
+    for coll in ("allreduce", "reduce_scatter", "allgather", "bcast"):
+        for P, M in shapes:
+            for inter in hierarchical.inter_candidates(coll, P):
+                try:
+                    sched = hierarchical.hierarchical_schedule(
+                        coll, _pcomm(P, M), intra="ring", inter=inter)
+                except ValueError:
+                    continue
+                for segments in (1, 2):
+                    for codec in (None, "int8"):
+                        sched.compile(segments=segments, codec=codec,
+                                      verify="full")
+                        checked += 1
+    assert checked > 500  # the sweep actually swept
+
+
+def test_verification_is_bitwise_neutral():
+    """Verification never alters the compiled artifact: compiling with
+    verify='off' and verify='full' yields identical programs (and the
+    memoized compile returns the same object)."""
+    sched = algorithms.ring_allreduce(_comm(8))
+    p_off = sched.compile(verify="off")
+    p_full = sched.compile(verify="full")
+    assert p_off is p_full  # same cache entry, upgraded in place
+    fresh = algorithms.ring_allreduce(_comm(8))
+    assert fresh.compile(verify="full").describe() == p_off.describe()
+
+
+def test_bad_verify_level_rejected():
+    sched = algorithms.ring_allreduce(_comm(4))
+    with pytest.raises(ValueError, match="verify must be one of"):
+        sched.compile(verify="paranoid")
+    with pytest.raises(ValueError, match="verify level"):
+        verify_program(sched.compile(verify="off"), sched, level="nope")
+
+
+# --------------------------------------------------------------------------
+# 2. Mutation matrix — one minimally broken program per rule id
+# --------------------------------------------------------------------------
+
+_PASSES = {
+    "structural": lambda p, s: verify.structural_pass(p),
+    "exchange": lambda p, s: verify.exchange_pass(p, full=True),
+    "deadlock": lambda p, s: verify.deadlock_pass(p),
+    "level": lambda p, s: verify.level_pass(p),
+    "dataflow": lambda p, s: verify.dataflow_pass(p, s),
+    "stream": lambda p, s: verify.stream_pass(p),
+}
+
+
+def _assert_only_pass(prog, sched, owning_pass, rule):
+    """The owning pass rejects with `rule`; every other pass accepts."""
+    for name, fn in _PASSES.items():
+        if name == owning_pass:
+            with pytest.raises(VerifyError) as ei:
+                fn(prog, sched)
+            assert ei.value.rule == rule, (
+                f"{owning_pass} raised {ei.value.rule}, wanted {rule}")
+        else:
+            fn(prog, sched)  # must not raise
+    # and the front door reports the same rule
+    with pytest.raises(VerifyError) as ei:
+        verify_program(prog, sched, level="full")
+    assert ei.value.rule == rule
+    assert rule in RULES
+
+
+def test_mutation_dropped_recv_xm_unmatched():
+    """Dropped pair on an unmasked exchange -> XM_UNMATCHED_RECV only
+    (an allreduce keeps the dataflow walk clean: full-buffer init)."""
+    sched = algorithms.recursive_doubling_allreduce(_comm(4))
+    s0 = sched.steps[0]
+    mut = dataclasses.replace(
+        sched, steps=(dataclasses.replace(s0, perm=s0.perm[:-1]),)
+        + sched.steps[1:])
+    prog = mut.compile(verify="off")
+    _assert_only_pass(prog, mut, "exchange", "XM_UNMATCHED_RECV")
+    err = pytest.raises(VerifyError, verify_program, prog, mut).value
+    assert err.rank == 2 and "receive nothing" in str(err)
+
+
+def test_mutation_dsts_drift_xm_dsts_mismatch():
+    sched = algorithms.binomial_tree_bcast(_comm(4))
+    prog = sched.compile(verify="off")
+    # tamper the compiled RecvCombine.dsts out from under the perm
+    def bad(op):
+        if isinstance(op, RecvCombine) and op.dsts is not None:
+            return dataclasses.replace(op, dsts=op.dsts + (3,) if 3 not in
+                                       op.dsts else op.dsts[:-1])
+        return op
+    ops = tuple(bad(o) for o in prog.ops)
+    mut = dataclasses.replace(prog, ops=ops)
+    with pytest.raises(VerifyError) as ei:
+        verify.exchange_pass(mut, full=False)
+    assert ei.value.rule == "XM_DSTS_MISMATCH"
+
+
+def test_mutation_byte_count_mismatch():
+    """Send region of 1 chunk against a 2-chunk receive window."""
+    n = 4
+    perm = tuple(_comm(n).ring_perm(1))
+    sched = Schedule(
+        name="mut", collective="allreduce", nranks=n, chunks=n,
+        result="full",
+        steps=(Step(perm=perm, op="copy",
+                    send_sel=Sel.chunk(lambda r, s: r),
+                    recv_sel=Sel.range(lambda r, s: ((r - 1) % (n - 1), 2)),
+                    bytes_frac=1.0 / n),))
+    prog = sched.compile(verify="off")
+    _assert_only_pass(prog, sched, "exchange", "XM_BYTES_MISMATCH")
+
+
+def test_mutation_bytes_frac_drift():
+    sched = algorithms.ring_reduce_scatter(_comm(4))
+    mut = dataclasses.replace(
+        sched, steps=tuple(dataclasses.replace(s, bytes_frac=1.0)
+                           for s in sched.steps))
+    prog = mut.compile(verify="off")
+    _assert_only_pass(prog, mut, "exchange", "XM_BYTES_FRAC")
+
+
+def test_mutation_codec_mismatch_scale_block():
+    perm = ((0, 1), (1, 0))
+    body = (Copy("load", Sel.all(), step=0), Compress("int8"),
+            Send(perm, bytes_frac=1.0), Decompress("bf16"),
+            RecvCombine("add", Sel.all(), step=0))
+    prog = Program(name="mut", collective="allreduce", nranks=2, chunks=1,
+                   relay="buffer", segments=1, codec="int8", ops=body)
+    _assert_only_pass(prog, None, "exchange", "XM_SCALE_BLOCK")
+
+
+def test_mutation_self_send_deadlock():
+    sched = algorithms.recursive_doubling_allreduce(_comm(4))
+    s0 = sched.steps[0]
+    mut = dataclasses.replace(
+        sched, steps=(dataclasses.replace(
+            s0, perm=((0, 0), (2, 3), (3, 2)), mask_recv=True),)
+        + sched.steps[1:])
+    prog = mut.compile(verify="off")
+    _assert_only_pass(prog, mut, "deadlock", "DL_SELF_SEND")
+
+
+def test_mutation_read_before_write():
+    """Allgather wiring a neighbour's chunk the rank never received."""
+    n = 4
+    perm = tuple(_comm(n).ring_perm(1))
+    sched = Schedule(
+        name="mut", collective="allgather", nranks=n, chunks=n,
+        result="full",
+        steps=tuple(
+            Step(perm=perm, op="copy",
+                 send_sel=Sel.chunk(lambda r, s: (r + 1) % n),
+                 recv_sel=Sel.chunk(lambda r, s: r),
+                 bytes_frac=1.0 / n, uniform=True)
+            for _ in range(n - 1)))
+    prog = sched.compile(verify="off")
+    _assert_only_pass(prog, sched, "dataflow", "DF_READ_BEFORE_WRITE")
+
+
+def test_mutation_combine_into_unwritten():
+    n = 4
+    perm = tuple(_comm(n).ring_perm(1))
+    sched = Schedule(
+        name="mut", collective="allgather", nranks=n, chunks=n,
+        result="full",
+        steps=(Step(perm=perm, op="add",
+                    send_sel=Sel.chunk(lambda r, s: r),
+                    recv_sel=Sel.chunk(lambda r, s: (r - 1) % n),
+                    bytes_frac=1.0 / n),))
+    prog = sched.compile(verify="off")
+    _assert_only_pass(prog, sched, "dataflow", "DF_COMBINE_UNWRITTEN")
+
+
+def test_mutation_double_write():
+    """Two steps re-delivering the same chunk to the same rank."""
+    n = 4
+    perm = tuple(_comm(n).ring_perm(1))
+    step = Step(perm=perm, op="copy",
+                send_sel=Sel.chunk(lambda r, s: r),
+                recv_sel=Sel.chunk(lambda r, s: (r - 1) % n),
+                bytes_frac=1.0 / n)
+    sched = Schedule(name="mut", collective="allgather", nranks=n,
+                     chunks=n, result="full", steps=(step, step))
+    prog = sched.compile(verify="off")
+    _assert_only_pass(prog, sched, "dataflow", "DF_DOUBLE_WRITE")
+
+
+def test_mutation_truncated_ring_coverage():
+    sched = algorithms.ring_allgather(_comm(4))
+    mut = dataclasses.replace(sched, steps=sched.steps[:-1])
+    prog = mut.compile(verify="off")
+    _assert_only_pass(prog, mut, "dataflow", "DF_COVERAGE")
+
+
+def _tagged_allreduce(P=2, M=2, level_perm=((0, 1), (1, 0)),
+                      level_sizes="auto"):
+    """Flat-rank allreduce step carrying intra-level tags (the shape
+    `hierarchical._remap_phase` emits)."""
+    perm = hierarchical._expand_intra_perm(level_perm, P)
+    if level_sizes == "auto":
+        level_sizes = (("inter", P), ("intra", M))
+    step = Step(perm=perm, op="add", send_sel=Sel.all(),
+                recv_sel=Sel.all(), bytes_frac=1.0,
+                level="intra", level_perm=level_perm)
+    return Schedule(name="tagged", collective="allreduce", nranks=P * M,
+                    steps=(step,), chunks=1, result="full",
+                    level_sizes=level_sizes)
+
+
+def test_tagged_schedule_verifies_clean():
+    sched = _tagged_allreduce()
+    verify_program(sched.compile(verify="off"), sched, level="full")
+
+
+def test_mutation_orphan_level_tag():
+    """A level-tagged step in a program with no level_sizes."""
+    sched = _tagged_allreduce(level_sizes=None)
+    prog = sched.compile(verify="off")
+    _assert_only_pass(prog, sched, "level", "LV_ORPHAN_LEVEL")
+
+
+def test_mutation_level_perm_out_of_range():
+    """Valid flat perm, but the level_perm annotation names a local rank
+    outside the level — only the level pass can see this."""
+    good = _tagged_allreduce()
+    s0 = good.steps[0]
+    mut = dataclasses.replace(
+        good, steps=(dataclasses.replace(s0, level_perm=((0, 1), (1, 5))),))
+    prog = mut.compile(verify="off")
+    _assert_only_pass(prog, mut, "level", "LV_PERM_MISMATCH")
+
+
+def test_mutation_level_perm_wrong_expansion():
+    """level_perm disagrees with the flat perm the simulator executes."""
+    good = _tagged_allreduce()
+    s0 = good.steps[0]
+    mut = dataclasses.replace(
+        good, steps=(dataclasses.replace(s0, level_perm=((1, 0), (0, 1))),))
+    prog = mut.compile(verify="off")
+    _assert_only_pass(prog, mut, "level", "LV_PERM_MISMATCH")
+
+
+def test_mutation_unsafe_stream_chain():
+    """Hand-built STREAM_CHAIN whose head/tail segments collide — the
+    proof `fuse_chains` would never have accepted."""
+    perm = ((0, 1), (1, 0))
+    chunks = 6
+
+    def body(load_off, comb_off, step):
+        return (Copy("load", Sel.range(lambda r, s, o=load_off: (o, 2)),
+                     step=step),
+                Send(perm, bytes_frac=2.0 / chunks),
+                RecvCombine("copy",
+                            Sel.range(lambda r, s, o=comb_off: (o, 2)),
+                            step=step))
+
+    # wave 2's payload head [1, 2) overlaps wave 1's combine tail [1, 2)
+    chain = StreamChain(segments=2, bodies=(body(2, 0, 0), body(1, 4, 1)))
+    prog = Program(name="mut", collective="custom", nranks=2,
+                   chunks=chunks, relay="buffer", segments=2, codec=None,
+                   ops=(chain,))
+    _assert_only_pass(prog, None, "stream", "DF_STREAM_UNSAFE")
+
+
+def test_rule_ids_structural_and_bounds():
+    """Shape and bounds defects report their ST_* rules (these fire from
+    the shared IR walk, so no single-pass isolation applies)."""
+    torn = Program(name="mut", collective="allreduce", nranks=2, chunks=1,
+                   relay="buffer", segments=1, codec=None,
+                   ops=(Copy("load", Sel.all(), step=0),
+                        Send(((0, 1), (1, 0)))))
+    err = pytest.raises(VerifyError, verify_program, torn, None).value
+    assert err.rule == "ST_BODY_SHAPE"
+
+    n = 4
+    sched = Schedule(
+        name="mut", collective="allgather", nranks=n, chunks=n,
+        result="full",
+        steps=(Step(perm=tuple(_comm(n).ring_perm(1)), op="copy",
+                    send_sel=Sel.chunk(lambda r, s: r + n),
+                    recv_sel=Sel.chunk(lambda r, s: (r - 1) % n),
+                    bytes_frac=1.0 / n),))
+    err = pytest.raises(VerifyError, verify_program,
+                        sched.compile(verify="off"), sched).value
+    assert err.rule == "ST_SEL_BOUNDS"
+    # structural mode never evaluates selectors: same program passes
+    verify_program(sched.compile(verify="off"), sched, level="structural")
+
+    dup = algorithms.recursive_doubling_allreduce(_comm(4))
+    s0 = dup.steps[0]
+    mutd = dataclasses.replace(
+        dup, steps=(dataclasses.replace(
+            s0, perm=((0, 1), (1, 0), (2, 1), (3, 2)), mask_recv=True),)
+        + dup.steps[1:])
+    err = pytest.raises(VerifyError, verify_program,
+                        mutd.compile(verify="off"), mutd).value
+    assert err.rule == "ST_PERM_DUP"
+
+
+def test_verify_error_carries_addressing():
+    sched = algorithms.ring_allgather(_comm(4))
+    mut = dataclasses.replace(sched, steps=sched.steps[:-1])
+    err = pytest.raises(VerifyError, verify_program,
+                        mut.compile(verify="off"), mut).value
+    assert err.rule == "DF_COVERAGE"
+    assert err.rank is not None
+    assert "[DF_COVERAGE]" in str(err)
+    assert isinstance(err, ValueError)  # plugs into existing handlers
+
+
+def test_rules_table_covers_every_pass():
+    passes = {p for p, _ in RULES.values()}
+    assert passes == {"structural", "exchange", "deadlock", "level",
+                      "dataflow"}
+    assert all(desc for _, desc in RULES.values())
+
+
+# --------------------------------------------------------------------------
+# Sequencer choke point: dep-cycle pass + drain-mode guard (PR 5 item)
+# --------------------------------------------------------------------------
+
+def test_request_dag_cycle_rejected(mesh8):
+    from repro.core.engine import CollectiveEngine
+    eng = CollectiveEngine(mesh8, backend="microcode")
+    seq = Sequencer(eng)
+    x1 = np.zeros((8,), np.float32)
+    x2 = np.zeros((8,), np.float32)
+    r1 = seq.issue("allreduce", x1, "x")
+    r2 = seq.issue("allreduce", x2, "x", after=(r1,))
+    verify.check_request_dag([r1, r2])  # acyclic by construction
+    r1.deps = (r2,)  # tamper a cycle in
+    with pytest.raises(VerifyError) as ei:
+        verify.check_request_dag([r1, r2])
+    assert ei.value.rule == "DL_DEP_CYCLE"
+    with pytest.raises(VerifyError):
+        seq.drain()
+    # a dep outside the outstanding set (already done) is not an edge
+    r1.deps = ()
+    verify.check_request_dag([r1, r2])
+
+
+def test_simulate_drain_checks_dag(mesh8):
+    from repro.core.engine import CollectiveEngine
+    eng = CollectiveEngine(mesh8, backend="microcode")
+    seq = Sequencer(eng)
+    x1 = np.zeros((8,), np.float32)
+    r1 = seq.issue("allreduce", x1, "x")
+    r2 = seq.issue("allreduce", r1, "x")
+    r1.deps = (r2,)
+    with pytest.raises(VerifyError) as ei:
+        seq.simulate_drain({r1: [np.zeros((8,), np.float32)] * 8})
+    assert ei.value.rule == "DL_DEP_CYCLE"
+
+
+def test_drain_mode_engine_then_simulator_raises(mesh8):
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.engine import CollectiveEngine
+    eng = CollectiveEngine(mesh8, backend="microcode")
+
+    def queued(a):
+        return eng.iallreduce(a, "x").wait()  # engine drain claims queue
+
+    eng.run(queued, in_specs=P("x"), out_specs=P())(
+        jnp.zeros((8, 8), jnp.float32))
+    seq = eng.queue
+    r2 = seq.issue("allreduce", np.zeros((8,), np.float32), "x")
+    with pytest.raises(DrainModeError, match="engine"):
+        seq.simulate_drain({r2: [np.zeros((8,), np.float32)] * 8})
+    assert not r2._done  # typed error, no silent partial drain
+
+
+def test_drain_mode_simulator_then_engine_raises(mesh8):
+    from repro.core.engine import CollectiveEngine
+    eng = CollectiveEngine(mesh8, backend="microcode")
+    seq = Sequencer(eng)
+    x = np.zeros((8,), np.float32)
+    r1 = seq.issue("allreduce", x, "x")
+    seq.simulate_drain({r1: [np.ones((8,), np.float32)] * 8})
+    r2 = seq.issue("allreduce", np.zeros((8,), np.float32), "x")
+    with pytest.raises(DrainModeError, match="simulator"):
+        r2.wait()
+    with pytest.raises(DrainModeError, match="simulator"):
+        seq.drain()
+
+
+# --------------------------------------------------------------------------
+# Registration choke point: probe-grid verification
+# --------------------------------------------------------------------------
+
+def _good_scatter(comm, root: int = 0):
+    n = comm.size
+    steps = tuple(
+        Step(perm=((root, (root + i + 1) % n),), op="copy",
+             send_sel=Sel.chunk(lambda r, s, i=i: (root + i + 1) % n),
+             recv_sel=Sel.chunk(lambda r, s, i=i: (root + i + 1) % n),
+             bytes_frac=1.0 / n, mask_recv=True)
+        for i in range(n - 1))
+    return Schedule(name="linear", collective="vscatter", nranks=n,
+                    steps=steps, chunks=n, result="shard",
+                    owned_chunk=lambda r: r, relay="original")
+
+
+def _broken_scatter(comm, root: int = 0):
+    n = comm.size
+    sched = _good_scatter(comm, root)
+    # receive window twice the payload: a byte-count mismatch on the wire
+    steps = tuple(
+        dataclasses.replace(
+            s, recv_sel=Sel.range(lambda r, s_, i=i: ((root + i + 1) % n, 1)
+                                  if (root + i + 1) % n == n - 1
+                                  else ((root + i + 1) % n, 2)))
+        for i, s in enumerate(sched.steps))
+    return dataclasses.replace(sched, steps=steps)
+
+
+def test_register_collective_accepts_verified_schedule():
+    try:
+        plugins.register_collective("vscatter", _good_scatter)
+        assert plugins.custom_generator("vscatter", "custom") is not None
+    finally:
+        plugins.unregister_collective("vscatter")
+
+
+def test_register_collective_rejects_broken_schedule():
+    before = plugins.registry_version()
+    with pytest.raises(VerifyError) as ei:
+        plugins.register_collective("wscatter", _broken_scatter)
+    msg = str(ei.value)
+    assert ei.value.rule == "XM_BYTES_MISMATCH"
+    assert "cannot register collective 'wscatter'" in msg
+    assert "probe nranks=" in msg  # the failing probe point is named
+    assert plugins.custom_generator("wscatter", "custom") is None
+    assert plugins.registry_version() == before  # registry untouched
+
+
+def test_register_collective_verify_optout():
+    try:
+        plugins.register_collective("wscatter2", _broken_scatter,
+                                    verify=False)
+        assert plugins.custom_generator("wscatter2", "custom") is not None
+    finally:
+        plugins.unregister_collective("wscatter2")
