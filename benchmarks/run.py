@@ -48,6 +48,13 @@ def main(argv=None) -> dict:
                          f"{default_segments})")
     ap.add_argument("--sweep-ranks", type=int, default=8,
                     help="communicator size for the segment sweep")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the run under a telemetry Tracer and "
+                         "write the Chrome trace-event JSON here "
+                         "(open in Perfetto, or summarize with "
+                         "scripts/trace_report.py). The tracer is "
+                         "read-only: priced outputs are bitwise "
+                         "identical with or without it.")
     args = ap.parse_args(argv)
     if args.only and args.quick:
         ap.error("--only and --quick are mutually exclusive")
@@ -103,8 +110,19 @@ def main(argv=None) -> dict:
                    "fault_sweep": benches["fault_sweep"],
                    "hier_sweep": benches["hier_sweep"],
                    "contention_sweep": benches["contention_sweep"]}
-    for fn in benches.values():
-        fn()
+    if args.trace:
+        from repro.core import telemetry
+        with telemetry.use(telemetry.Tracer()) as tracer:
+            for fn in benches.values():
+                fn()
+        trace_doc = tracer.to_chrome_trace()
+        with open(args.trace, "w") as f:
+            json.dump(trace_doc, f)
+        print(f"# wrote {args.trace}: "
+              f"{len(trace_doc['traceEvents'])} trace events")
+    else:
+        for fn in benches.values():
+            fn()
 
     results = {
         "meta": _meta(),

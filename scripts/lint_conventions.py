@@ -29,6 +29,14 @@ Rules (each failure prints `path:line: RULE message`):
         Schedule while skipping the compiler (and with it the static
         verifier). Passing an already-compiled variable is fine.
 
+  LC004 side-channel-telemetry
+        Direct writes through a `.stats[...]` subscript (the legacy
+        ad-hoc dicts — emit through `MetricsRegistry.inc()/.set()`; the
+        `.stats` views stay read-compatible) and bare `print(` calls in
+        src/ (telemetry goes through `core/telemetry.py`, user output
+        through the launch CLIs). Exempt: `core/telemetry.py` itself and
+        everything under `launch/` (the CLI surface).
+
 Usage: python scripts/lint_conventions.py PATH [PATH ...]
 Exits 1 if any violation is found. Self-tested by tests/test_lint.py.
 """
@@ -56,6 +64,23 @@ BARE_PRICING_KWARGS = frozenset({"tier", "drop_prob"})
 EXECUTORS = frozenset({"execute_program"})
 COMPILERS = frozenset({"compile", "compile_schedule"})
 
+#: LC004 does not apply to the telemetry module itself or the CLI layer
+LC004_EXEMPT_FILES = frozenset({"telemetry.py"})
+LC004_EXEMPT_DIRS = frozenset({"launch"})
+
+
+def _lc004_exempt(path: str) -> bool:
+    p = pathlib.PurePath(path)
+    return p.name in LC004_EXEMPT_FILES \
+        or bool(LC004_EXEMPT_DIRS & set(p.parts))
+
+
+def _stats_subscript(target: ast.expr) -> bool:
+    """True for a `<expr>.stats[...]` subscript target."""
+    return (isinstance(target, ast.Subscript)
+            and isinstance(target.value, ast.Attribute)
+            and target.value.attr == "stats")
+
 
 class Violation(NamedTuple):
     path: str
@@ -80,7 +105,29 @@ def _callee_name(func: ast.expr):
 def check_source(text: str, path: str) -> List[Violation]:
     out: List[Violation] = []
     tree = ast.parse(text, filename=path)
+    lc004 = not _lc004_exempt(path)
     for node in ast.walk(tree):
+        if lc004:
+            targets = ()
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = (node.target,)
+            for t in targets:
+                if _stats_subscript(t):
+                    out.append(Violation(
+                        path, node.lineno, "LC004",
+                        "direct write through a `.stats[...]` view — "
+                        "emit through MetricsRegistry "
+                        "(.inc()/.set(); core/telemetry.py)"))
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id == "print":
+                out.append(Violation(
+                    path, node.lineno, "LC004",
+                    "bare print() in library code — telemetry goes "
+                    "through core/telemetry.py (CLI output belongs "
+                    "under launch/)"))
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
                 and node.name in LEGACY_NAMES:
             out.append(Violation(

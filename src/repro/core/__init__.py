@@ -13,6 +13,8 @@ Public API:
     FabricOccupancy      per-chip physical-link capacity map
     FaultPlan/ReliabilityTier  fabric fault model + protocol tiers
     register_collective  out-of-tree collectives, no engine changes needed
+    Tracer/MetricsRegistry  unified telemetry (core/telemetry.py):
+                         virtual-clock traces + the stats registry
 """
 from repro.core import compat  # installs the jax.shard_map polyfill first
 from repro.core.engine import CollectiveEngine, execute_program
@@ -31,8 +33,10 @@ from repro.core.topology import (
 )
 from repro.core.schedule import Schedule, Step, Sel
 from repro.core.hw_spec import HwSpec, TPU_V5E, ACCL_CLUSTER
+from repro.core.telemetry import MetricsRegistry, NullTracer, StatsView, \
+    Tracer
 from repro.core import algorithms, faults, mesh_cost, plugins, pricing, \
-    program, sequencer, simulator
+    program, sequencer, simulator, telemetry
 
 __all__ = [
     "CollectiveEngine", "execute_program", "Program", "compile_schedule",
@@ -42,7 +46,9 @@ __all__ = [
     "FaultPlan", "FaultyTransport", "ReliabilityTier", "TIERS",
     "TransportError", "TransportTimeout", "PeerFailedError",
     "Communicator", "axis_comm", "make_mesh", "Schedule", "Step", "Sel",
-    "HwSpec", "TPU_V5E", "ACCL_CLUSTER", "algorithms", "faults",
+    "HwSpec", "TPU_V5E", "ACCL_CLUSTER",
+    "Tracer", "NullTracer", "MetricsRegistry", "StatsView",
+    "algorithms", "faults",
     "mesh_cost", "plugins", "pricing", "program", "sequencer", "simulator",
-    "compat",
+    "telemetry", "compat",
 ]

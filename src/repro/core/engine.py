@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 from repro.core.compat import shard_map
 
-from repro.core import hierarchical, plugins
+from repro.core import hierarchical, plugins, telemetry
 from repro.core.algorithms import GENERATORS
 from repro.core.program import (
     SRC_BUFFER, SRC_ORIGINAL, Copy, Compress, Decompress, Loop, Program,
@@ -751,6 +751,13 @@ def _gen_schedule(collective: str, algorithm: str, comm,
     return gen(comm, **kw)
 
 
+def _engine_metrics() -> telemetry.MetricsRegistry:
+    reg = telemetry.MetricsRegistry()
+    reg.counter("gen_calls")
+    reg.counter("sched_cache_hits")
+    return reg
+
+
 @dataclasses.dataclass
 class CollectiveEngine:
     """ACCL+ CCLO analogue over a jax mesh.
@@ -774,9 +781,10 @@ class CollectiveEngine:
     # Schedule. Repeated collectives in a training step hit this instead of
     # re-running the generator (the uC caches compiled microcode).
     _sched_cache: dict = dataclasses.field(default_factory=dict)
-    # control-plane telemetry, asserted on by tests
-    stats: dict = dataclasses.field(
-        default_factory=lambda: {"gen_calls": 0, "sched_cache_hits": 0})
+    # control-plane telemetry, asserted on by tests (`stats` below is
+    # the read-compatible mapping view over this registry)
+    metrics: telemetry.MetricsRegistry = dataclasses.field(
+        default_factory=_engine_metrics)
     # lazily created request queue (core/sequencer.py) — the CCLO's
     # offload command queue behind the non-blocking `issue` API
     _queue: object = dataclasses.field(default=None, repr=False)
@@ -812,6 +820,11 @@ class CollectiveEngine:
             self._queue = Sequencer(self)
         return self._queue
 
+    @property
+    def stats(self) -> telemetry.StatsView:
+        """Read-compatible mapping view over `metrics` (legacy name)."""
+        return self.metrics.view()
+
     def _cached_schedule(self, collective: str, algorithm: str,
                          comm, root: int, op: str) -> Schedule:
         # a product communicator keys on its level split, not just the
@@ -821,9 +834,9 @@ class CollectiveEngine:
         key = (collective, algorithm, shape, root, op)
         sched = self._sched_cache.get(key)
         if sched is not None:
-            self.stats["sched_cache_hits"] += 1
+            self.metrics.inc("sched_cache_hits")
             return sched
-        self.stats["gen_calls"] += 1
+        self.metrics.inc("gen_calls")
         sched = _gen_schedule(collective, algorithm, comm, root, op)
         self._sched_cache[key] = sched
         return sched

@@ -27,6 +27,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core import telemetry
+
 __all__ = [
     "TransportError", "TransportTimeout", "PeerFailedError",
     "ReliabilityTier", "TIERS", "FaultPlan", "FaultyTransport",
@@ -218,13 +220,28 @@ class FaultyTransport:
         for attempt in range(self.tier.max_retries + 1):
             if not self.plan.drops_segment(self.exchange, src, dst, attempt):
                 if attempt:
+                    back = sum(self.tier.backoff(a)
+                               for a in range(1, attempt + 1))
                     self.retries += attempt
-                    self.backoff_s += sum(self.tier.backoff(a)
-                                          for a in range(1, attempt + 1))
+                    self.backoff_s += back
+                    tr = telemetry.current()
+                    if tr.enabled:
+                        tr.instant("transport.retry", track="transport",
+                                   src=src, dst=dst,
+                                   exchange=self.exchange,
+                                   retries=attempt, backoff_s=back,
+                                   tier=self.tier.name)
                 return
+        back = sum(self.tier.backoff(a)
+                   for a in range(1, self.tier.max_retries + 1))
         self.retries += self.tier.max_retries
-        self.backoff_s += sum(self.tier.backoff(a)
-                              for a in range(1, self.tier.max_retries + 1))
+        self.backoff_s += back
+        tr = telemetry.current()
+        if tr.enabled:
+            tr.instant("transport.timeout", track="transport",
+                       src=src, dst=dst, exchange=self.exchange,
+                       retries=self.tier.max_retries, backoff_s=back,
+                       tier=self.tier.name)
         raise TransportTimeout(
             f"segment {src}->{dst} lost after "
             f"{self.tier.max_retries + 1} attempts at exchange {self.exchange}",

@@ -77,6 +77,65 @@ class MeshMakespan:
             mm.add(seq, axis, env)
         return mm
 
+    def _composed(self) -> dict:
+        """The full composition state, computed once.
+
+        Every float here is produced by the exact operation sequence the
+        original `report()` used — `report()` and `timeline()` are both
+        thin views over this, so the timeline's last interval end equals
+        `mesh_makespan_s` *bitwise*, not approximately.
+        """
+        occ = self.occupancy
+        queues = []
+        entries = []   # (min_rid, item, full_s, lat_s, wire_s, links, axis)
+        for seq, axis, env in self._queues:
+            _comm, items, recs = seq._priced_plan(axis, env)
+            own = seq._compose(items, recs) if items else 0.0
+            queues.append({"axis": axis, "items": len(items),
+                           "makespan_s": own})
+            for it, (full, lat, wire, links) in zip(items, recs):
+                entries.append((min(r.rid for r in it.requests),
+                                it, full, lat, wire, links, axis))
+        # global dependency DAG: items in issue order, chains serialize
+        # full costs across queues (the within-queue recurrence, widened)
+        entries.sort(key=lambda e: e[0])
+        pos = {r: i for i, e in enumerate(entries) for r in e[1].requests}
+        chain = [0.0] * len(entries)
+        starts = [0.0] * len(entries)
+        for i, (_rid, it, full, _lat, _w, _links, _ax) in enumerate(entries):
+            best = 0.0
+            for r in it.requests:
+                for d in r.deps:
+                    j = pos.get(d)
+                    if j is not None and j < i:
+                        best = max(best, chain[j])
+            starts[i] = best
+            chain[i] = best + full
+        # per-physical-link busy time: wire serializes on a shared link.
+        # The cursor intervals ARE the accumulation: each item's window on
+        # a link is [busy-so-far, busy-so-far + w], so the last window's
+        # end is the final busy value, bitwise.
+        busy: dict = {}
+        link_iv = []   # (canonical_key, start_s, end_s, entry_index)
+        for i, (_rid, _it, _full, _lat, _w, links, _ax) in \
+                enumerate(entries):
+            for key, w in links.items():
+                ck = occ.canonical(key)
+                start = busy.get(ck, 0.0)
+                busy[ck] = start + w
+                link_iv.append((ck, start, busy[ck], i))
+        max_lat = max((e[3] for e in entries), default=0.0)
+        link_term = max(busy.values(), default=0.0) + max_lat
+        terms = [q["makespan_s"] for q in queues]
+        terms.append(max(chain, default=0.0))
+        terms.append(link_term)
+        return {
+            "mesh": max(terms, default=0.0),
+            "chain": chain, "starts": starts, "entries": entries,
+            "queues": queues, "busy": busy, "link_iv": link_iv,
+            "max_lat": max_lat, "link_term": link_term,
+        }
+
     def report(self) -> dict:
         """The composition, with its terms exposed for telemetry.
 
@@ -84,48 +143,76 @@ class MeshMakespan:
         — `queues` holds each registered queue's isolated makespan,
         `links` the per-physical-link busy seconds and capacity.
         """
+        c = self._composed()
         occ = self.occupancy
-        queues = []
-        entries = []   # (min_rid, item, full_s, lat_s, links)
-        for seq, axis, env in self._queues:
-            _comm, items, recs = seq._priced_plan(axis, env)
-            own = seq._compose(items, recs) if items else 0.0
-            queues.append({"axis": axis, "items": len(items),
-                           "makespan_s": own})
-            for it, (full, lat, _wire, links) in zip(items, recs):
-                entries.append((min(r.rid for r in it.requests),
-                                it, full, lat, links))
-        # global dependency DAG: items in issue order, chains serialize
-        # full costs across queues (the within-queue recurrence, widened)
-        entries.sort(key=lambda e: e[0])
-        pos = {r: i for i, e in enumerate(entries) for r in e[1].requests}
-        chain = [0.0] * len(entries)
-        for i, (_rid, it, full, _lat, _links) in enumerate(entries):
-            best = 0.0
-            for r in it.requests:
-                for d in r.deps:
-                    j = pos.get(d)
-                    if j is not None and j < i:
-                        best = max(best, chain[j])
-            chain[i] = best + full
-        # per-physical-link busy time: wire serializes on a shared link
-        busy: dict = {}
-        for _rid, _it, _full, _lat, links in entries:
-            for key, w in links.items():
-                ck = occ.canonical(key)
-                busy[ck] = busy.get(ck, 0.0) + w
-        max_lat = max((e[3] for e in entries), default=0.0)
-        link_term = max(busy.values(), default=0.0) + max_lat
-        terms = [q["makespan_s"] for q in queues]
-        terms.append(max(chain, default=0.0))
-        terms.append(link_term)
         return {
-            "mesh_makespan_s": max(terms, default=0.0),
-            "chain_s": max(chain, default=0.0),
-            "queues": queues,
+            "mesh_makespan_s": c["mesh"],
+            "chain_s": max(c["chain"], default=0.0),
+            "queues": c["queues"],
             "links": {k: {"busy_s": v, "capacity_Bps": occ.capacity(k)}
-                      for k, v in busy.items()},
+                      for k, v in c["busy"].items()},
         }
+
+    def timeline(self) -> dict:
+        """Expand the composed makespan into virtual-clock intervals.
+
+        Returns `{"end_s", "queues", "requests", "links"}` where every
+        interval is `{"name", "track", "start_s", "end_s", ...}`:
+
+        * one **queue** interval per registered queue ([0, own
+          makespan]) on track `queue:<axis>`;
+        * one **request** interval per plan item, chain-placed
+          ([chain start, chain start + full]) with its wait/wire/lat
+          split and coalesced flag;
+        * one **link** interval per (item, physical link) — wire
+          seconds serialized on the link's cursor — plus one trailing
+          `alpha` interval on the busiest link for the queued-latency
+          credit the link term adds.
+
+        Feed it to `Tracer.ingest_timeline()` for Perfetto export.  The
+        maximum `end_s` over all intervals equals
+        `report()["mesh_makespan_s"]` **bitwise** (regression-gated in
+        tests/test_telemetry.py): both are views over `_composed()`,
+        which performs the float arithmetic exactly once.
+        """
+        from repro.core.telemetry import axis_label
+        c = self._composed()
+        queues = []
+        for q in c["queues"]:
+            queues.append({"name": "drain", "axis": q["axis"],
+                           "track": f"queue:{axis_label(q['axis'])}",
+                           "start_s": 0.0, "end_s": q["makespan_s"]})
+        requests = []
+        for i, (_rid, it, full, lat, wire, _links, axis) in \
+                enumerate(c["entries"]):
+            requests.append({
+                "name": "request", "axis": axis,
+                "track": f"queue:{axis_label(axis)}",
+                "start_s": c["starts"][i], "end_s": c["chain"][i],
+                "rids": [r.rid for r in it.requests],
+                "full_s": full, "lat_s": lat, "wire_s": wire,
+                "coalesced": len(it.requests) > 1,
+            })
+        links = []
+        for ck, start, end, i in c["link_iv"]:
+            links.append({
+                "name": "wire", "link": ck,
+                "track": "link:" + "/".join(str(p) for p in ck),
+                "start_s": start, "end_s": end,
+                "rids": [r.rid for r in c["entries"][i][1].requests],
+            })
+        if c["busy"]:
+            # the queued-alpha credit: one max-latency term after the
+            # busiest link drains, ending exactly at link_term
+            busiest = max(c["busy"], key=lambda k: c["busy"][k])
+            links.append({
+                "name": "alpha", "link": busiest,
+                "track": "link:" + "/".join(str(p) for p in busiest),
+                "start_s": c["busy"][busiest], "end_s": c["link_term"],
+                "rids": [],
+            })
+        return {"end_s": c["mesh"], "queues": queues,
+                "requests": requests, "links": links}
 
     def total(self) -> float:
         """Contention-aware seconds to drain every registered queue."""

@@ -80,6 +80,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core import telemetry
 from repro.core.schedule import (
     SEL_ALL, SEL_CHUNK, SEL_MASK, SEL_RANGE, Schedule, Sel, Step,
 )
@@ -1011,50 +1012,98 @@ def compile_schedule(schedule: Schedule, segments: Optional[int] = None,
     mode = _verify_mode(verify)
     key = (schedule, k_req, codec, bool(stream), bool(stacked))
     hit = _COMPILE_CACHE.get(key)
+    tr = telemetry.current()
     if hit is not None:
+        if tr.enabled:
+            tr.instant("compile.cache_hit", track="compile",
+                       schedule=schedule.name, segments=k_req, codec=codec)
         _ensure_verified(hit, schedule, mode, key)
         return hit
 
-    ops: list = []
-    if schedule.pre_rotate == "bruck":
-        ops.append(Copy("bruck_pre"))
-    steps = schedule.steps
-    i = 0
-    while i < len(steps):
-        run = _detect_run(steps, i)
-        if run is not None:
-            trip, period = run
-            slot_ops = tuple(
-                _exchange_ops(steps[i + j], schedule.relay, None, k_req,
-                              codec)
-                for j in range(period))
-            ops.append(Loop(base=i, trip=trip, period=period,
-                            slots=slot_ops))
-            i += trip * period
-        else:
-            ops.extend(_exchange_ops(steps[i], schedule.relay, i, k_req,
-                                     codec))
-            i += 1
-    if schedule.post_rotate == "bruck":
-        ops.append(Copy("bruck_post"))
+    with tr.span("compile", track="compile", schedule=schedule.name,
+                 collective=schedule.collective, segments=k_req,
+                 codec=codec) as sp:
+        ops: list = []
+        if schedule.pre_rotate == "bruck":
+            ops.append(Copy("bruck_pre"))
+        steps = schedule.steps
+        i = 0
+        while i < len(steps):
+            run = _detect_run(steps, i)
+            if run is not None:
+                trip, period = run
+                slot_ops = tuple(
+                    _exchange_ops(steps[i + j], schedule.relay, None, k_req,
+                                  codec)
+                    for j in range(period))
+                ops.append(Loop(base=i, trip=trip, period=period,
+                                slots=slot_ops))
+                i += trip * period
+            else:
+                ops.extend(_exchange_ops(steps[i], schedule.relay, i, k_req,
+                                         codec))
+                i += 1
+        if schedule.post_rotate == "bruck":
+            ops.append(Copy("bruck_post"))
 
-    ops = tuple(ops)
-    if stream and k_req > 1:
-        ops = fuse_streams(ops, k_req, schedule.nranks)
-        ops = fuse_chains(ops, k_req, schedule.nranks)
-    if stacked and k_req == 1:
-        ops = fuse_stacked_recv(ops, schedule.nranks)
+        ops = tuple(ops)
+        # fusion passes; when tracing, each pass records whether it ran
+        # and whether it accepted (rewrote ops) or rejected, with reason
+        passes = [] if tr.enabled else None
+        if stream and k_req > 1:
+            pre = len(ops)
+            ops = fuse_streams(ops, k_req, schedule.nranks)
+            if passes is not None:
+                passes.append(_fusion_rec("fuse_streams", pre, len(ops)))
+            pre = len(ops)
+            ops = fuse_chains(ops, k_req, schedule.nranks)
+            if passes is not None:
+                passes.append(_fusion_rec("fuse_chains", pre, len(ops)))
+        elif passes is not None:
+            reason = "segments == 1" if k_req == 1 else "stream=False"
+            passes.append({"pass": "fuse_streams", "ran": False,
+                           "reason": reason})
+            passes.append({"pass": "fuse_chains", "ran": False,
+                           "reason": reason})
+        if stacked and k_req == 1:
+            pre = len(ops)
+            ops = fuse_stacked_recv(ops, schedule.nranks)
+            if passes is not None:
+                passes.append(_fusion_rec("fuse_stacked_recv", pre,
+                                          len(ops)))
+        elif passes is not None:
+            reason = "segments > 1" if k_req > 1 else "stacked=False"
+            passes.append({"pass": "fuse_stacked_recv", "ran": False,
+                           "reason": reason})
 
-    prog = Program(
-        name=schedule.name, collective=schedule.collective,
-        nranks=schedule.nranks, chunks=schedule.chunks,
-        relay=schedule.relay, segments=k_req, codec=codec,
-        ops=ops, overlap_factor=schedule.overlap_factor,
-        level_sizes=schedule.level_sizes)
-    _ensure_verified(prog, schedule, mode, key)
-    if len(_COMPILE_CACHE) >= _COMPILE_CACHE_MAX:
-        evicted = next(iter(_COMPILE_CACHE))  # FIFO eviction
-        _COMPILE_CACHE.pop(evicted)
-        _VERIFIED.pop(evicted, None)
-    _COMPILE_CACHE[key] = prog
+        prog = Program(
+            name=schedule.name, collective=schedule.collective,
+            nranks=schedule.nranks, chunks=schedule.chunks,
+            relay=schedule.relay, segments=k_req, codec=codec,
+            ops=ops, overlap_factor=schedule.overlap_factor,
+            level_sizes=schedule.level_sizes)
+        try:
+            _ensure_verified(prog, schedule, mode, key)
+        except Exception as e:
+            if tr.enabled:
+                tr.instant("compile.verify_failed", track="compile",
+                           schedule=schedule.name, verify=mode,
+                           error=type(e).__name__)
+            raise
+        if tr.enabled:
+            sp.add(ops=len(ops), verify=mode, passes=passes)
+        if len(_COMPILE_CACHE) >= _COMPILE_CACHE_MAX:
+            evicted = next(iter(_COMPILE_CACHE))  # FIFO eviction
+            _COMPILE_CACHE.pop(evicted)
+            _VERIFIED.pop(evicted, None)
+        _COMPILE_CACHE[key] = prog
     return prog
+
+
+def _fusion_rec(name: str, pre: int, post: int) -> dict:
+    """One fusion pass's span record: accepted iff it rewrote the ops."""
+    rec = {"pass": name, "ran": True, "accepted": post != pre,
+           "ops_before": pre, "ops_after": post}
+    if post == pre:
+        rec["reason"] = "no fusible run"
+    return rec

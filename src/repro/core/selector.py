@@ -25,6 +25,7 @@ from typing import Optional
 from repro.core import algorithms as algos
 from repro.core import hierarchical
 from repro.core import plugins
+from repro.core import telemetry
 from repro.core.program import Program, Stream, StreamChain, fit_segments
 from repro.core.schedule import Schedule
 from repro.core.topology import Communicator, ProductComm
@@ -112,8 +113,15 @@ class Selector:
         # (collective, lo_bytes, hi_bytes, nranks_or_None, algorithm, segs)
         self._tuning: list[tuple] = []
         self._cache: dict = {}
-        # generator/memoization telemetry, asserted on in tests
-        self.stats = {"choose_calls": 0, "cache_hits": 0, "gen_calls": 0}
+        # generator/memoization telemetry, asserted on in tests; `stats`
+        # is the read-compatible live view over the registry
+        self.metrics = telemetry.MetricsRegistry()
+        for _name in ("choose_calls", "cache_hits", "gen_calls"):
+            self.metrics.counter(_name)
+        self.stats = self.metrics.view()
+        # last uncached choose: candidates priced + margin over runner-up
+        self._last_priced = 0
+        self._last_margin: Optional[float] = None
 
     #: set_tuning codec wildcard: the rule applies whatever codec the
     #: choose is pricing (the pre-codec-aware behaviour).
@@ -334,7 +342,7 @@ class Selector:
         selector-level constructor override). The default env is
         bitwise-neutral.
         """
-        self.stats["choose_calls"] += 1
+        self.metrics.inc("choose_calls")
         eager_cap = None
         if env is not None:
             if env.comm is not None:
@@ -350,12 +358,30 @@ class Selector:
                None if lead_dim is None else int(lead_dim), eager_cap,
                plugins.registry_version())
         hit = self._cache.get(key)
+        tr = telemetry.current()
         if hit is not None:
-            self.stats["cache_hits"] += 1
+            self.metrics.inc("cache_hits")
+            if tr.enabled:
+                tr.instant("selector.cache_hit", track="selector",
+                           collective=collective, msg_bytes=int(msg_bytes),
+                           algorithm=hit.algorithm, protocol=hit.protocol)
             return hit
-        choice = self._choose_uncached(collective, msg_bytes, comm, codec,
-                                       elem_bytes, lead_dim,
-                                       eager_cap=eager_cap)
+        if tr.enabled:
+            with tr.span("selector.choose", track="selector",
+                         collective=collective, nranks=comm.size,
+                         msg_bytes=int(msg_bytes), codec=codec) as sp:
+                choice = self._choose_uncached(
+                    collective, msg_bytes, comm, codec, elem_bytes,
+                    lead_dim, eager_cap=eager_cap)
+                sp.add(algorithm=choice.algorithm, protocol=choice.protocol,
+                       segments=choice.segments,
+                       predicted_s=choice.predicted_s,
+                       candidates_priced=self._last_priced,
+                       margin_s=self._last_margin)
+        else:
+            choice = self._choose_uncached(collective, msg_bytes, comm,
+                                           codec, elem_bytes, lead_dim,
+                                           eager_cap=eager_cap)
         self._cache[key] = choice
         return choice
 
@@ -373,8 +399,10 @@ class Selector:
         custom_algos = {a for a, _g, _p
                         in plugins.custom_candidates(collective)}
         best: Optional[Choice] = None
+        priced = 0
+        second: Optional[float] = None
         for algo, gen in self.candidates(collective, comm):
-            self.stats["gen_calls"] += 1
+            self.metrics.inc("gen_calls")
             try:
                 sched = gen(comm)
             except ValueError:
@@ -408,19 +436,35 @@ class Selector:
                                            eager_cap=eager_cap)
                     if t is None:
                         continue
+                    priced += 1
                     cand = Choice(collective, algo, proto, t, sched_k,
                                   segments=k, codec=codec, program=prog)
                     if tuned_algo == algo:
                         if tuned_best is None or t < tuned_best.predicted_s:
                             tuned_best = cand
                     if best is None or t < best.predicted_s:
+                        if best is not None and (second is None
+                                                 or best.predicted_s < second):
+                            second = best.predicted_s
                         best = cand
+                    elif second is None or t < second:
+                        second = t
             if tuned_best is not None:
+                self._note_choice(priced, tuned_best, second)
                 return tuned_best
         if best is None:
             raise ValueError(
                 f"no applicable algorithm for {collective} over {comm}")
+        self._note_choice(priced, best, second)
         return best
+
+    def _note_choice(self, priced: int, winner: "Choice",
+                     second: Optional[float]) -> None:
+        """Stash candidates-priced / margin-over-runner-up for the
+        `selector.choose` span (telemetry only — never read by pricing)."""
+        self._last_priced = priced
+        self._last_margin = (second - winner.predicted_s
+                             if second is not None else None)
 
     def _choose_product(self, collective: str, msg_bytes: int,
                         comm: ProductComm, codec: Optional[str] = None,
@@ -459,7 +503,7 @@ class Selector:
         for intra in hierarchical.INTRA_ALGOS:
             for inter in hierarchical.inter_candidates(
                     collective, comm.outer.size):
-                self.stats["gen_calls"] += 1
+                self.metrics.inc("gen_calls")
                 sched = hierarchical.hierarchical_schedule(
                     collective, comm, intra=intra, inter=inter)
                 # hierarchical programs span fabrics: rendezvous only
@@ -469,7 +513,7 @@ class Selector:
         custom_algos = {a for a, _g, _p
                         in plugins.custom_candidates(collective)}
         for algo, gen in self.candidates(collective, flat):
-            self.stats["gen_calls"] += 1
+            self.metrics.inc("gen_calls")
             try:
                 sched = gen(flat)
             except ValueError:
@@ -479,6 +523,8 @@ class Selector:
             cands.append((algo, sched, self._protocols(collective, algo),
                           False))
         best: Optional[Choice] = None
+        priced = 0
+        second: Optional[float] = None
         for algo, sched, protos, is_hier in cands:
             # per-level segment floors: a hierarchical candidate's ladder
             # comes from the inner (ICI) fabric — the cost walk and the
@@ -501,18 +547,26 @@ class Selector:
                                            eager_cap=eager_cap)
                     if t is None:
                         continue
+                    priced += 1
                     cand = Choice(collective, algo, proto, t, sched_k,
                                   segments=k, codec=codec, program=prog)
                     if tuned_algo == algo:
                         if tuned_best is None or t < tuned_best.predicted_s:
                             tuned_best = cand
                     if best is None or t < best.predicted_s:
+                        if best is not None and (second is None
+                                                 or best.predicted_s < second):
+                            second = best.predicted_s
                         best = cand
+                    elif second is None or t < second:
+                        second = t
             if tuned_best is not None:
+                self._note_choice(priced, tuned_best, second)
                 return tuned_best
         if best is None:
             raise ValueError(
                 f"no applicable algorithm for {collective} over {comm}")
+        self._note_choice(priced, best, second)
         return best
 
     # -- tuning-table artifacts (fig12 / EXPERIMENTS round-trips) -----------

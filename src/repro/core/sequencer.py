@@ -80,6 +80,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.pricing import resolve_env
 
 
@@ -250,9 +251,13 @@ class Sequencer:
         # "engine" | "simulator" once a drain path has touched the queue;
         # the other path then raises DrainModeError (PR 5 watch item)
         self._drain_mode: Optional[str] = None
-        # control-plane telemetry, asserted on by tests / trainer logs
-        self.stats = {"issued": 0, "executed": 0,
-                      "coalesced_buckets": 0, "coalesced_requests": 0}
+        # control-plane telemetry, asserted on by tests / trainer logs;
+        # `stats` is the read-compatible live view over the registry
+        self.metrics = telemetry.MetricsRegistry()
+        for _name in ("issued", "executed",
+                      "coalesced_buckets", "coalesced_requests"):
+            self.metrics.counter(_name)
+        self.stats = self.metrics.view()
 
     # -- enqueue -------------------------------------------------------------
     def issue(self, collective: str, x, axis: str, *, after=None,
@@ -306,7 +311,15 @@ class Sequencer:
         if not isinstance(x, Request):
             self._buffer_owner[id(x)] = req
         self._queues.setdefault(axis, []).append(req)
-        self.stats["issued"] += 1
+        self.metrics.inc("issued")
+        tr = telemetry.current()
+        if tr.enabled:
+            tr.instant("request.issued",
+                       track=f"queue:{telemetry.axis_label(axis)}",
+                       rid=req.rid, collective=collective,
+                       msg_bytes=req.msg_bytes,
+                       deps=[d.rid for d in deps],
+                       timeout_s=timeout)
         return req
 
     def issue_multi(self, x, axes, op: str = "add",
@@ -399,6 +412,12 @@ class Sequencer:
             return
         req.status = status
         req.error = error
+        tr = telemetry.current()
+        if tr.enabled:
+            tr.instant("request.terminal",
+                       track=f"queue:{telemetry.axis_label(req.axis)}",
+                       rid=req.rid, status=status,
+                       error=type(error).__name__)
         q = self._queues.get(req.axis)
         if q is not None and req in q:
             q.remove(req)
@@ -657,7 +676,12 @@ class Sequencer:
         r._result = result
         r._done = True
         r.status = Request.DONE
-        self.stats["executed"] += 1
+        self.metrics.inc("executed")
+        tr = telemetry.current()
+        if tr.enabled:
+            tr.instant("request.done",
+                       track=f"queue:{telemetry.axis_label(r.axis)}",
+                       rid=r.rid)
         if not isinstance(r.operand, Request) \
                 and self._buffer_owner.get(id(r.operand)) is r:
             del self._buffer_owner[id(r.operand)]
@@ -682,6 +706,17 @@ class Sequencer:
             [r for q in self._queues.values() for r in q if not r._done])
 
     def _run_item(self, item: PlanItem) -> None:
+        tr = telemetry.current()
+        if not tr.enabled:
+            return self._run_item_inner(item)
+        with tr.span(
+                "drain.item",
+                track=f"queue:{telemetry.axis_label(item.requests[0].axis)}",
+                rids=[r.rid for r in item.requests],
+                coalesced=item.coalesced):
+            return self._run_item_inner(item)
+
+    def _run_item_inner(self, item: PlanItem) -> None:
         self._claim_drain("engine")
         for r in item.requests:
             for d in r.deps:
@@ -707,8 +742,8 @@ class Sequencer:
             self._finish(r, out[off:off + n].reshape(r.operand.shape))
             off += n
             q.remove(r)
-        self.stats["coalesced_buckets"] += 1
-        self.stats["coalesced_requests"] += len(item.requests)
+        self.metrics.inc("coalesced_buckets")
+        self.metrics.inc("coalesced_requests", len(item.requests))
 
     def _materialize(self, req: Request):
         if req._seq is not self:
@@ -794,6 +829,12 @@ class Sequencer:
                 tier=tier if tier is not None else TIERS["tcp-like"])
         results: dict = {}
         comm_override: dict = {}   # axis -> degraded communicator
+        # virtual drain clock — trace-only state: pricing never reads it,
+        # and none of it is computed unless a tracer is installed
+        tr = telemetry.current()
+        clock = 0.0                # serial virtual clock (priced seconds)
+        done_at: dict = {}         # rid -> virtual completion time
+        occ = None                 # FabricOccupancy, lazily built
         while any(self._queues.values()):
             # global issue order: among queue heads, run the item whose
             # head request was issued first — dependencies always point
@@ -874,6 +915,41 @@ class Sequencer:
                             + transport.backoff_s - pre_backoff)
             late = [r for r in item.requests
                     if r.timeout is not None and elapsed > r.timeout]
+            if tr.enabled:
+                # request-lifecycle attribution on the virtual clock:
+                # dep_stall = waiting on dependencies, queue_wait = the
+                # rest of the time between issue (t=0) and dispatch
+                if occ is None:
+                    from repro.core.topology import FabricOccupancy
+                    occ = FabricOccupancy()
+                dep_ready = max((done_at.get(d.rid, 0.0)
+                                 for r in item.requests for d in r.deps),
+                                default=0.0)
+                lat_s, wire_s, links = prog.cost_terms(
+                    nbytes, comm, elem_bytes=elem, per_link=True)
+                tr.interval(
+                    "request", f"queue:{telemetry.axis_label(axis)}",
+                    clock, clock + elapsed,
+                    rids=[r.rid for r in item.requests],
+                    collective=item.requests[0].collective,
+                    queue_wait_s=clock - dep_ready, dep_stall_s=dep_ready,
+                    wire_s=wire_s, lat_s=lat_s,
+                    retries=(transport.retries - pre_retries
+                             if transport else 0),
+                    backoff_s=(transport.backoff_s - pre_backoff
+                               if transport else 0.0),
+                    status="TIMED_OUT" if late else "DONE",
+                    coalesced=item.coalesced)
+                for lkey, w in links.items():
+                    ck = occ.canonical(lkey)
+                    tr.interval(
+                        "wire", "link:" + "/".join(str(p) for p in ck),
+                        clock, clock + w,
+                        rids=[r.rid for r in item.requests])
+                if not late:
+                    for r in item.requests:
+                        done_at[r.rid] = clock + elapsed
+                clock += elapsed
             if late:
                 for r in item.requests:
                     self._fail(r, Request.TIMED_OUT, TransportTimeout(
@@ -885,8 +961,8 @@ class Sequencer:
                 self._finish(r, per)
                 q.remove(r)
             if item.coalesced:
-                self.stats["coalesced_buckets"] += 1
-                self.stats["coalesced_requests"] += len(item.requests)
+                self.metrics.inc("coalesced_buckets")
+                self.metrics.inc("coalesced_requests", len(item.requests))
         return results
 
     def _sim_item(self, sim, item: PlanItem, sched, prog, vals, comm,

@@ -148,8 +148,8 @@ def grad_sync(grads, specs, ctx: ParCtx,
         # telemetry off static shapes — no tracers involved; the trainer
         # surfaces it per step (`Trainer._queue_stats`).
         from repro.core.mesh_cost import MeshMakespan
-        ctx.engine.stats["grad_sync_makespan_s"] = MeshMakespan.of(
-            ctx.engine.queue).total()
+        ctx.engine.metrics.set("grad_sync_makespan_s",
+                               MeshMakespan.of(ctx.engine.queue).total())
 
     out = {}
     sq = jnp.zeros((), jnp.float32)

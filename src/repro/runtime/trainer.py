@@ -23,6 +23,7 @@ from jax.sharding import NamedSharding
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ArchConfig, ParallelConfig
+from repro.core import telemetry
 from repro.data import DataConfig, make_loader
 from repro.optim import adamw
 from repro.parallel import stages
@@ -60,6 +61,9 @@ class Trainer:
         # axis -> rank-id-aware degraded Communicator (built up by
         # _shrink_to_survivors as failures accumulate; absent = intact)
         self._axis_comms: dict = {}
+        # per-step structured metrics (one `record()` per training step;
+        # the returned log rows are views of the same records)
+        self.metrics = telemetry.MetricsRegistry()
         self.ts = stages.build_train_step(arch, pcfg, mesh, opt_cfg,
                                           lr_schedule)
 
@@ -201,10 +205,16 @@ class Trainer:
         issuing happens at TRACE time, so these counters move on the
         first step (and on any retrace) and then hold — logged so runs
         record how many collectives rode the queue and how many
-        coalesced into bucketed programs."""
-        q = self.ts.ctx.engine._queue  # no queue was created -> no stats
+        coalesced into bucketed programs.
+
+        When the engine created no queue (grad sync ran blocking, or
+        there was nothing to sync), the keys are still present with
+        explicit `None` values — a log row missing queue numbers means
+        "no queue existed", never a silent drop."""
+        q = self.ts.ctx.engine._queue
         if q is None:
-            return {}
+            return {"queue_issued": None, "queue_coalesced": None,
+                    "grad_sync_makespan_s": None}
         out = {"queue_issued": q.stats["issued"],
                "queue_coalesced": q.stats["coalesced_requests"]}
         # the mesh-level (contention-aware) price of the step's gradient
@@ -247,6 +257,7 @@ class Trainer:
                        **self._queue_stats()}
                 if z is not None:
                     rec["straggler_z"] = z
+                self.metrics.record(**rec)
                 log.append(rec)
                 if (step + 1) % self.tcfg.ckpt_every == 0:
                     self.ckpt.save(step, self._state_tree(params, opt),

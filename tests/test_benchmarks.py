@@ -290,6 +290,24 @@ def test_check_bench_gates_contention_metrics(sweep_results, tmp_path):
         assert cb.main([str(results), "--baseline", str(baseline)]) == 1
 
 
+# -- observability neutrality -------------------------------------------------
+
+def test_quick_sweep_bitwise_identical_with_tracer_enabled(sweep_results):
+    """The bench guard for the telemetry layer: re-running the exact CI
+    gate subset under an enabled Tracer reproduces every gated number
+    bitwise. The tracer is an observer — pricing never reads it — so
+    `--trace` in the CI bench job cannot perturb the baseline gate."""
+    from benchmarks import run as bench_run
+    from repro.core import telemetry
+    _, untraced = sweep_results
+    with telemetry.use(telemetry.Tracer()) as tr:
+        traced = bench_run.main(["--quick", "--json", ""])
+    assert tr._events, "tracer recorded nothing — instrumentation gone?"
+    for section in ("rows", "segment_sweep", "queue_sweep", "fault_sweep",
+                    "hier_sweep", "contention_sweep"):
+        assert traced[section] == untraced[section], section
+
+
 # -- the CI perf gate (scripts/check_bench.py) --------------------------------
 
 def test_check_bench_passes_against_committed_baseline(sweep_results,

@@ -104,6 +104,39 @@ def test_lc003_clean_on_compiled_inline_and_variables():
 
 
 # --------------------------------------------------------------------------
+# LC004 — side-channel telemetry (direct .stats[...] writes, bare print)
+# --------------------------------------------------------------------------
+
+def test_lc004_flags_stats_subscript_assign():
+    assert _rules("self.stats['issued'] = 1") == ["LC004"]
+
+
+def test_lc004_flags_stats_subscript_augassign():
+    assert _rules("eng.stats['gen_calls'] += 1") == ["LC004"]
+
+
+def test_lc004_flags_bare_print():
+    assert _rules("print('debug', x)") == ["LC004"]
+
+
+def test_lc004_clean_on_registry_and_reads():
+    assert _rules("self.metrics.inc('issued')") == []
+    assert _rules("n = self.stats['issued']") == []       # reads are fine
+    assert _rules("other['k'] = 1") == []                 # not a .stats view
+    assert _rules("log.print('x')") == []                 # method, not bare
+
+
+def test_lc004_exempt_paths():
+    snippet = "self.stats['x'] = 1\nprint('hi')\n"
+    assert [v.rule for v in lint.check_source(
+        snippet, "src/repro/core/telemetry.py")] == []
+    assert [v.rule for v in lint.check_source(
+        snippet, "src/repro/launch/serve.py")] == []
+    assert [v.rule for v in lint.check_source(
+        snippet, "src/repro/core/engine.py")] == ["LC004", "LC004"]
+
+
+# --------------------------------------------------------------------------
 # Harness behaviour
 # --------------------------------------------------------------------------
 
@@ -131,6 +164,6 @@ def test_src_tree_is_clean():
     assert violations == [], "\n".join(str(v) for v in violations)
 
 
-@pytest.mark.parametrize("rule", ["LC001", "LC002", "LC003"])
+@pytest.mark.parametrize("rule", ["LC001", "LC002", "LC003", "LC004"])
 def test_every_rule_documented(rule):
     assert rule in _SCRIPT.read_text()
